@@ -1,0 +1,24 @@
+"""Shared benchmark utilities: CSV emission + default simulator options."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import simulator
+
+FAST = simulator.SimOptions(job_frac=0.2, max_jobs=16, max_entries=192, seed=0)
+FULL = simulator.SimOptions(job_frac=0.25, max_jobs=48, max_entries=384, seed=0)
+
+
+def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

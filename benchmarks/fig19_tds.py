@@ -1,0 +1,39 @@
+"""Fig. 19 — TDS-IO vs TDS-OO: per-layer speedup at L_f=6 and the L_f sweep.
+
+Paper claims: at L_f=6 OO ≈ 4.8×, IO ≈ 4.5× over dense (VGG16 average);
+at L_f=18 OO ≈ 7.9×, IO ≈ 6.35× (OO/IO = 1.24×).
+"""
+from __future__ import annotations
+
+from repro.core import dataflow as df, simulator
+
+from .common import FAST, emit, timed
+
+
+def run(opts=FAST, lf_sweep=(6, 9, 12, 15, 18)):
+    rows = []
+    variants = {
+        "tds_io": df.Phantom2DConfig(lookahead=6, policy="inorder"),
+        "tds_oo": df.Phantom2DConfig(lookahead=6, policy="outoforder"),
+    }
+    res, us = timed(
+        simulator.vgg16_simulation, opts=opts, variants=variants, include_fc=True
+    )
+    for r in res:
+        rows.append((f"fig19a/{r.name}/io", f"{us:.0f}", f"{r.speedup('tds_io'):.3f}"))
+        rows.append((f"fig19a/{r.name}/oo", f"{us:.0f}", f"{r.speedup('tds_oo'):.3f}"))
+    for lf in lf_sweep:
+        v = {
+            "io": df.Phantom2DConfig(lookahead=lf, policy="inorder"),
+            "oo": df.Phantom2DConfig(lookahead=lf, policy="outoforder"),
+        }
+        res, us = timed(simulator.vgg16_simulation, opts=opts, variants=v)
+        io = simulator.network_summary(res, "io")
+        oo = simulator.network_summary(res, "oo")
+        rows.append((f"fig19b/Lf{lf}/io", f"{us:.0f}", f"{io:.3f}"))
+        rows.append((f"fig19b/Lf{lf}/oo", f"{us:.0f}", f"{oo:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

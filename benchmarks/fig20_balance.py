@@ -1,0 +1,38 @@
+"""Fig. 20 — two-level load balancing impact at L_f=6 (VGG16 & MobileNet).
+
+Paper claims: average balanced/unbalanced gain ≈ 1.1× (VGG16) / 1.08×
+(MobileNet); up to 1.5× / 1.3× in early layers.
+"""
+from __future__ import annotations
+
+from repro.core import dataflow as df, simulator
+
+from .common import FAST, emit, timed
+
+VARIANTS = {
+    "unbalanced": df.Phantom2DConfig(
+        lookahead=6, intra_balance=False, inter_balance=False
+    ),
+    "balanced": df.Phantom2DConfig(lookahead=6),
+}
+
+
+def run(opts=FAST):
+    rows = []
+    for net, fn in (
+        ("vgg16", simulator.vgg16_simulation),
+        ("mobilenet", simulator.mobilenet_simulation),
+    ):
+        res, us = timed(fn, opts=opts, variants=VARIANTS)
+        for r in res:
+            gain = r.cycles["unbalanced"] / r.cycles["balanced"]
+            rows.append((f"fig20/{net}/{r.name}", f"{us:.0f}", f"{gain:.3f}"))
+        net_gain = simulator.network_summary(res, "balanced") / simulator.network_summary(
+            res, "unbalanced"
+        )
+        rows.append((f"fig20/{net}/avg", f"{us:.0f}", f"{net_gain:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

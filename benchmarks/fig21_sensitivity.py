@@ -1,0 +1,50 @@
+"""Figs. 21–22 — sensitivity to sparsity and L_f: speedup and average
+multiplier-thread utilization for the CV (L_f=9), MD (L_f=18), HP (L_f=27)
+configurations of Phantom-2D, on VGG16 and MobileNet layer geometry.
+
+Paper claims: >90% thread utilization up to 60% two-sided sparsity (VGG16);
+at 80% sparsity MD ≈ 1.43× and HP ≈ 1.65× over CV; balanced/unbalanced at
+80% ≈ 1.4× (HP).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dataflow as df, netlib, simulator
+
+from .common import FAST, emit, timed
+
+POINTS = (0.2, 0.4, 0.6, 0.8, 0.9)
+CONFIGS = {
+    "cv": df.Phantom2DConfig(lookahead=9),
+    "md": df.Phantom2DConfig(lookahead=18),
+    "hp": df.Phantom2DConfig(lookahead=27),
+    "hp_unbal": df.Phantom2DConfig(
+        lookahead=27, intra_balance=False, inter_balance=False
+    ),
+}
+
+
+def run(opts=FAST):
+    rows = []
+    for net, layer_fn in (("vgg16", netlib.vgg16_layers), ("mobilenet", netlib.mobilenet_layers)):
+        layers = layer_fn(include_fc=False)[2:8]  # representative mid-net slab
+        for sp in POINTS:
+            dens = 1.0 - sp
+            wd = np.full(len(layers), dens)
+            ad = np.full(len(layers), dens)
+            res, us = timed(
+                simulator.simulate_network, layers, wd, ad, CONFIGS, opts
+            )
+            for name in CONFIGS:
+                sp_ = simulator.network_summary(res, name)
+                util = float(np.mean([r.utilization[name] for r in res]))
+                rows.append(
+                    (f"fig21/{net}/s{sp:.1f}/{name}", f"{us:.0f}",
+                     f"{sp_:.3f};util={util:.3f}")
+                )
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 23 — Phantom-2D (CV/MD/HP) vs dense, SCNN, SparTen on sparse VGG16.
+
+Per the paper, FC layers are omitted (SCNN/SparTen cannot run them) and the
+net has no non-unit-stride convs.  Paper claims (avg over layers):
+  CV: 1.05× SparTen, 2.56× SCNN,  6.4× dense
+  MD: 1.57×,         3.8×,        9.9×
+  HP: 1.98×,         4.1×,       11×
+"""
+from __future__ import annotations
+
+from repro.core import dataflow as df, simulator
+
+from .common import FAST, emit, timed
+
+CONFIGS = {
+    "cv": df.Phantom2DConfig(lookahead=9),
+    "md": df.Phantom2DConfig(lookahead=18),
+    "hp": df.Phantom2DConfig(lookahead=27),
+}
+
+
+def run(opts=FAST):
+    res, us = timed(
+        simulator.vgg16_simulation,
+        opts=opts,
+        variants=CONFIGS,
+        baselines=("scnn", "sparten"),
+        include_fc=False,
+    )
+    rows = []
+    for ver in CONFIGS:
+        for base in ("dense", "scnn", "sparten"):
+            s = simulator.network_summary(res, ver, base=base)
+            rows.append((f"fig23/{ver}_vs_{base}", f"{us:.0f}", f"{s:.3f}"))
+    # FC-inclusive Phantom numbers (§5.2.4 ¶2: 13×/11.4×/8.6× over dense).
+    res_fc, us2 = timed(
+        simulator.vgg16_simulation, opts=opts, variants=CONFIGS, include_fc=True
+    )
+    for ver in CONFIGS:
+        s = simulator.network_summary(res_fc, ver)
+        rows.append((f"fig23/withFC/{ver}_vs_dense", f"{us2:.0f}", f"{s:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

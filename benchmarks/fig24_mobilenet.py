@@ -1,0 +1,50 @@
+"""Fig. 24 — Phantom-2D vs Eyeriss v2 on sparse MobileNet.
+
+Paper claims: CV ≈ 1.04×, MD ≈ 1.71×, HP ≈ 2.86× over Eyeriss v2; pointwise
+layers ≈ 4.5× over Eyeriss v2 and ≈ 25× over dense for HP.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import dataflow as df, simulator
+
+from .common import FAST, emit, timed
+
+CONFIGS = {
+    "cv": df.Phantom2DConfig(lookahead=9),
+    "md": df.Phantom2DConfig(lookahead=18),
+    "hp": df.Phantom2DConfig(lookahead=27),
+}
+
+
+def run(opts=FAST):
+    res, us = timed(
+        simulator.mobilenet_simulation,
+        opts=opts,
+        variants=CONFIGS,
+        baselines=("eyeriss_v2",),
+        include_fc=False,
+    )
+    rows = []
+    for ver in CONFIGS:
+        rows.append(
+            (f"fig24/{ver}_vs_eyeriss2", f"{us:.0f}",
+             f"{simulator.network_summary(res, ver, base='eyeriss_v2'):.3f}")
+        )
+        rows.append(
+            (f"fig24/{ver}_vs_dense", f"{us:.0f}",
+             f"{simulator.network_summary(res, ver):.3f}")
+        )
+    # Pointwise-only slice (the dataflow the paper highlights).
+    pw = [r for r in res if r.kind == "pw"]
+    if pw:
+        hp_pw = sum(r.cycles["dense"] for r in pw) / sum(r.cycles["hp"] for r in pw)
+        ey_pw = sum(r.cycles["eyeriss_v2"] for r in pw) / sum(r.cycles["hp"] for r in pw)
+        rows.append((f"fig24/pw/hp_vs_dense", f"{us:.0f}", f"{hp_pw:.3f}"))
+        rows.append((f"fig24/pw/hp_vs_eyeriss2", f"{us:.0f}", f"{ey_pw:.3f}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

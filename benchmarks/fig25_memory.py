@@ -1,0 +1,44 @@
+"""Fig. 25 — sparse-mask vs CSC metadata DRAM traffic for intermediate
+activations (selected VGG16 / MobileNet layers).
+
+Paper claims: ≈ 4× (VGG16) / 3.7× (MobileNet) more CSC traffic at low
+activation sparsity, ≈ 1.7× at moderate-to-high sparsity.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import masks, netlib, sparsity
+from repro.core.dataflow import ConvSpec
+
+from .common import emit, timed
+
+
+def run(seed: int = 0):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for net, layers, adens in (
+        ("vgg16", netlib.vgg16_layers(include_fc=False), netlib.VGG16_ACT_DENSITY),
+        ("mobilenet", netlib.mobilenet_layers(include_fc=False), netlib.MOBILENET_ACT_DENSITY),
+    ):
+        for spec in layers[::3]:  # selected layers, as in the figure
+            d = adens.get(spec.name, 0.35)
+            shape = (spec.in_h, spec.in_w, spec.in_ch)
+            m = sparsity.bernoulli_mask(shape, d, rng)
+            # CSC layout (H, W·C): column per (W, C) stripe, H-row indices
+            # (paper footnote 2 counts the location vectors only).
+            (mb, cb), us = timed(
+                lambda: (
+                    masks.mask_traffic_bytes(shape),
+                    masks.csc_traffic_bytes(m.reshape(shape[0], -1)),
+                )
+            )
+            rows.append(
+                (f"fig25/{net}/{spec.name}", f"{us:.0f}",
+                 f"csc_over_mask={cb/mb:.2f};act_density={d:.2f}")
+            )
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""TPU-adaptation microbench: two-sided block-sparse kernel vs dense.
+
+On this CPU container the Pallas kernel runs in interpret mode, so wall
+times are NOT TPU-representative; the *derived* metrics that transfer are
+structural: grid-step compaction (queue steps vs dense tile count, = the
+MXU-issue reduction on hardware) and packed-weight bytes (HBM traffic for
+weights).  Dense-vs-masked jnp walltimes are included as the XLA:CPU proxy.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparsity
+from repro.kernels import ops
+
+from .common import emit
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    m = k = n = 1024
+    blk = (128, 128, 128)
+    for wd in (1.0, 0.5, 0.25, 0.125):
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        if wd < 1.0:
+            w *= sparsity.block_prune(w, wd, blk[1:])
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        pw = ops.prepare_weight(w, m=m, block=blk)
+        mt, kt, nt = pw.grid_tiles
+        dense_steps = mt * kt * nt
+        compaction = pw.steps / dense_steps
+        wbytes = pw.packed.size * pw.packed.dtype.itemsize
+        dbytes = k * n * 4
+
+        xj, wj = jnp.asarray(x), jnp.asarray(w)
+        f_dense = jax.jit(lambda a, b: a @ b)
+        f_dense(xj, wj).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            f_dense(xj, wj).block_until_ready()
+        t_dense = (time.perf_counter() - t0) / 5 * 1e6
+
+        mask = jnp.asarray((w != 0).astype(np.float32))
+        f_masked = jax.jit(lambda a, b, mm: a @ (b * mm))
+        f_masked(xj, wj, mask).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(5):
+            f_masked(xj, wj, mask).block_until_ready()
+        t_masked = (time.perf_counter() - t0) / 5 * 1e6
+
+        rows.append(
+            (f"kernel/wd{wd}", f"{t_dense:.0f}",
+             f"grid_compaction={compaction:.3f};weight_bytes_ratio={wbytes/dbytes:.3f};"
+             f"masked_us={t_masked:.0f}")
+        )
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""§Roofline report: render the dry-run JSONLs into the per-cell table.
+
+Prefers roofline_corrected.jsonl (scan-body cost correction, single-pod —
+see repro/launch/roofline_sweep.py) and falls back to the raw
+dryrun_results.jsonl terms for the multi-pod cells, tagging each row with
+its source.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+RAW = os.path.join(_ROOT, "dryrun_results.jsonl")
+CORRECTED = os.path.join(_ROOT, "roofline_corrected.jsonl")
+
+
+def _read(path):
+    recs = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                r = json.loads(line)
+                recs[(r["arch"], r["shape"], r.get("mesh", "16x16"))] = r
+    return recs
+
+
+def load() -> list[dict]:
+    raw = _read(RAW)
+    out = []
+    for key, r in raw.items():
+        if r.get("ok"):
+            r = dict(r["roofline"], ok=True, arch=key[0], shape=key[1], mesh=key[2],
+                     src="raw")
+        out.append(r)
+    for key, r in _read(CORRECTED).items():
+        if r.get("ok"):
+            out.append(dict(r, src="corrected"))
+    return out
+
+
+def run(path=None):
+    rows = []
+    for r in sorted(load(), key=lambda r: (r["arch"], r["shape"],
+                                           r.get("mesh", ""), r.get("src", ""))):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r.get('mesh','16x16')}/{r.get('src','raw')}"
+        if not r.get("ok"):
+            rows.append((name, "0", f"FAILED:{r.get('error','?')[:60]}"))
+            continue
+        rows.append(
+            (name, "0",
+             f"compute_ms={r['compute_s']*1e3:.3f};memory_ms={r['memory_s']*1e3:.3f};"
+             f"collective_ms={r['collective_s']*1e3:.3f};dominant={r['dominant']};"
+             f"useful={r['model_flops_ratio']:.3f}")
+        )
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig19,fig23]
+
+Prints ``name,us_per_call,derived`` CSV rows for every benchmark.  ``--full``
+uses higher-fidelity simulator sampling (slower).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None, help="comma list of benches")
+    args = ap.parse_args()
+
+    from . import (
+        common,
+        fig19_tds,
+        fig20_balance,
+        fig21_sensitivity,
+        fig23_vgg16,
+        fig24_mobilenet,
+        fig25_memory,
+        kernel_bench,
+        roofline_report,
+    )
+
+    opts = common.FULL if args.full else common.FAST
+    benches = {
+        "fig19": lambda: fig19_tds.run(opts),
+        "fig20": lambda: fig20_balance.run(opts),
+        "fig21": lambda: fig21_sensitivity.run(opts),
+        "fig23": lambda: fig23_vgg16.run(opts),
+        "fig24": lambda: fig24_mobilenet.run(opts),
+        "fig25": fig25_memory.run,
+        "kernel": kernel_bench.run,
+        "roofline": roofline_report.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn()
+    print(f"# total {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

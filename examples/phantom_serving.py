@@ -1,0 +1,50 @@
+"""Serving example: continuous-batching engine with the Phantom technique
+enabled — block-pruned FFN/o-proj weights, masked block-sparse execution —
+vs the dense baseline on the same requests.
+
+  PYTHONPATH=src python examples/phantom_serving.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core.phantom_linear import PhantomConfig
+from repro.launch.serve import phantomize
+from repro.models.registry import build
+from repro.serve import ServeEngine
+
+ARCH = "qwen2_0p5b"
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, 500, size=rng.integers(4, 10)).tolist() for _ in range(6)]
+
+
+def serve(phantom: bool):
+    cfg = configs.get_smoke(ARCH)
+    if phantom:
+        cfg = dataclasses.replace(
+            cfg, phantom=PhantomConfig(enabled=True, mode="masked",
+                                       weight_density=0.4, block=(8, 8, 8)),
+        )
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    if phantom:
+        params = phantomize(model, params, 0.4)
+    eng = ServeEngine(model, params, batch_size=3, max_len=64)
+    for pr in prompts:
+        eng.submit(pr, max_new_tokens=8)
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in done)
+    return done, toks / dt
+
+
+dense_out, dense_tps = serve(False)
+ph_out, ph_tps = serve(True)
+print(f"dense  : {dense_tps:6.1f} tok/s  first outputs {dense_out[0].output[:6]}")
+print(f"phantom: {ph_tps:6.1f} tok/s  first outputs {ph_out[0].output[:6]}")
+print("note: CPU walltime is illustrative; the TPU win comes from the")
+print("compacted kernel grid (see benchmarks/kernel_bench.py compaction ratios).")

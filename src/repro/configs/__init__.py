@@ -1,0 +1,62 @@
+"""Architecture registry: the 10 assigned archs + the paper's own CNNs.
+
+``get_config(name)`` returns the full published configuration;
+``get_smoke(name)`` a reduced same-family config for CPU smoke tests.
+``ARCHS`` lists every selectable ``--arch`` id.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+__all__ = ["ARCHS", "CNN_ARCHS", "get_config", "get_smoke", "shape_grid"]
+
+ARCHS = [
+    "qwen2_vl_7b",
+    "zamba2_2p7b",
+    "deepseek_coder_33b",
+    "qwen2_0p5b",
+    "smollm_360m",
+    "internlm2_20b",
+    "seamless_m4t_medium",
+    "moonshot_v1_16b_a3b",
+    "grok_1_314b",
+    "mamba2_2p7b",
+]
+CNN_ARCHS = ["vgg16", "mobilenet"]
+
+_ALIAS = {
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "qwen2-0.5b": "qwen2_0p5b",
+    "smollm-360m": "smollm_360m",
+    "internlm2-20b": "internlm2_20b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "grok-1-314b": "grok_1_314b",
+    "mamba2-2.7b": "mamba2_2p7b",
+}
+
+
+def _module(name: str):
+    name = _ALIAS.get(name, name).replace("-", "_").replace(".", "p")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get_config(name: str):
+    return _module(name).CONFIG
+
+
+def get_smoke(name: str):
+    return _module(name).SMOKE
+
+
+def shape_grid(name: str) -> list[str]:
+    """The shape set assigned to an arch (long_500k only for sub-quadratic
+    families; pure full-attention archs skip it — DESIGN.md §6)."""
+    cfg = get_config(name)
+    shapes = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        shapes.append("long_500k")
+    return shapes

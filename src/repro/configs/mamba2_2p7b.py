@@ -1,0 +1,31 @@
+"""mamba2-2.7b [ssm]: 64L d_model=2560 (attn-free) vocab=50280,
+ssm_state=128 — SSD (state-space duality) [arXiv:2405.21060; unverified].
+
+Attention-free and sub-quadratic → runs long_500k.  The Phantom technique
+applies only to the dense in/out projections (the SSD recurrence has no
+zero-skippable GEMM tiles — DESIGN.md §6).
+"""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    subquadratic=True,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, vocab=512, ssm_state=16, ssm_head_dim=16,
+)

@@ -1,0 +1,11 @@
+"""MobileNetV1 — the paper's second evaluation network (§5.1, Figs. 22, 24).
+
+Includes the non-unit-stride depthwise layers SCNN cannot run (G3).
+"""
+from repro.core import netlib
+
+LAYERS = netlib.mobilenet_layers
+WEIGHT_DENSITY = netlib.MOBILENET_WEIGHT_DENSITY
+ACT_DENSITY = netlib.MOBILENET_ACT_DENSITY
+CONFIG = {"name": "mobilenet", "kind": "cnn"}
+SMOKE = {"name": "mobilenet", "kind": "cnn", "input_hw": 32}

@@ -1,0 +1,29 @@
+"""moonshot-v1-16b-a3b [moe]: 48L d_model=2048 16H (kv=16) d_ff=1408
+vocab=163840, MoE 64e top-6 — kimi/moonlight
+[hf:moonshotai/Moonlight-16B-A3B; hf].  2 shared experts (moonlight)."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,
+    moe_d_ff=1408,
+    vocab=163840,
+    head_dim=128,
+    n_experts=64,
+    top_k=6,
+    n_shared_experts=2,
+    rope_theta=5e4,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=96,
+    moe_d_ff=96, vocab=512, head_dim=16, n_experts=4, top_k=2,
+    n_shared_experts=1,
+)

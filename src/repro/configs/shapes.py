@@ -1,0 +1,90 @@
+"""Assigned input shapes × per-shape input_specs (ShapeDtypeStruct, no
+allocation — the shannon/kernels dry-run pattern).
+
+  train_4k     seq 4,096  global_batch 256   → train_step
+  prefill_32k  seq 32,768 global_batch 32    → serve prefill (forward)
+  decode_32k   ctx 32,768 global_batch 128   → serve_step (1 token + cache)
+  long_500k    ctx 524,288 global_batch 1    → serve_step, sub-quadratic only
+
+``[audio]``/``[vlm]`` archs get stub frontend embeddings in their specs (the
+assignment: ``input_specs()`` provides precomputed frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.registry import Model, build
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "step_kind"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def step_kind(shape_name: str) -> str:
+    return SHAPES[shape_name].kind
+
+
+def _frontend_len(seq: int) -> int:
+    return max(min(1024, seq // 4), 1)
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, model: Model | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this shape cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    i32 = jnp.int32
+    tok = lambda *shape: jax.ShapeDtypeStruct(shape, i32)
+    model = model or build(cfg)
+
+    if sh.kind == "train":
+        specs = {"tokens": tok(b, s), "labels": tok(b, s)}
+        if cfg.family == "encdec":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), cfg.dtype()
+            )
+        elif cfg.frontend:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, _frontend_len(s), cfg.d_model), cfg.dtype()
+            )
+        return specs
+
+    if sh.kind == "prefill":
+        specs = {"tokens": tok(b, s)}
+        if cfg.family == "encdec":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), cfg.dtype()
+            )
+        elif cfg.frontend:
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+                (b, _frontend_len(s), cfg.d_model), cfg.dtype()
+            )
+        return specs
+
+    # decode: one new token against a seq_len-deep cache.
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(lambda: model.init_cache(b, s, s))
+    else:
+        cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return {
+        "tokens": tok(b, 1),
+        "cache": cache,
+        "index": jax.ShapeDtypeStruct((), i32),
+    }

@@ -1,0 +1,32 @@
+"""smollm-360m [dense]: 32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152
+— llama-arch small [hf:HuggingFaceTB/SmolLM-135M; hf].  Tied embeddings.
+
+Also the family used by the end-to-end ~100M training example."""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m",
+    family="dense",
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab=49152,
+    head_dim=64,
+    rope_theta=1e4,
+    tie_embeddings=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG, n_layers=2, d_model=64, n_heads=5, n_kv_heads=5, d_ff=128,
+    vocab=512, head_dim=16,
+)
+
+# ~100M-param config for the end-to-end training example (same family).
+TRAIN_100M = dataclasses.replace(
+    CONFIG, name="smollm-100m", n_layers=12, d_model=512, n_heads=8,
+    n_kv_heads=4, d_ff=1536, vocab=16384, head_dim=64,
+)

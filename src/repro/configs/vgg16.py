@@ -1,0 +1,12 @@
+"""VGG16 — the paper's own primary evaluation network (§5.1, Figs. 19-23).
+
+CNN archs use the netlib/cnn machinery rather than ModelConfig; the sparse
+densities are the Deep-Compression-pruned values the paper compares at.
+"""
+from repro.core import netlib
+
+LAYERS = netlib.vgg16_layers
+WEIGHT_DENSITY = netlib.VGG16_WEIGHT_DENSITY
+ACT_DENSITY = netlib.VGG16_ACT_DENSITY
+CONFIG = {"name": "vgg16", "kind": "cnn"}
+SMOKE = {"name": "vgg16", "kind": "cnn", "input_hw": 32}

@@ -1,0 +1,43 @@
+"""zamba2-2.7b [hybrid]: 54L d_model=2560 32H (GQA kv=32) d_ff=10240
+vocab=32000, ssm_state=64 — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242; hf].
+
+The shared attention+MLP block (single weight copy) is applied every 6
+Mamba2 layers, zamba2-style; each application keeps its own KV cache.
+Sub-quadratic backbone → runs long_500k.
+"""
+import dataclasses
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=10240,
+    vocab=32000,
+    head_dim=80,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_groups=1,
+    hybrid_attn_every=6,
+    subquadratic=True,
+)
+
+SMOKE = dataclasses.replace(
+    CONFIG,
+    n_layers=4,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=512,
+    head_dim=16,
+    ssm_state=16,
+    ssm_head_dim=16,
+    hybrid_attn_every=2,
+)

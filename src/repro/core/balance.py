@@ -1,0 +1,108 @@
+"""Two-level load balancing (paper §4.2, §4.3.1, §4.6).
+
+**Intra-core** (always on when enabled): a circular right-shift of each LAM
+output's columns — entry ``i`` is rotated by ``i mod pes`` — evens out the
+per-column density before the TDS, and the produced maps are rotated back so
+operand addressing stays valid (paper Fig. 18: 33% → 100% thread utilisation
+on the worked example, a 3× speedup).
+
+**Inter-core**: work units whose weights are reused (filters in regular /
+depthwise convolution) are dispatched **densest-first to the
+earliest-finishing worker** — the paper's "low latency, more dense / high
+latency, less dense" broadcast order, driven by mask popcounts only, with no
+offline pass (contra SparTen's greedy balancing).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "intra_core_shift",
+    "intra_core_unshift_maps",
+    "InterCoreSchedule",
+    "inter_core_schedule",
+]
+
+
+def intra_core_shift(entries: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Rotate entry ``i``'s PE-columns right by ``i mod pes`` (Fig. 18c).
+
+    Returns the shifted entries and the per-entry shift amounts needed to
+    rotate the generated maps back (:func:`intra_core_unshift_maps`).
+    """
+    entries = np.asarray(entries)
+    n, pes = entries.shape[0], entries.shape[1]
+    shifts = np.arange(n) % pes
+    cols = np.arange(pes)
+    # right circular shift by s: out[:, j] = in[:, (j - s) % pes]
+    src = (cols[None, :] - shifts[:, None]) % pes
+    shifted = np.take_along_axis(entries, src[..., None], axis=1)
+    return shifted, shifts
+
+
+def intra_core_unshift_maps(maps: np.ndarray, shifts: np.ndarray) -> np.ndarray:
+    """Circular *left* shift of per-entry maps, undoing :func:`intra_core_shift`."""
+    maps = np.asarray(maps)
+    pes = maps.shape[1]
+    cols = np.arange(pes)
+    src = (cols[None, :] + shifts[:, None]) % pes
+    return np.take_along_axis(maps, src[..., None], axis=1)
+
+
+@dataclasses.dataclass(frozen=True)
+class InterCoreSchedule:
+    """Assignment of jobs to workers plus the resulting makespan."""
+
+    assignment: list[list[int]]  # worker -> job ids, in dispatch order
+    finish_times: np.ndarray  # [workers]
+    makespan: float
+
+    @property
+    def imbalance(self) -> float:
+        f = self.finish_times
+        return float(f.max() / f.mean()) if f.size and f.mean() > 0 else 1.0
+
+
+def inter_core_schedule(
+    costs: np.ndarray,
+    n_workers: int,
+    *,
+    balanced: bool,
+    densities: np.ndarray | None = None,
+) -> InterCoreSchedule:
+    """Dispatch jobs (filter broadcasts) onto workers (core columns).
+
+    ``balanced=False`` reproduces the naive schedule: jobs in natural order,
+    round-robin across workers (all columns advance together, so a dense
+    filter stalls its round).  ``balanced=True`` reproduces the paper's
+    dynamic policy: order jobs densest-first (``densities`` defaults to the
+    true costs — popcount of the filter mask is the paper's proxy) and give
+    each to the worker that finishes earliest.
+    """
+    costs = np.asarray(costs, dtype=np.float64)
+    n = costs.shape[0]
+    workers: list[list[int]] = [[] for _ in range(n_workers)]
+    finish = np.zeros(n_workers, dtype=np.float64)
+    if not balanced:
+        # Lock-step rounds: each round dispatches one job per column and the
+        # round ends when the slowest column finishes (systematic imbalance).
+        t = 0.0
+        for start in range(0, n, n_workers):
+            round_jobs = list(range(start, min(start + n_workers, n)))
+            round_len = max(costs[j] for j in round_jobs)
+            for w, j in enumerate(round_jobs):
+                workers[w].append(j)
+            t += round_len
+            finish[: len(round_jobs)] = t
+        return InterCoreSchedule(workers, finish, float(t))
+    order = np.argsort(
+        -(np.asarray(densities, dtype=np.float64) if densities is not None else costs),
+        kind="stable",
+    )
+    for j in order:
+        w = int(np.argmin(finish))
+        workers[w].append(int(j))
+        finish[w] += costs[j]
+    return InterCoreSchedule(workers, finish, float(finish.max()))

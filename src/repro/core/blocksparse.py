@@ -1,0 +1,244 @@
+"""TPU adaptation of the Phantom scheduling algorithm (DESIGN.md §2).
+
+The paper's datapath (scalar multiplier threads fed by a selector) has no TPU
+analogue — the MXU wants dense 128-aligned tiles.  What transfers is the
+*scheduling*: keep sparsity metadata as cheap binary masks, AND the two
+sides' masks to enumerate effectual work, compact that work onto the compute
+resource, and balance it at two levels.  Here:
+
+* element sparse mask  → **block mask** over MXU-aligned (bm×bk)/(bk×bn)
+  tiles (``BlockMask``),
+* LAM (mask AND)       → ``effectual_tiles``: AND of the activation tile mask
+  with the weight tile mask per output tile,
+* TDS compaction       → ``WorkQueue``: a dense, k-major list of effectual
+  (mi, ki, ni) tile triples consumed by a ``pallas_call`` grid via scalar
+  prefetch — zero weight tiles never enter VMEM and never occupy a grid
+  step,
+* inter-core balancing → ``balance_columns``: density-sorted LPT assignment
+  of output tile-columns to parallel shards (TP) using weight-mask popcounts
+  only, exactly the paper's on-the-fly broadcast ordering (§4.3.1),
+* intra-core balancing → ``interleave_queue``: round-robin rotation of work
+  so consecutive grid steps draw from different tile-columns, evening the
+  per-step accumulation pressure (§4.6),
+* output encoding      → ``activation_block_mask`` threshold epilogue: the
+  producing layer emits the next layer's activation tile mask (§3.8).
+
+Static weight sparsity is compacted *exactly* (queue built at weight-load
+time, like the paper's offline-free balancing).  Dynamic activation sparsity
+is handled by in-kernel gating on the prefetched activation tile mask —
+TPU grids are static, so a zero activation tile still occupies a grid step
+but skips its MXU op (and, with an unchanged index map, its HBM→VMEM copy).
+This asymmetry vs. the paper (which skips both sides for free) is recorded
+in DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "BlockMask",
+    "WorkQueue",
+    "block_mask_from_dense",
+    "activation_block_mask_np",
+    "build_work_queue",
+    "balance_columns",
+    "pack_blocks",
+    "effectual_tiles",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockMask:
+    """Binary mask over (bm × bn) tiles of a 2-D operand (host-side)."""
+
+    mask: np.ndarray  # bool [Mt, Nt]
+    block: tuple[int, int]
+    shape: tuple[int, int]  # unpadded element shape
+
+    @property
+    def density(self) -> float:
+        return float(self.mask.mean()) if self.mask.size else 0.0
+
+    @property
+    def nnz_blocks(self) -> int:
+        return int(self.mask.sum())
+
+
+def _tiles(n: int, b: int) -> int:
+    return math.ceil(n / b)
+
+
+def block_mask_from_dense(w: np.ndarray, block: tuple[int, int]) -> BlockMask:
+    """Tile-level any-nonzero reduction of a dense (possibly pruned) matrix."""
+    w = np.asarray(w)
+    m, n = w.shape
+    bm, bn = block
+    mt, nt = _tiles(m, bm), _tiles(n, bn)
+    wp = np.zeros((mt * bm, nt * bn), dtype=bool)
+    wp[:m, :n] = w != 0
+    mask = wp.reshape(mt, bm, nt, bn).any(axis=(1, 3))
+    return BlockMask(mask=mask, block=block, shape=(m, n))
+
+
+def activation_block_mask_np(x: np.ndarray, block: tuple[int, int], threshold: float = 0.0) -> BlockMask:
+    """Dynamic activation tile mask: tile kept iff ``any(|x| > τ)`` (τ=0 keeps
+    exact-zero semantics — the ReLU case; τ>0 is the lossy serving knob)."""
+    x = np.asarray(x)
+    m, n = x.shape
+    bm, bn = block
+    mt, nt = _tiles(m, bm), _tiles(n, bn)
+    xp = np.zeros((mt * bm, nt * bn), dtype=x.dtype)
+    xp[:m, :n] = x
+    mask = (np.abs(xp) > threshold).reshape(mt, bm, nt, bn).any(axis=(1, 3))
+    return BlockMask(mask=mask, block=block, shape=(m, n))
+
+
+def effectual_tiles(act_mask: np.ndarray, w_mask: np.ndarray) -> np.ndarray:
+    """LAM analogue: effectual (mi, ki, ni) ⇔ act[mi,ki] ∧ w[ki,ni].
+
+    Returns a boolean [Mt, Kt, Nt] tensor — the paper's AND masks at tile
+    granularity.
+    """
+    a = np.asarray(act_mask, dtype=bool)
+    w = np.asarray(w_mask, dtype=bool)
+    return a[:, :, None] & w[None, :, :]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkQueue:
+    """Dense, k-major queue of effectual tiles for the Pallas grid.
+
+    ``mi/ni/ki``: int32 [Q] tile indices; ``start``: 1 where a (mi, ni)
+    accumulation chain begins (zero-init the accumulator), ``last``: 1 where
+    it ends (cast + write out).  ``wq``: packed-weight block id per step.
+    Output tiles with *no* effectual k-work are listed in ``empty_out``
+    (their result is exactly zero — the §3.8 output-encoding case).
+    """
+
+    mi: np.ndarray
+    ni: np.ndarray
+    ki: np.ndarray
+    wq: np.ndarray
+    start: np.ndarray
+    last: np.ndarray
+    empty_out: np.ndarray  # int32 [E, 2] (mi, ni)
+    grid_tiles: tuple[int, int, int]  # (Mt, Kt, Nt)
+
+    @property
+    def steps(self) -> int:
+        return int(self.mi.shape[0])
+
+    def compaction_ratio(self) -> float:
+        mt, kt, nt = self.grid_tiles
+        dense = mt * kt * nt
+        return self.steps / dense if dense else 1.0
+
+
+def build_work_queue(
+    w_bmask: np.ndarray,
+    m_tiles: int,
+    *,
+    interleave: bool = True,
+) -> WorkQueue:
+    """TDS analogue: compact the static weight-side work into a dense queue.
+
+    ``w_bmask``: bool [Kt, Nt].  Every output tile (mi, ni) gets a k-major
+    run over the ki with ``w_bmask[ki, ni]`` set.  ``interleave`` applies the
+    intra-core-style rotation: output tile-columns are visited round-robin
+    sorted by density so no long run of heavy columns monopolises the tail
+    (§4.6 analogue; order within a (mi, ni) run is preserved — accumulation
+    correctness does not depend on inter-run order).
+    """
+    w = np.asarray(w_bmask, dtype=bool)
+    kt, nt = w.shape
+    # Packed-weight block ids in (ni-major, ki) order — must match pack_blocks.
+    wq_id = np.full((kt, nt), -1, dtype=np.int32)
+    wq_id.T[w.T] = np.arange(int(w.sum()), dtype=np.int32)
+
+    col_k = [np.flatnonzero(w[:, ni]).astype(np.int32) for ni in range(nt)]
+    col_order = np.arange(nt)
+    if interleave:
+        # Heavy and light columns alternate (densest first, then lightest, …)
+        dens = np.array([len(c) for c in col_k])
+        srt = np.argsort(-dens, kind="stable")
+        half = (nt + 1) // 2
+        inter = np.empty(nt, dtype=int)
+        inter[0::2] = srt[:half]
+        inter[1::2] = srt[half:][::-1]
+        col_order = inter
+
+    mi_l, ni_l, ki_l, wq_l, st_l, la_l = [], [], [], [], [], []
+    empty = []
+    for mi in range(m_tiles):
+        for ni in col_order:
+            ks = col_k[ni]
+            if ks.size == 0:
+                empty.append((mi, ni))
+                continue
+            n_run = ks.size
+            mi_l.append(np.full(n_run, mi, dtype=np.int32))
+            ni_l.append(np.full(n_run, ni, dtype=np.int32))
+            ki_l.append(ks)
+            wq_l.append(wq_id[ks, ni])
+            s = np.zeros(n_run, dtype=np.int32)
+            s[0] = 1
+            e = np.zeros(n_run, dtype=np.int32)
+            e[-1] = 1
+            st_l.append(s)
+            la_l.append(e)
+    cat = lambda xs: (
+        np.concatenate(xs) if xs else np.zeros((0,), dtype=np.int32)
+    )
+    return WorkQueue(
+        mi=cat(mi_l),
+        ni=cat(ni_l),
+        ki=cat(ki_l),
+        wq=cat(wq_l),
+        start=cat(st_l),
+        last=cat(la_l),
+        empty_out=np.asarray(empty, dtype=np.int32).reshape(-1, 2),
+        grid_tiles=(m_tiles, kt, nt),
+    )
+
+
+def pack_blocks(w: np.ndarray, w_bmask: np.ndarray, block: tuple[int, int]) -> np.ndarray:
+    """Pack the kept (bk × bn) weight tiles into ``[nnzb, bk, bn]``, in
+    (ni-major, ki) order — the sparse-mask storage of §3.1 at tile
+    granularity (mask + packed payload, no pointer arrays)."""
+    bk, bn = block
+    kt, nt = np.asarray(w_bmask).shape
+    wp = np.zeros((kt * bk, nt * bn), dtype=w.dtype)
+    wp[: w.shape[0], : w.shape[1]] = w
+    out = []
+    for ni in range(nt):
+        for ki in range(kt):
+            if w_bmask[ki, ni]:
+                out.append(wp[ki * bk : (ki + 1) * bk, ni * bn : (ni + 1) * bn])
+    if not out:
+        return np.zeros((1, bk, bn), dtype=w.dtype)  # dummy block (never read)
+    return np.stack(out)
+
+
+def balance_columns(w_bmask: np.ndarray, n_shards: int) -> np.ndarray:
+    """Inter-core balancing analogue (§4.3.1): permute output tile-columns so
+    each of ``n_shards`` contiguous shards receives near-equal effectual
+    work, assigning densest-first to the least-loaded shard.  Returns the
+    column permutation (apply to N axis of the weight *before* sharding; the
+    inverse applies to the output)."""
+    w = np.asarray(w_bmask, dtype=bool)
+    nt = w.shape[1]
+    per_shard = math.ceil(nt / n_shards)
+    dens = w.sum(axis=0)
+    order = np.argsort(-dens, kind="stable")
+    load = np.zeros(n_shards)
+    buckets: list[list[int]] = [[] for _ in range(n_shards)]
+    for c in order:
+        elig = [s for s in range(n_shards) if len(buckets[s]) < per_shard]
+        s = min(elig, key=lambda s: load[s])
+        buckets[s].append(int(c))
+        load[s] += dens[c]
+    perm = [c for b in buckets for c in b]
+    return np.asarray(perm, dtype=np.int64)

@@ -1,0 +1,443 @@
+"""Phantom-2D dataflows (paper §4): mapping CNN layers onto the R×C matrix.
+
+The compute unit is an ``R × C`` matrix of Phantom cores plus ``R`` adders for
+channel accumulation (§4.1) and L3 adders for column accumulation (§4.4–4.5).
+Design choices follow the paper: ``C = 4`` (channel counts are multiples of
+4), ``R = 7`` (spatial sizes are multiples of 7).
+
+Per-layer dataflows (each returns the *work decomposition*: for every core, a
+stream of TDS entry popcounts, plus the broadcast/round structure that the
+inter-core balancer schedules):
+
+* **regular / depthwise convolution** (§4.3, Fig. 15): output rows are split
+  into ``R`` bands; filters (regular) or channels (depthwise) go along the
+  ``C`` columns; every column processes the same filter at a given time, so
+  filter broadcasts are the inter-core balancing unit.  Non-unit strides use
+  the same flow (goal G3 — SCNN cannot run these).
+* **pointwise convolution** (§4.4, Fig. 16): filters along the ``R`` rows,
+  input channels split into batches of ``pes × threads = 9`` along the
+  columns; L3 adders accumulate partials across columns.
+* **FC** (§4.5, Fig. 17): input vector stationary across rows, weight vectors
+  swept; channels again split into batches of 9 along columns.
+
+Everything here is mask-level only — values never enter the simulator; the
+functional engine (:mod:`repro.core.engine`) is what proves numerics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "Phantom2DConfig",
+    "ConvSpec",
+    "FCSpec",
+    "CoreWork",
+    "LayerWork",
+    "Sampling",
+    "conv_work",
+    "pointwise_work",
+    "fc_work",
+    "layer_work",
+    "im2col_mask",
+]
+
+
+@dataclasses.dataclass
+class Sampling:
+    """Work subsampling for full-network simulation (paper §5.2.2 subsamples
+    ~25% of channel filters the same way).  Cycle counts are scaled back by
+    the sampled fraction: jobs via ``LayerWork.job_scale``, queue entries via
+    ``CoreWork.scale``."""
+
+    job_frac: float = 1.0
+    max_jobs: int | None = None
+    max_entries: int | None = None
+    rng: object = None  # np.random.Generator
+
+    def pick_jobs(self, n: int) -> tuple[list[int], float]:
+        target = n
+        if self.job_frac < 1.0:
+            target = max(1, int(math.ceil(n * self.job_frac)))
+        if self.max_jobs is not None:
+            target = min(target, self.max_jobs)
+        if target >= n:
+            return list(range(n)), 1.0
+        rng = self.rng or np.random.default_rng(0)
+        idx = np.sort(rng.choice(n, size=target, replace=False))
+        return [int(i) for i in idx], n / target
+
+    def entry_slice(self, n_entries: int, granularity: int = 1) -> tuple[slice, float]:
+        """Contiguous sample of a queue, in units of ``granularity`` entries
+        (e.g. whole windows), preserving arrival-order locality."""
+        if self.max_entries is None or n_entries <= self.max_entries:
+            return slice(0, n_entries), 1.0
+        units = max(1, self.max_entries // granularity)
+        total_units = math.ceil(n_entries / granularity)
+        if units >= total_units:
+            return slice(0, n_entries), 1.0
+        rng = self.rng or np.random.default_rng(0)
+        start = int(rng.integers(0, total_units - units + 1)) * granularity
+        take = min(units * granularity, n_entries - start)
+        return slice(start, start + take), n_entries / take
+
+
+FULL = Sampling()
+
+
+@dataclasses.dataclass(frozen=True)
+class Phantom2DConfig:
+    """Table 1 / Table 2 operation & configuration parameters."""
+
+    rows: int = 7  # R
+    cols: int = 4  # C
+    pes: int = 3
+    threads: int = 3
+    lookahead: int = 6  # L_f  (paper sweeps 3..27)
+    policy: str = "outoforder"  # TDS_inOrder | TDS_outOrder
+    intra_balance: bool = True
+    inter_balance: bool = True
+
+    @property
+    def macs_per_core(self) -> int:
+        return self.pes * self.threads
+
+    @property
+    def total_macs(self) -> int:
+        return self.rows * self.cols * self.macs_per_core
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """A convolution layer (regular, depthwise, or pointwise when k=1)."""
+
+    name: str
+    in_ch: int
+    out_ch: int
+    in_h: int
+    in_w: int
+    kh: int = 3
+    kw: int = 3
+    stride: tuple[int, int] = (1, 1)
+    depthwise: bool = False
+    pad: str = "same"  # same | valid
+
+    @property
+    def pointwise(self) -> bool:
+        return self.kh == 1 and self.kw == 1 and not self.depthwise
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        sh, sw = self.stride
+        if self.pad == "same":
+            return math.ceil(self.in_h / sh), math.ceil(self.in_w / sw)
+        return (self.in_h - self.kh) // sh + 1, (self.in_w - self.kw) // sw + 1
+
+    @property
+    def macs(self) -> int:
+        oh, ow = self.out_hw
+        per_pos = self.kh * self.kw * (1 if self.depthwise else self.in_ch)
+        return oh * ow * self.out_ch * per_pos
+
+
+@dataclasses.dataclass(frozen=True)
+class FCSpec:
+    name: str
+    in_dim: int
+    out_dim: int
+
+    @property
+    def macs(self) -> int:
+        return self.in_dim * self.out_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class CoreWork:
+    """One core's queue for one broadcast job: TDS entry popcounts.
+
+    ``pops`` is ``[E, pes]`` — per-entry per-PE-column popcounts, already in
+    arrival order.  The simulator feeds each PE column to
+    :func:`repro.core.tds.batch_cycles` (columns run in lockstep, §4.6).
+    """
+
+    pops: np.ndarray  # [E, pes] int8/int32
+    valid_macs: int
+    total_slots: int  # dense MAC slots covered by the *sampled* entries
+    scale: float = 1.0  # full entries / sampled entries
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerWork:
+    """Full decomposition of a layer onto the R×C matrix.
+
+    ``jobs[j][r]`` is the :class:`CoreWork` of row ``r`` for broadcast job
+    ``j`` (a filter / filter-group / weight-vector batch).  All ``C`` columns
+    of the matrix execute jobs drawn from this pool; the inter-core balancer
+    decides the job → column assignment and order.
+    ``job_density[j]`` is the mask popcount the balancer sorts on (§4.3.1).
+    ``reuse`` marks whether weights are re-broadcast (only then does
+    inter-core balancing apply — §4.2).  ``job_scale`` is the sampling
+    correction applied to the scheduled makespan.
+    """
+
+    jobs: list  # list[list[CoreWork]]  (job → per-row work)
+    job_density: np.ndarray  # [jobs]
+    reuse: bool
+    spec: object
+    job_scale: float = 1.0
+
+
+def _pad_mask_same(a_mask: np.ndarray, kh: int, kw: int, sh: int, sw: int):
+    h, w = a_mask.shape[:2]
+    oh, ow = math.ceil(h / sh), math.ceil(w / sw)
+    ph = max((oh - 1) * sh + kh - h, 0)
+    pw = max((ow - 1) * sw + kw - w, 0)
+    return np.pad(
+        a_mask,
+        ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
+        + ((0, 0),) * (a_mask.ndim - 2),
+    )
+
+
+def im2col_mask(
+    a_mask: np.ndarray, kh: int, kw: int, stride=(1, 1), pad="same"
+) -> np.ndarray:
+    """``[H, W, C]`` bool → ``[oh*ow, kh*kw*C]`` window masks (row-major)."""
+    a_mask = np.asarray(a_mask, dtype=bool)
+    if a_mask.ndim == 2:
+        a_mask = a_mask[..., None]
+    sh, sw = stride
+    if pad == "same":
+        a_mask = _pad_mask_same(a_mask, kh, kw, sh, sw)
+    h, w, c = a_mask.shape
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sw + 1
+    s0, s1, s2 = a_mask.strides
+    win = np.lib.stride_tricks.as_strided(
+        a_mask,
+        shape=(oh, ow, kh, kw, c),
+        strides=(s0 * sh, s1 * sw, s0, s1, s2),
+    )
+    return win.reshape(oh * ow, kh * kw * c)
+
+
+def _group_pops(and_mask: np.ndarray, pes: int, threads: int) -> np.ndarray:
+    """``[n, K]`` AND masks → ``[n*G, pes]`` entry popcounts (batches of
+    ``pes × threads`` bits, the §4.4–4.5 'batches of 9')."""
+    n, k = and_mask.shape
+    unit = pes * threads
+    pad = (-k) % unit
+    if pad:
+        and_mask = np.pad(and_mask, ((0, 0), (0, pad)))
+    groups = and_mask.reshape(n, -1, pes, threads)
+    return groups.sum(axis=3, dtype=np.int32).reshape(-1, pes)
+
+
+def _window_column_pops(
+    and_mask: np.ndarray, kh: int, kw: int, pes: int, threads: int
+) -> np.ndarray:
+    """Small-kernel layout: filter window columns feed the PE columns
+    (Figs. 4–6).  ``[n, kh*kw]`` → ``[n, pes]`` popcounts."""
+    n = and_mask.shape[0]
+    cols = and_mask.reshape(n, kh, kw).sum(axis=1, dtype=np.int32)  # [n, kw]
+    out = np.zeros((n, pes), dtype=np.int32)
+    out[:, :kw] = cols
+    return out
+
+
+def _band_slices(n: int, bands: int) -> list[slice]:
+    """Split ``n`` output rows into ``bands`` contiguous bands (row dataflow)."""
+    base, rem = divmod(n, bands)
+    out, start = [], 0
+    for r in range(bands):
+        size = base + (1 if r < rem else 0)
+        out.append(slice(start, start + size))
+        start += size
+    return out
+
+
+def conv_work(
+    spec: ConvSpec,
+    w_mask: np.ndarray,  # [kh, kw, in_ch, out_ch] or [kh, kw, ch] depthwise
+    a_mask: np.ndarray,  # [H, W, in_ch]
+    cfg: Phantom2DConfig,
+    sampling: Sampling = FULL,
+) -> LayerWork:
+    """Regular / depthwise convolution dataflow (§4.3, Fig. 15).
+
+    Jobs are filters (regular) or channels (depthwise); per job, the R rows
+    each own a band of output rows.  Weights are reused across bands, so
+    inter-core balancing applies (``reuse=True``).
+    """
+    kh, kw = spec.kh, spec.kw
+    oh, ow = spec.out_hw
+    a_mask = np.asarray(a_mask, dtype=bool)
+    w_mask = np.asarray(w_mask, dtype=bool)
+    bands = _band_slices(oh, cfg.rows)
+    unit_k = kh * kw
+    small = kw <= cfg.pes and kh <= cfg.threads
+
+    jobs: list[list[CoreWork]] = []
+    dens: list[int] = []
+    if spec.depthwise:
+        sel_jobs, job_scale = sampling.pick_jobs(spec.in_ch)
+        for c in sel_jobs:
+            win = im2col_mask(a_mask[:, :, c], kh, kw, spec.stride, spec.pad)
+            wvec = w_mask[:, :, c].reshape(-1)
+            dens.append(int(wvec.sum()))
+            rows_work = []
+            for b in bands:
+                band = win.reshape(oh, ow, unit_k)[b].reshape(-1, unit_k)
+                g = 1 if small else math.ceil(unit_k / cfg.macs_per_core)
+                sl, e_scale = sampling.entry_slice(band.shape[0] * g, g)
+                band = band[sl.start // g : (sl.stop + g - 1) // g]
+                anded = band & wvec[None, :]
+                pops = (
+                    _window_column_pops(anded, kh, kw, cfg.pes, cfg.threads)
+                    if small
+                    else _group_pops(anded, cfg.pes, cfg.threads)
+                )
+                rows_work.append(
+                    CoreWork(pops, int(anded.sum()), band.shape[0] * unit_k, e_scale)
+                )
+            jobs.append(rows_work)
+    else:
+        windows = im2col_mask(a_mask, kh, kw, spec.stride, spec.pad)  # [ohw, K]
+        k_full = windows.shape[1]
+        g = math.ceil(k_full / cfg.macs_per_core)
+        sel_jobs, job_scale = sampling.pick_jobs(spec.out_ch)
+        band_views = []
+        for b in bands:
+            band = windows.reshape(oh, ow, k_full)[b].reshape(-1, k_full)
+            sl, e_scale = sampling.entry_slice(band.shape[0] * g, g)
+            band_views.append((band[sl.start // g : (sl.stop + g - 1) // g], e_scale))
+        for f in sel_jobs:
+            wvec = w_mask[:, :, :, f].reshape(-1)
+            dens.append(int(wvec.sum()))
+            rows_work = []
+            for band, e_scale in band_views:
+                anded = band & wvec[None, :]
+                pops = _group_pops(anded, cfg.pes, cfg.threads)
+                rows_work.append(
+                    CoreWork(pops, int(anded.sum()), band.shape[0] * k_full, e_scale)
+                )
+            jobs.append(rows_work)
+    return LayerWork(
+        jobs, np.asarray(dens, dtype=np.int64), reuse=True, spec=spec, job_scale=job_scale
+    )
+
+
+def pointwise_work(
+    spec: ConvSpec,
+    w_mask: np.ndarray,  # [in_ch, out_ch]
+    a_mask: np.ndarray,  # [H, W, in_ch]
+    cfg: Phantom2DConfig,
+    sampling: Sampling = FULL,
+) -> LayerWork:
+    """Pointwise (1×1) convolution dataflow (§4.4, Fig. 16).
+
+    Filters go along the R rows; channels are split into batches of
+    ``pes×threads`` along the C columns (L3 adders accumulate).  Weights stay
+    resident per core while the input sweeps, so a *job* here is a batch of
+    ``R`` filters × one channel batch; within a job every core sees the full
+    spatial stream.  Inter-core balancing does not re-order the spatial sweep
+    (no filter re-broadcast ⇒ ``reuse=False``).
+    """
+    a_mask = np.asarray(a_mask, dtype=bool)
+    w_mask = np.asarray(w_mask, dtype=bool)
+    h, w, cin = a_mask.shape
+    unit = cfg.pes * cfg.threads
+    n_batches = math.ceil(cin / unit)
+    pad = n_batches * unit - cin
+    if pad:
+        a_mask = np.pad(a_mask, ((0, 0), (0, 0), (0, pad)))
+        w_mask = np.pad(w_mask, ((0, pad), (0, 0)))
+    flat_a = a_mask.reshape(h * w, n_batches, unit)  # channel-first batches
+
+    n_fgrp = math.ceil(spec.out_ch / cfg.rows)
+    sel_jobs, job_scale = sampling.pick_jobs(n_fgrp * n_batches)
+    sl, e_scale = sampling.entry_slice(h * w)
+    flat_a = flat_a[sl]
+    jobs: list[list[CoreWork]] = []
+    dens: list[int] = []
+    for j in sel_jobs:
+        fg, cb = divmod(j, n_batches)
+        fgrp = range(fg * cfg.rows, min((fg + 1) * cfg.rows, spec.out_ch))
+        rows_work = []
+        d = 0
+        for f in fgrp:
+            wvec = w_mask[cb * unit : (cb + 1) * unit, f]
+            d += int(wvec.sum())
+            anded = flat_a[:, cb, :] & wvec[None, :]
+            pops = anded.reshape(-1, cfg.pes, cfg.threads).sum(axis=2, dtype=np.int32)
+            rows_work.append(CoreWork(pops, int(anded.sum()), anded.size, e_scale))
+        jobs.append(rows_work)
+        dens.append(d)
+    return LayerWork(
+        jobs, np.asarray(dens, dtype=np.int64), reuse=False, spec=spec, job_scale=job_scale
+    )
+
+
+def fc_work(
+    spec: FCSpec,
+    w_mask: np.ndarray,  # [in_dim, out_dim]
+    a_mask: np.ndarray,  # [in_dim]
+    cfg: Phantom2DConfig,
+    sampling: Sampling = FULL,
+) -> LayerWork:
+    """FC dataflow (§4.5, Fig. 17): input stationary across rows, weight
+    vectors swept; channel batches of ``pes×threads`` along columns."""
+    a_mask = np.asarray(a_mask, dtype=bool).reshape(-1)
+    w_mask = np.asarray(w_mask, dtype=bool)
+    unit = cfg.pes * cfg.threads
+    n_batches = math.ceil(spec.in_dim / unit)
+    pad = n_batches * unit - spec.in_dim
+    if pad:
+        a_mask = np.pad(a_mask, (0, pad))
+        w_mask = np.pad(w_mask, ((0, pad), (0, 0)))
+    a_b = a_mask.reshape(n_batches, unit)
+
+    # Row r sweeps weight vectors r, r+R, r+2R, ...; each (row, channel batch)
+    # core consumes one 9-bit entry per swept vector.
+    sel_jobs, job_scale = sampling.pick_jobs(n_batches)
+    jobs: list[list[CoreWork]] = []
+    dens: list[int] = []
+    for cb in sel_jobs:
+        rows_work = []
+        d = 0
+        for r in range(cfg.rows):
+            vecs = list(range(r, spec.out_dim, cfg.rows))
+            if vecs:
+                sl, e_scale = sampling.entry_slice(len(vecs))
+                vecs = vecs[sl]
+                wcols = w_mask[cb * unit : (cb + 1) * unit, vecs].T  # [V, unit]
+                anded = wcols & a_b[cb][None, :]
+                pops = anded.reshape(-1, cfg.pes, cfg.threads).sum(
+                    axis=2, dtype=np.int32
+                )
+                d += int(wcols.sum())
+                rows_work.append(CoreWork(pops, int(anded.sum()), anded.size, e_scale))
+            else:
+                rows_work.append(CoreWork(np.zeros((0, cfg.pes), np.int32), 0, 0))
+        jobs.append(rows_work)
+        dens.append(d)
+    return LayerWork(
+        jobs, np.asarray(dens, dtype=np.int64), reuse=False, spec=spec, job_scale=job_scale
+    )
+
+
+def layer_work(
+    spec, w_mask, a_mask, cfg: Phantom2DConfig, sampling: Sampling = FULL
+) -> LayerWork:
+    """Dispatch on layer kind (the scheduler entry point)."""
+    if isinstance(spec, FCSpec):
+        return fc_work(spec, w_mask, a_mask, cfg, sampling)
+    if isinstance(spec, ConvSpec) and spec.pointwise:
+        return pointwise_work(
+            spec, w_mask.reshape(spec.in_ch, spec.out_ch), a_mask, cfg, sampling
+        )
+    if isinstance(spec, ConvSpec):
+        return conv_work(spec, w_mask, a_mask, cfg, sampling)
+    raise TypeError(f"unknown layer spec {type(spec)!r}")

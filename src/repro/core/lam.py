@@ -1,0 +1,115 @@
+"""Lookahead masking (paper §3.3).
+
+The LAM block ANDs the weight sparse mask with the sparse masks of ``n = L_f``
+convolution chunks per cycle, yielding — for every chunk — the exact positions
+of *valid* multiplications (``nz_w × nz_a``).  Everything downstream (TDS,
+mapper, compute engine) operates on these AND masks only; zeros never reach a
+multiplier thread.
+
+A "chunk" is one dot-product worth of work: a sliding conv window, or one
+weight column of an FC/GEMM layer.  For TDS consumption each chunk's AND mask
+is laid out as ``pes`` columns of ``threads`` bits (paper Figs. 4–6: the 3×3
+filter's 3 window-columns feed the 3 per-PE selectors).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = [
+    "conv1d_windows",
+    "conv2d_windows",
+    "fc_chunks",
+    "lam_and",
+    "to_tds_columns",
+    "lam_cycles",
+    "output_mask",
+]
+
+
+def conv1d_windows(a_mask: np.ndarray, kernel: int, stride: int = 1) -> np.ndarray:
+    """Sliding-window view of a 1-D activation mask → ``[chunks, kernel]``."""
+    a_mask = np.asarray(a_mask, dtype=bool)
+    n_out = (a_mask.shape[-1] - kernel) // stride + 1
+    idx = stride * np.arange(n_out)[:, None] + np.arange(kernel)[None, :]
+    return a_mask[..., idx]
+
+
+def conv2d_windows(
+    a_mask: np.ndarray, kernel: tuple[int, int], stride: tuple[int, int] = (1, 1)
+) -> np.ndarray:
+    """``[H, W]`` activation mask → ``[chunks, kh, kw]`` window masks.
+
+    Chunks are emitted row-major over output positions; supports non-unit
+    stride (design goal G3 — SCNN cannot run these layers).
+    """
+    a_mask = np.asarray(a_mask, dtype=bool)
+    kh, kw = kernel
+    sh, sw = stride
+    oh = (a_mask.shape[0] - kh) // sh + 1
+    ow = (a_mask.shape[1] - kw) // sw + 1
+    out = np.empty((oh * ow, kh, kw), dtype=bool)
+    for i in range(oh):
+        for j in range(ow):
+            out[i * ow + j] = a_mask[i * sh : i * sh + kh, j * sw : j * sw + kw]
+    return out
+
+
+def fc_chunks(w_mask: np.ndarray) -> np.ndarray:
+    """FC layer: every weight column is one chunk → ``[cols, len]`` masks."""
+    return np.asarray(w_mask, dtype=bool).T
+
+
+def lam_and(w_mask: np.ndarray, chunk_masks: np.ndarray) -> np.ndarray:
+    """Bitwise AND of the weight mask with each chunk mask (Fig. 4)."""
+    w = np.asarray(w_mask, dtype=bool)
+    c = np.asarray(chunk_masks, dtype=bool)
+    return np.logical_and(c, w[None, ...])
+
+
+def lam_cycles(n_chunks: int, lookahead: int) -> int:
+    """LAM throughput: ``n = L_f`` AND gates emit L_f chunk masks per cycle."""
+    return math.ceil(n_chunks / max(1, lookahead))
+
+
+def to_tds_columns(
+    lam_out: np.ndarray, pes: int, threads: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Lay out chunk AND masks as TDS entries → ``([E, pes, threads], chunk_id[E])``.
+
+    2-D conv masks ``[chunks, kh, kw]`` use the window columns directly
+    (column ``j`` of the filter → selector ``j``), zero-padded to the selector
+    geometry.  Flat masks ``[chunks, k]`` are split into row-groups of
+    ``pes × threads`` bits (the Phantom-2D "batches of 9" for FC / pointwise
+    layers, §4.4–4.5); ``chunk_id`` records which original chunk each entry
+    row belongs to, for L2 accumulation in the output buffer.
+    """
+    lam_out = np.asarray(lam_out, dtype=bool)
+    n = lam_out.shape[0]
+    if lam_out.ndim == 3:  # [chunks, kh, kw] — window-column layout
+        kh, kw = lam_out.shape[1:]
+        if kw > pes or kh > threads:
+            # Wide/tall kernels fall back to the flat layout, exactly like
+            # FC / pointwise chunks.
+            return to_tds_columns(lam_out.reshape(n, kh * kw), pes, threads)
+        cols = np.moveaxis(lam_out, 2, 1)  # [chunks, kw, kh]
+        out = np.zeros((n, pes, threads), dtype=bool)
+        out[:, :kw, :kh] = cols
+        return out, np.arange(n)
+    k = lam_out.shape[1]
+    pad = (-k) % (pes * threads)
+    flat = np.pad(lam_out, ((0, 0), (0, pad)))
+    groups = flat.reshape(n, -1, pes, threads)  # chunk → row-groups
+    g = groups.shape[1]
+    return groups.reshape(n * g, pes, threads), np.repeat(np.arange(n), g)
+
+
+def output_mask(lam_out: np.ndarray) -> np.ndarray:
+    """Output sparse-mask generation, pre-ReLU (paper §3.8, Fig. 13a).
+
+    A chunk with *any* valid multiplication yields a (potentially) non-zero
+    output; the all-zero check OR-reduces each chunk's LAM bits.
+    """
+    lam_out = np.asarray(lam_out, dtype=bool)
+    return lam_out.reshape(lam_out.shape[0], -1).any(axis=1)

@@ -1,0 +1,111 @@
+"""Sparse binary mask representation (paper §3.1).
+
+A matrix is stored as two arrays, both column-major:
+  * ``data``: the packed non-zero values,
+  * ``mask``: a binary array; 1 marks a *stored* non-zero, 0 an *unstored* zero.
+
+Unlike CSC/CSR there are no ``count``/``pointer`` side arrays, which makes
+"looking ahead" (paper §3.3) a pure bitwise-AND and keeps the metadata cost a
+single bit per element.  This module also carries the byte-cost models used to
+reproduce Fig. 25 (sparse-mask vs. CSC DRAM traffic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "SparseMask",
+    "to_sparse_mask",
+    "from_sparse_mask",
+    "mask_traffic_bytes",
+    "csc_traffic_bytes",
+    "csr_traffic_bytes",
+    "density",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseMask:
+    """Column-major sparse-mask storage of a 2-D matrix (paper Fig. 2)."""
+
+    shape: tuple[int, ...]
+    mask: np.ndarray  # bool, ``shape``
+    data: np.ndarray  # 1-D packed non-zeros, column-major order
+
+    @property
+    def nnz(self) -> int:
+        return int(self.data.size)
+
+    @property
+    def density(self) -> float:
+        size = int(np.prod(self.shape))
+        return self.nnz / size if size else 0.0
+
+
+def to_sparse_mask(x: np.ndarray) -> SparseMask:
+    """Pack ``x`` into sparse-mask form (column-major, per paper Fig. 2)."""
+    x = np.asarray(x)
+    mask = x != 0
+    # Column-major ("F") traversal matches the paper's storage order.
+    flat = np.asarray(x).flatten(order="F")
+    data = flat[np.asarray(mask).flatten(order="F")]
+    return SparseMask(shape=tuple(x.shape), mask=mask, data=data)
+
+
+def from_sparse_mask(sm: SparseMask, dtype=None) -> np.ndarray:
+    """Inverse of :func:`to_sparse_mask` (exact round-trip)."""
+    dtype = dtype or sm.data.dtype
+    flat = np.zeros(int(np.prod(sm.shape)), dtype=dtype)
+    flat[np.asarray(sm.mask).flatten(order="F")] = sm.data
+    return flat.reshape(sm.shape, order="F")
+
+
+def density(mask: np.ndarray) -> float:
+    mask = np.asarray(mask)
+    return float(mask.sum()) / mask.size if mask.size else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Metadata-traffic cost models (paper Fig. 25).
+#
+# Per the paper's footnote, the comparison covers *metadata only*: the binary
+# sparse mask on one side, and the CSC location vectors (column pointers +
+# row indices) on the other — the packed non-zero payload is identical for
+# both formats and is therefore excluded.
+# ---------------------------------------------------------------------------
+
+
+def mask_traffic_bytes(shape: tuple[int, ...]) -> int:
+    """Bytes moved for the binary sparse mask: one bit per element."""
+    return math.ceil(int(np.prod(shape)) / 8)
+
+
+def csc_traffic_bytes(
+    mask: np.ndarray, *, index_bits: int | None = None, pointer_bits: int | None = None
+) -> int:
+    """Bytes moved for CSC metadata: row index per nnz + per-column pointer.
+
+    ``index_bits`` defaults to the bits needed to address a row;
+    ``pointer_bits`` to the bits needed to count all nnz.  Both are rounded up
+    to whole bytes per entry, matching byte-addressable DRAM bursts.
+    """
+    mask = np.asarray(mask)
+    if mask.ndim == 1:
+        mask = mask[:, None]
+    rows, cols = mask.shape[0], int(np.prod(mask.shape[1:]))
+    nnz = int(mask.sum())
+    if index_bits is None:
+        index_bits = max(1, math.ceil(math.log2(max(rows, 2))))
+    if pointer_bits is None:
+        pointer_bits = max(1, math.ceil(math.log2(max(nnz + 1, 2))))
+    index_bytes = math.ceil(index_bits / 8)
+    pointer_bytes = math.ceil(pointer_bits / 8)
+    return nnz * index_bytes + (cols + 1) * pointer_bytes
+
+
+def csr_traffic_bytes(mask: np.ndarray, **kw) -> int:
+    """CSR metadata traffic — CSC of the transpose."""
+    return csc_traffic_bytes(np.asarray(mask).T, **kw)

@@ -1,0 +1,129 @@
+"""CNN layer tables used by the paper's evaluation (§5.1).
+
+Shapes follow the standard VGG16 [51] and MobileNetV1 [24] ImageNet
+configurations.  The simulator consumes these specs plus per-layer weight /
+activation densities; :mod:`repro.models.cnn` builds the matching JAX
+networks for the functional path.
+
+Published per-layer densities for Han-style pruned VGG16 (Deep Compression
+[19], Table 4) are included so the "sparse VGG16" runs use the same weight
+sparsity as SCNN / SparTen / Eyeriss-v2 comparisons (paper: average weight /
+activation sparsity 77% / 68% ⇒ densities .23 / .32).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .dataflow import ConvSpec, FCSpec
+
+__all__ = [
+    "vgg16_layers",
+    "mobilenet_layers",
+    "VGG16_WEIGHT_DENSITY",
+    "VGG16_ACT_DENSITY",
+    "MOBILENET_WEIGHT_DENSITY",
+    "MOBILENET_ACT_DENSITY",
+]
+
+
+def vgg16_layers(include_fc: bool = True, input_hw: int = 224):
+    """The 13 conv + 3 FC layers of VGG16."""
+    cfg = [
+        (64, 1), (64, 1),
+        ("pool", 2),
+        (128, 2), (128, 2),
+        ("pool", 4),
+        (256, 4), (256, 4), (256, 4),
+        ("pool", 8),
+        (512, 8), (512, 8), (512, 8),
+        ("pool", 16),
+        (512, 16), (512, 16), (512, 16),
+    ]
+    layers = []
+    in_ch, hw, idx = 3, input_hw, 1
+    for entry in cfg:
+        if entry[0] == "pool":
+            hw = input_hw // entry[1]
+            continue
+        out_ch, div = entry
+        hw = input_hw // div
+        layers.append(
+            ConvSpec(f"conv{idx}", in_ch, out_ch, hw, hw, 3, 3, (1, 1))
+        )
+        in_ch = out_ch
+        idx += 1
+    if include_fc:
+        layers += [
+            FCSpec("fc14", 512 * 7 * 7, 4096),
+            FCSpec("fc15", 4096, 4096),
+            FCSpec("fc16", 4096, 1000),
+        ]
+    return layers
+
+
+def mobilenet_layers(include_fc: bool = True, input_hw: int = 224):
+    """MobileNetV1: conv s2 + 13 (depthwise + pointwise) pairs + FC.
+
+    Includes the non-unit-stride depthwise layers SCNN cannot run.
+    """
+    layers = [ConvSpec("conv1", 3, 32, input_hw, input_hw, 3, 3, (2, 2))]
+    # (in_ch, out_ch, input_hw_div, dw_stride)
+    blocks = [
+        (32, 64, 2, 1),
+        (64, 128, 2, 2),
+        (128, 128, 4, 1),
+        (128, 256, 4, 2),
+        (256, 256, 8, 1),
+        (256, 512, 8, 2),
+        (512, 512, 16, 1), (512, 512, 16, 1), (512, 512, 16, 1),
+        (512, 512, 16, 1), (512, 512, 16, 1),
+        (512, 1024, 16, 2),
+        (1024, 1024, 32, 1),
+    ]
+    for i, (cin, cout, div, s) in enumerate(blocks, start=2):
+        hw = input_hw // div
+        layers.append(
+            ConvSpec(f"conv{i}-dw", cin, cin, hw, hw, 3, 3, (s, s), depthwise=True)
+        )
+        ohw = hw // s
+        layers.append(ConvSpec(f"conv{i}-pw", cin, cout, ohw, ohw, 1, 1, (1, 1)))
+    if include_fc:
+        layers.append(FCSpec("fc", 1024, 1000))
+    return layers
+
+
+# --- Han-style pruned densities (Deep Compression Table 4, VGG16) -----------
+VGG16_WEIGHT_DENSITY = {
+    "conv1": 0.58, "conv2": 0.22, "conv3": 0.34, "conv4": 0.36,
+    "conv5": 0.53, "conv6": 0.24, "conv7": 0.42, "conv8": 0.32,
+    "conv9": 0.27, "conv10": 0.34, "conv11": 0.35, "conv12": 0.29,
+    "conv13": 0.36, "fc14": 0.04, "fc15": 0.04, "fc16": 0.23,
+}
+# Average activation density per layer input (ReLU sparsity grows with depth;
+# first layer is raw image — effectively dense).  Matches the paper's
+# 68% average activation sparsity.
+VGG16_ACT_DENSITY = {
+    "conv1": 0.99, "conv2": 0.52, "conv3": 0.45, "conv4": 0.39,
+    "conv5": 0.35, "conv6": 0.32, "conv7": 0.30, "conv8": 0.28,
+    "conv9": 0.26, "conv10": 0.24, "conv11": 0.22, "conv12": 0.20,
+    "conv13": 0.19, "fc14": 0.22, "fc15": 0.26, "fc16": 0.30,
+}
+
+MOBILENET_WEIGHT_DENSITY = {"conv1": 0.60, "fc": 0.12}
+for _i in range(2, 15):
+    # Depthwise filters prune poorly (few, critical weights); pointwise prune
+    # well.  Average weight density 27% (paper: 73% sparsity).
+    MOBILENET_WEIGHT_DENSITY[f"conv{_i}-dw"] = 0.55
+    MOBILENET_WEIGHT_DENSITY[f"conv{_i}-pw"] = 0.24
+
+MOBILENET_ACT_DENSITY = {"conv1": 0.99, "fc": 0.35}
+for _i in range(2, 15):
+    MOBILENET_ACT_DENSITY[f"conv{_i}-dw"] = max(0.30, 0.62 - 0.02 * _i)
+    MOBILENET_ACT_DENSITY[f"conv{_i}-pw"] = max(0.28, 0.58 - 0.02 * _i)
+
+
+def densities_for(layers, table_w, table_a, default_w=0.25, default_a=0.35):
+    """Align density tables with a layer list → (w_density[], a_density[])."""
+    wd = np.array([table_w.get(l.name, default_w) for l in layers])
+    ad = np.array([table_a.get(l.name, default_a) for l in layers])
+    return wd, ad

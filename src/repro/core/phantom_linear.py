@@ -1,0 +1,92 @@
+"""PhantomLinear: the paper's technique as a first-class framework feature.
+
+A linear layer whose weight carries a static block-sparsity mask (Han-style
+pruning at TPU tile granularity) and whose input may carry a dynamic
+activation tile mask.  Three execution modes:
+
+* ``dense``  — plain ``x @ w`` (training default; Phantom is an inference
+  architecture, matching the paper's use of offline-pruned nets),
+* ``masked`` — ``x @ (w ⊙ mask)`` with the mask stored alongside the weight
+  (straight-through: gradients flow to the surviving blocks only).  This is
+  the mode the distributed dry-run lowers — it is pure traced JAX, and XLA
+  sees the exact FLOPs the masked model performs.
+* ``kernel`` — the Pallas two-sided block-sparse kernel
+  (:mod:`repro.kernels.ops`): weight-side work compacted away, activation
+  tiles gated.  Host-prepared (`prepare_weight`) — used at serving time on
+  concrete weights.
+
+``auto`` picks ``kernel`` when a prepared weight is supplied, else ``masked``
+when a mask exists, else ``dense``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PhantomConfig", "phantom_linear", "prune_params", "PHANTOM_DISABLED"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PhantomConfig:
+    """Serving/training knobs for the Phantom technique (DESIGN.md §4)."""
+
+    enabled: bool = False
+    block: tuple[int, int, int] = (256, 256, 256)  # (bm, bk, bn)
+    weight_density: float = 0.25
+    act_threshold: float = 0.0  # τ=0 ⇔ exact-zero skipping (ReLU semantics)
+    interleave: bool = True  # intra-core-style queue rotation
+    balance: str = "full"  # none | intra | inter | full
+    mode: str = "auto"  # dense | masked | kernel | auto
+
+
+PHANTOM_DISABLED = PhantomConfig(enabled=False)
+
+
+def phantom_linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    wmask: Optional[jnp.ndarray],
+    cfg: PhantomConfig,
+    *,
+    prepared=None,
+    bias: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Apply a (possibly Phantom-sparse) linear layer.
+
+    ``wmask`` is the element-expanded block mask stored with the weight (same
+    dtype as ``w``; 0/1).  ``prepared`` is a
+    :class:`repro.kernels.ops.PhantomWeight` for the kernel path.
+    """
+    mode = cfg.mode
+    if mode == "auto":
+        if prepared is not None and cfg.enabled:
+            mode = "kernel"
+        elif wmask is not None and cfg.enabled:
+            mode = "masked"
+        else:
+            mode = "dense"
+    if mode == "kernel":
+        from repro.kernels import ops  # local: kernels are optional at import
+
+        y = ops.phantom_matmul(x, prepared, act_threshold=cfg.act_threshold)
+    else:
+        weff = w if (mode == "dense" or wmask is None) else w * wmask
+        y = jnp.einsum(
+            "...k,kn->...n", x, weff,
+        )
+    if bias is not None:
+        y = y + bias
+    return y
+
+
+def prune_params(w: np.ndarray, cfg: PhantomConfig, rng=None) -> np.ndarray:
+    """Block-prune a weight to ``cfg.weight_density`` → element mask (0/1,
+    ``w.dtype``), TPU-tile aligned (DESIGN.md §2 granularity change)."""
+    from repro.core.sparsity import block_prune
+
+    mask = block_prune(np.asarray(w), cfg.weight_density, cfg.block[1:])
+    return mask.astype(np.asarray(w).dtype)

@@ -1,0 +1,323 @@
+"""Cycle-level Phantom / Phantom-2D performance simulator (paper §5.1).
+
+Drives the mask-level dataflow decomposition (:mod:`repro.core.dataflow`)
+through the exact vectorised TDS timing (:func:`repro.core.tds.batch_cycles`)
+and the two-level balancers, for whole networks.  Matches the paper's
+methodology:
+
+* only sparse masks are simulated — "only this information is needed to
+  efficiently represent the MAC operations needed per layer" (§5.1);
+* per-layer activation masks are synthesised at the measured average density
+  (the paper averages over a batch of 100 inputs);
+* the dense architecture is the same datapath with ``L_f = 1`` — every entry
+  costs one cycle, no lookahead (§5.2.1) — which reduces to one cycle per
+  ``pes×threads`` MAC-slot group;
+* like the paper ("we only use approximately 25% of the channel filters"),
+  work is subsampled for tractability: ``job_frac``/``max_jobs`` subsample
+  broadcast jobs and ``max_entries`` subsamples each core queue, with cycle
+  counts scaled back by the sampled fraction.  Sampling is seeded and
+  recorded in the result.
+
+The same synthesized masks feed the competitor cycle models
+(:mod:`repro.core.baselines`), so every architecture sees identical work.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from . import balance as balance_mod
+from . import baselines as baselines_mod
+from . import dataflow as df
+from . import mapper as mapper_mod
+from . import netlib
+from . import sparsity
+from . import tds as tds_mod
+
+__all__ = [
+    "SimOptions",
+    "LayerResult",
+    "VARIANTS",
+    "time_work",
+    "evaluate_layer",
+    "simulate_network",
+    "network_summary",
+    "default_variants",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimOptions:
+    job_frac: float = 0.25  # fraction of broadcast jobs simulated (paper: ~25%)
+    max_jobs: int = 48  # hard cap on sampled jobs per layer
+    max_entries: int = 384  # per-queue entry cap (contiguous sample)
+    seed: int = 0
+    # Structured-mask synthesis: real pruned filters are not iid Bernoulli —
+    # per-filter density varies (what inter-core balancing exploits, §4.3.1)
+    # and surviving weights cluster around the filter centre (what intra-core
+    # balancing exploits, §4.6).  ``filter_jitter`` is the lognormal sigma on
+    # per-filter density; ``spatial_bias`` the centre-bias strength.
+    filter_jitter: float = 0.6
+    spatial_bias: float = 0.8
+
+
+@dataclasses.dataclass
+class LayerResult:
+    name: str
+    kind: str
+    macs: int  # dense MACs of the full layer
+    valid_frac: float  # effectual / total MAC slots (sampled estimate)
+    cycles: dict  # variant/baseline -> cycles (scaled to full layer)
+    utilization: dict  # variant -> multiplier-thread utilization
+
+    def speedup(self, variant: str, base: str = "dense") -> float:
+        return self.cycles[base] / self.cycles[variant]
+
+
+def default_variants(lookahead: int = 6) -> dict:
+    """The Table 1 operating points used throughout §5."""
+    mk = lambda **kw: df.Phantom2DConfig(lookahead=lookahead, **kw)
+    return {
+        "tds_io": mk(policy="inorder"),
+        "tds_oo": mk(policy="outoforder"),
+        "unbalanced": mk(intra_balance=False, inter_balance=False),
+        "balanced": mk(intra_balance=True, inter_balance=True),
+    }
+
+
+VARIANTS = default_variants()
+
+
+def time_work(
+    work: df.LayerWork, cfg: df.Phantom2DConfig
+) -> tuple[float, float]:
+    """Cycle count + thread utilization of one layer under one configuration.
+
+    Columns of the R×C matrix are the schedulable workers; each job occupies
+    the R rows in parallel, so a job's cost is the slowest row (§4.6 lockstep
+    applies *within* a core's PE columns, and rows sync per broadcast).
+    """
+    queues, qscale, meta = [], [], []  # meta: (job_idx, row)
+    for jl, rows in enumerate(work.jobs):
+        for r, cw in enumerate(rows):
+            pops = cw.pops
+            if cfg.intra_balance and pops.shape[0]:
+                shifts = (np.arange(pops.shape[0]) % cfg.pes)[:, None]
+                cols = np.arange(cfg.pes)[None, :]
+                pops = np.take_along_axis(pops, (cols - shifts) % cfg.pes, axis=1)
+            queues.append(pops)
+            qscale.append(cw.scale)
+            meta.append((jl, r))
+    n_jobs = len(work.jobs)
+    lengths = np.array([q.shape[0] for q in queues], dtype=np.int64)
+    lmax = max(1, int(lengths.max(initial=0)))
+    q_arr = np.zeros((len(queues) * cfg.pes, lmax), dtype=np.int32)
+    for qi, q in enumerate(queues):
+        if q.shape[0]:
+            q_arr[qi * cfg.pes : (qi + 1) * cfg.pes, : q.shape[0]] = q.T
+    col_lengths = np.repeat(lengths, cfg.pes)
+    cyc = tds_mod.batch_cycles(
+        q_arr,
+        col_lengths,
+        lookahead=cfg.lookahead,
+        threads=cfg.threads,
+        policy=cfg.policy,
+    ).reshape(len(queues), cfg.pes)
+    core_cycles = cyc.max(axis=1) * np.asarray(qscale) + mapper_mod.MAPPER_REUSE_LATENCY(
+        cfg.pes
+    )
+
+    job_cost = np.zeros(n_jobs)
+    for (jl, _r), c in zip(meta, core_cycles):
+        job_cost[jl] = max(job_cost[jl], c)
+    balanced = cfg.inter_balance and work.reuse
+    sched = balance_mod.inter_core_schedule(
+        job_cost,
+        cfg.cols,
+        balanced=balanced,
+        densities=work.job_density if balanced else None,
+    )
+    cycles = sched.makespan * work.job_scale
+    # Thread utilization: effectual MACs over provisioned MAC-cycles.  Each
+    # job engages one column (R rows × pes × threads threads).
+    valid = sum(cw.valid_macs * cw.scale for rows in work.jobs for cw in rows)
+    engaged = sched.makespan * cfg.cols * cfg.rows * cfg.macs_per_core
+    util = float(valid / max(engaged, 1e-12))
+    return float(cycles), min(util, 1.0)
+
+
+def dense_cycles_from_work(work: df.LayerWork, cfg: df.Phantom2DConfig) -> float:
+    """Equally-provisioned dense datapath: one cycle per entry (``L_f = 1``),
+    identical dataflow, scheduling structure and mapper fill latency, no
+    zero skipping."""
+    fill = mapper_mod.MAPPER_REUSE_LATENCY(cfg.pes)
+    job_cost = np.array(
+        [
+            max(
+                math.ceil(cw.total_slots / cfg.macs_per_core) * cw.scale + fill
+                for cw in rows
+            )
+            for rows in work.jobs
+        ],
+        dtype=np.float64,
+    )
+    sched = balance_mod.inter_core_schedule(job_cost, cfg.cols, balanced=False)
+    return float(sched.makespan) * work.job_scale
+
+
+def evaluate_layer(
+    spec,
+    w_mask: np.ndarray,
+    a_mask: np.ndarray,
+    variants: dict,
+    opts: SimOptions,
+    rng,
+    baselines: tuple = (),
+) -> LayerResult:
+    geometry = next(iter(variants.values())) if variants else df.Phantom2DConfig()
+    sampling = df.Sampling(
+        job_frac=opts.job_frac,
+        max_jobs=opts.max_jobs,
+        max_entries=opts.max_entries,
+        rng=rng,
+    )
+    work = df.layer_work(spec, w_mask, a_mask, geometry, sampling)
+    cycles: dict = {}
+    util: dict = {}
+    cycles["dense"] = dense_cycles_from_work(work, geometry)
+    slots = sum(cw.total_slots for rows in work.jobs for cw in rows)
+    valid = sum(cw.valid_macs for rows in work.jobs for cw in rows)
+    for name, cfg in variants.items():
+        c, u = time_work(work, cfg)
+        cycles[name] = c
+        util[name] = u
+    util["dense"] = valid / max(slots, 1)
+    for b in baselines:
+        fn = getattr(baselines_mod, f"{b}_cycles")
+        cycles[b] = fn(spec, w_mask, a_mask, total_macs=geometry.total_macs)
+    kind = (
+        "fc"
+        if isinstance(spec, df.FCSpec)
+        else ("pw" if spec.pointwise else ("dw" if spec.depthwise else "conv"))
+    )
+    return LayerResult(
+        name=spec.name,
+        kind=kind,
+        macs=spec.macs,
+        valid_frac=valid / max(slots, 1),
+        cycles=cycles,
+        utilization=util,
+    )
+
+
+def simulate_network(
+    layers,
+    w_density,
+    a_density,
+    variants: dict | None = None,
+    opts: SimOptions = SimOptions(),
+    baselines: tuple = (),
+    skip_fc_for=(),
+) -> list[LayerResult]:
+    """Simulate a whole network from per-layer densities (Bernoulli masks,
+    seeded).  ``skip_fc_for`` lists baselines that cannot run FC layers
+    (SCNN, SparTen — their cycles are reported as ``nan`` there)."""
+    variants = variants or default_variants()
+    rng = np.random.default_rng(opts.seed)
+    results = []
+    for li, spec in enumerate(layers):
+        wd, ad = float(w_density[li]), float(a_density[li])
+        w_mask, a_mask, spec_eff, pre_scale = _make_masks(spec, wd, ad, rng, opts)
+        res = evaluate_layer(
+            spec_eff, w_mask, a_mask, variants, opts, rng, baselines=baselines
+        )
+        if pre_scale != 1.0:
+            res.cycles = {k: v * pre_scale for k, v in res.cycles.items()}
+        res.name = spec.name
+        res.macs = spec.macs
+        for b in skip_fc_for:
+            if res.kind == "fc" and b in res.cycles:
+                res.cycles[b] = float("nan")
+        results.append(res)
+    return results
+
+
+def _filter_densities(n: int, wd: float, rng, opts: SimOptions) -> np.ndarray:
+    """Per-filter densities: lognormal jitter around ``wd`` (real magnitude
+    pruning leaves filters with very different survival rates)."""
+    if opts.filter_jitter <= 0:
+        return np.full(n, wd)
+    d = wd * rng.lognormal(-(opts.filter_jitter**2) / 2, opts.filter_jitter, n)
+    return np.clip(d, 0.01, 1.0)
+
+
+def _spatial_profile(kh: int, kw: int, bias: float) -> np.ndarray:
+    """Centre-heavy keep-probability profile over the filter window (mean 1)."""
+    if bias <= 0 or (kh == 1 and kw == 1):
+        return np.ones((kh, kw))
+    yy, xx = np.mgrid[0:kh, 0:kw]
+    cy, cx = (kh - 1) / 2, (kw - 1) / 2
+    r2 = ((yy - cy) / max(cy, 1)) ** 2 + ((xx - cx) / max(cx, 1)) ** 2
+    prof = np.exp(-bias * r2)
+    return prof / prof.mean()
+
+
+def _make_masks(spec, wd, ad, rng, opts: SimOptions):
+    """Synthesize masks at layer densities; FC weight matrices are sampled
+    down *before* synthesis (their full masks are enormous)."""
+    if isinstance(spec, df.FCSpec):
+        unit = 9
+        n_batches = math.ceil(spec.in_dim / unit)
+        target = max(1, min(opts.max_jobs, int(math.ceil(n_batches * opts.job_frac))))
+        in_red = min(spec.in_dim, target * unit)
+        scale = spec.in_dim / in_red
+        spec_eff = df.FCSpec(spec.name, in_red, spec.out_dim)
+        w_mask = sparsity.bernoulli_mask((in_red, spec.out_dim), wd, rng)
+        a_mask = sparsity.bernoulli_mask((in_red,), ad, rng)
+        return w_mask, a_mask, spec_eff, scale
+    a_mask = sparsity.bernoulli_mask((spec.in_h, spec.in_w, spec.in_ch), ad, rng)
+    prof = _spatial_profile(spec.kh, spec.kw, opts.spatial_bias)
+    if spec.depthwise:
+        dens = _filter_densities(spec.in_ch, wd, rng, opts)
+        keep = np.clip(prof[:, :, None] * dens[None, None, :], 0, 1)
+        w_mask = rng.random((spec.kh, spec.kw, spec.in_ch)) < keep
+    else:
+        dens = _filter_densities(spec.out_ch, wd, rng, opts)
+        keep = np.clip(
+            prof[:, :, None, None] * dens[None, None, None, :], 0, 1
+        )
+        w_mask = (
+            rng.random((spec.kh, spec.kw, spec.in_ch, spec.out_ch)) < keep
+        )
+    return w_mask, a_mask, spec, 1.0
+
+
+def network_summary(results: list[LayerResult], variant: str, base: str = "dense"):
+    """Whole-network speedup = Σ base cycles / Σ variant cycles (nan-safe:
+    layers a baseline cannot run are excluded from *both* sums)."""
+    num = den = 0.0
+    for r in results:
+        b, v = r.cycles.get(base), r.cycles.get(variant)
+        if b is None or v is None or math.isnan(b) or math.isnan(v):
+            continue
+        num += b
+        den += v
+    return num / den if den else float("nan")
+
+
+def vgg16_simulation(opts=SimOptions(), variants=None, baselines=(), include_fc=True):
+    layers = netlib.vgg16_layers(include_fc=include_fc)
+    wd, ad = netlib.densities_for(
+        layers, netlib.VGG16_WEIGHT_DENSITY, netlib.VGG16_ACT_DENSITY
+    )
+    return simulate_network(layers, wd, ad, variants, opts, baselines)
+
+
+def mobilenet_simulation(opts=SimOptions(), variants=None, baselines=(), include_fc=True):
+    layers = netlib.mobilenet_layers(include_fc=include_fc)
+    wd, ad = netlib.densities_for(
+        layers, netlib.MOBILENET_WEIGHT_DENSITY, netlib.MOBILENET_ACT_DENSITY
+    )
+    return simulate_network(layers, wd, ad, variants, opts, baselines)

@@ -1,0 +1,79 @@
+"""Sparsity substrate: pruning, activation thresholding, mask synthesis.
+
+The paper evaluates Han-style pruned networks (Deep Compression [19]): static
+weight sparsity from iterative magnitude pruning, dynamic activation sparsity
+from ReLU.  This module provides
+  * magnitude / block-magnitude pruning (the block variant feeds the TPU
+    adaptation in :mod:`repro.core.blocksparse`),
+  * activation thresholding (τ=0 ⇔ exact ReLU zero semantics, §3.8),
+  * seeded Bernoulli mask synthesis at target densities (the simulator's
+    stand-in for "average over 100 inputs"),
+  * density bookkeeping shared by the balancers.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "magnitude_prune",
+    "block_prune",
+    "activation_mask",
+    "bernoulli_mask",
+    "layer_density",
+]
+
+
+def magnitude_prune(w: np.ndarray, density: float) -> np.ndarray:
+    """Keep the top-``density`` fraction of |w|; returns a boolean mask."""
+    w = np.asarray(w)
+    if not 0.0 <= density <= 1.0:
+        raise ValueError("density must be in [0, 1]")
+    k = int(round(density * w.size))
+    if k == 0:
+        return np.zeros(w.shape, dtype=bool)
+    if k >= w.size:
+        return np.ones(w.shape, dtype=bool)
+    thresh = np.partition(np.abs(w).ravel(), w.size - k)[w.size - k]
+    mask = np.abs(w) >= thresh
+    # Tie-break deterministically so exactly k survive.
+    extra = int(mask.sum()) - k
+    if extra > 0:
+        ties = np.flatnonzero((np.abs(w) == thresh).ravel() & mask.ravel())
+        flat = mask.ravel()
+        flat[ties[:extra]] = False
+        mask = flat.reshape(w.shape)
+    return mask
+
+
+def block_prune(w: np.ndarray, density: float, block: tuple[int, int]) -> np.ndarray:
+    """Prune whole (bm × bn) blocks by L2 norm — the TPU-aligned variant.
+
+    Returns an element mask in which surviving blocks are fully dense; the
+    block mask itself is recovered by any-reduction over blocks.
+    """
+    w = np.asarray(w)
+    bm, bn = block
+    m, n = w.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    wp = np.pad(w, ((0, pm), (0, pn)))
+    blocks = wp.reshape((m + pm) // bm, bm, (n + pn) // bn, bn)
+    norms = np.sqrt((blocks.astype(np.float64) ** 2).sum(axis=(1, 3)))
+    bmask = magnitude_prune(norms, density)
+    emask = np.repeat(np.repeat(bmask, bm, axis=0), bn, axis=1)
+    return emask[:m, :n]
+
+
+def activation_mask(x: np.ndarray, threshold: float = 0.0) -> np.ndarray:
+    """Dynamic activation mask: ``|x| > threshold`` (τ=0 keeps exact zeros
+    only — the ReLU case of §3.8; τ>0 is the lossy LM serving knob)."""
+    return np.abs(np.asarray(x)) > threshold
+
+
+def bernoulli_mask(shape, density: float, rng: np.random.Generator) -> np.ndarray:
+    """Seeded random mask at a target density (simulator input synthesis)."""
+    return rng.random(shape) < density
+
+
+def layer_density(mask: np.ndarray, axis=None):
+    mask = np.asarray(mask, dtype=np.float64)
+    return mask.mean(axis=axis)

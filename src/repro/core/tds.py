@@ -1,0 +1,229 @@
+"""Top-Down Selector (paper §3.4) — in-order and out-of-order variants.
+
+Each of the ``pes`` parallel selectors owns one column of LAM entries (one
+entry per convolution chunk, ``threads`` bits each) and packs entries onto its
+PE's multiplier threads cycle by cycle, under two hardware constraints:
+
+  * **multiplier capacity** — at most ``threads`` ones per selection,
+  * **output slots**       — at most ``threads`` entries per selection (the
+    L1 adder emits one partial per entry; there are ``threads`` FIFO ports).
+
+Per cycle a selector examines a window of the next ``L_f`` pending entries:
+
+  * **zero entries are free**: the LAM's all-zero check (§3.8) already routes
+    all-zero chunks to the output encoder, so a zero-popcount entry consumes
+    neither a multiplier nor a mapper slot — the window logic shifts past it.
+    This is what lets speedup scale with ``L_f`` (up to ``L_f`` entries
+    retired per cycle when the stream is zero-dominated: Fig. 19b, and the
+    ~25×-over-dense pointwise layers at ``L_f = 27``, §5.2.4); with
+    ``L_f = 1`` exactly one entry retires per cycle, replicating a dense
+    accelerator (§5.2.1).
+  * **in-order** (TDS-IO): take the maximal *prefix* that fits; the first
+    non-zero entry that does not fit ends the cycle (paper Fig. 6a).
+  * **out-of-order** (TDS-OO): keep scanning the window past a non-fitting
+    entry and take anything that still fits (Fig. 6b).  Entries skipped in a
+    cycle stay at the head of the queue, so they get highest priority on the
+    next cycle (the paper's P1/P2 priority flip).
+
+Core synchronisation: the columns of one work assignment proceed in lockstep,
+so the assignment costs ``max`` over columns of per-column cycles (§4.6).
+
+Two implementations with identical semantics (cross-checked by tests):
+:func:`select_column` returns the exact per-cycle selections for the
+functional engine; :func:`batch_cycles` is a NumPy-vectorised version that
+times thousands of column queues at once for the full-network simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "ColumnSchedule",
+    "TdsSchedule",
+    "select_column",
+    "schedule_entries",
+    "batch_cycles",
+    "POLICIES",
+]
+
+POLICIES = ("inorder", "outoforder")
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnSchedule:
+    """Exact selection trace of one column: ``selections[c]`` = entry ids
+    picked on cycle ``c`` (queue order == arrival order of LAM outputs)."""
+
+    selections: list[list[int]]
+
+    @property
+    def cycles(self) -> int:
+        return len(self.selections)
+
+
+@dataclasses.dataclass(frozen=True)
+class TdsSchedule:
+    columns: list[ColumnSchedule]
+    pes: int
+    threads: int
+    policy: str
+    valid_macs: int
+
+    @property
+    def cycles(self) -> int:
+        """Assignment latency: columns run in lockstep (§4.6)."""
+        return max((c.cycles for c in self.columns), default=0)
+
+    @property
+    def utilization(self) -> float:
+        denom = self.cycles * self.pes * self.threads
+        return self.valid_macs / denom if denom else 1.0
+
+
+def select_column(
+    pops: np.ndarray, *, lookahead: int, threads: int, policy: str
+) -> ColumnSchedule:
+    """Exact schedule of one column queue given per-entry popcounts."""
+    if policy not in POLICIES:
+        raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+    pops = [int(p) for p in np.asarray(pops).ravel()]
+    if any(p > threads for p in pops):
+        raise ValueError("entry popcount exceeds multiplier-thread capacity")
+    queue = list(range(len(pops)))
+    selections: list[list[int]] = []
+    while queue:
+        window = queue[: max(1, lookahead)]
+        cap, slots, sel, passed = threads, threads, [], []
+        for idx in window:
+            if pops[idx] == 0:  # all-zero entry: shifted past for free (§3.8)
+                passed.append(idx)
+                continue
+            fits = pops[idx] <= cap and slots > 0
+            if fits:
+                sel.append(idx)
+                cap -= pops[idx]
+                slots -= 1
+            elif policy == "inorder":
+                break  # IO stops at the first non-fitting non-zero entry
+        selections.append(sel)
+        gone = set(sel) | set(passed)
+        queue = [i for i in queue if i not in gone]
+    return ColumnSchedule(selections=selections)
+
+
+def schedule_entries(
+    entries: np.ndarray, *, lookahead: int, policy: str
+) -> TdsSchedule:
+    """Schedule a full assignment: ``entries`` is ``[E, pes, threads]`` bool."""
+    entries = np.asarray(entries, dtype=bool)
+    _, pes, threads = entries.shape
+    pops = entries.sum(axis=2)  # [E, pes]
+    cols = [
+        select_column(pops[:, j], lookahead=lookahead, threads=threads, policy=policy)
+        for j in range(pes)
+    ]
+    return TdsSchedule(
+        columns=cols,
+        pes=pes,
+        threads=threads,
+        policy=policy,
+        valid_macs=int(entries.sum()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Vectorised batch timing — same semantics, thousands of queues at once.
+# ---------------------------------------------------------------------------
+
+
+def batch_cycles(
+    pops: np.ndarray,
+    lengths: np.ndarray,
+    *,
+    lookahead: int,
+    threads: int,
+    policy: str,
+) -> np.ndarray:
+    """Cycle counts for ``Q`` column queues.
+
+    ``pops``:    ``[Q, L]`` uint popcounts, padded past ``lengths`` (ignored).
+    ``lengths``: ``[Q]`` valid entry counts per queue.
+    Returns ``[Q]`` int cycles.  Exactly matches :func:`select_column`
+    (property-tested), but runs the per-cycle window scan as vector ops.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"policy must be one of {POLICIES}, got {policy!r}")
+    pops = np.ascontiguousarray(pops, dtype=np.int32)
+    lengths = np.asarray(lengths, dtype=np.int64)
+    Q, L = pops.shape
+    n = int(max(1, lookahead))
+    BIG = np.int32(1 << 20)  # sentinel: never fits
+
+    # Queue state: a carry buffer of ≤ n previously-skipped entries (OO only —
+    # IO consumes prefixes so its carry is always empty) plus a pointer into
+    # the untouched entry stream.
+    carry = np.full((Q, n), BIG, dtype=np.int32)
+    carry_len = np.zeros(Q, dtype=np.int64)
+    ptr = np.zeros(Q, dtype=np.int64)
+    cycles = np.zeros(Q, dtype=np.int64)
+    pad = np.full((Q, n), BIG, dtype=np.int32)
+    pops_pad = np.concatenate([pops, pad], axis=1)  # safe windowed gather
+    # Mask out entries beyond each queue's valid length.
+    idx_all = np.arange(L + n)[None, :]
+    pops_pad = np.where(idx_all < lengths[:, None], pops_pad, BIG)
+
+    active = (carry_len + np.maximum(lengths - ptr, 0)) > 0
+    while active.any():
+        # Build the window: carry entries first (highest priority), then fresh.
+        fresh_need = np.clip(n - carry_len, 0, None)
+        gidx = ptr[:, None] + np.arange(n)[None, :]
+        fresh = np.take_along_axis(pops_pad, np.minimum(gidx, L + n - 1), axis=1)
+        fresh = np.where(np.arange(n)[None, :] < fresh_need[:, None], fresh, BIG)
+        window = np.full((Q, n), BIG, dtype=np.int32)
+        crange = np.arange(n)[None, :]
+        np.copyto(window, np.where(crange < carry_len[:, None], carry, window))
+        # Append fresh after carry: position of fresh j is carry_len + j.
+        fpos = carry_len[:, None] + np.arange(n)[None, :]
+        take = (np.arange(n)[None, :] < fresh_need[:, None]) & (fpos < n)
+        rows, cols_ = np.nonzero(take)
+        window[rows, np.minimum(fpos[rows, cols_], n - 1)] = fresh[rows, cols_]
+
+        fresh_taken = np.minimum(fresh_need, np.maximum(lengths - ptr, 0))
+        valid = window < BIG
+
+        # Greedy scan over the window (n is small: ≤ L_f ≤ 27).
+        cap = np.full(Q, threads, dtype=np.int32)
+        slots = np.full(Q, threads, dtype=np.int32)
+        alive = np.ones(Q, dtype=bool)  # IO: false after first non-fit
+        consumed = np.zeros((Q, n), dtype=bool)
+        for j in range(n):
+            pj = window[:, j]
+            vj = valid[:, j]
+            zero = (pj == 0) & vj  # all-zero entries shift past for free
+            fits = (pj > 0) & (pj <= cap) & (slots > 0) & vj
+            if policy == "inorder":
+                fits &= alive
+                zero &= alive
+                # The prefix survives padding and zero entries but ends at
+                # the first real non-zero entry that does not fit.
+                alive = alive & (fits | zero | ~vj)
+            consumed[:, j] = fits | zero
+            cap = cap - np.where(fits, pj, 0).astype(np.int32)
+            slots = slots - fits.astype(np.int32)
+
+        # Entries not consumed become the next carry (order preserved).
+        leftover = valid & ~consumed
+        order = np.argsort(~leftover, axis=1, kind="stable")  # leftovers first
+        new_carry = np.take_along_axis(window, order, axis=1)
+        new_len = leftover.sum(axis=1).astype(np.int64)
+        new_carry = np.where(np.arange(n)[None, :] < new_len[:, None], new_carry, BIG)
+
+        progressed = active
+        carry = np.where(progressed[:, None], new_carry, carry)
+        carry_len = np.where(progressed, new_len, carry_len)
+        ptr = ptr + np.where(progressed, fresh_taken, 0)
+        cycles += progressed
+        active = (carry_len + np.maximum(lengths - ptr, 0)) > 0
+    return cycles

@@ -1,0 +1,210 @@
+"""Public jit'd wrappers for the Phantom TPU kernels.
+
+``prepare_weight`` runs once at weight-load time (host side): block-masks the
+pruned weight, packs the kept tiles (§3.1 storage), builds the compacted work
+queue (TDS analogue) and appends the §3.8 empty-output steps so every output
+tile is written exactly once.  ``phantom_matmul`` /
+``phantom_linear_act`` are the runtime entry points; the dynamic activation
+tile bits are gathered per queue step and shipped via scalar prefetch.
+
+Interpret mode defaults to on when running on CPU (this container) — the
+kernel body executes in Python with identical semantics; on TPU it compiles
+to Mosaic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocksparse as bs
+from . import phantom_ffn, phantom_spmm
+from .ref import ref_activation_block_mask
+
+__all__ = [
+    "PhantomWeight",
+    "prepare_weight",
+    "activation_tile_bits",
+    "phantom_matmul",
+    "phantom_linear_act",
+    "default_interpret",
+]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@dataclasses.dataclass
+class PhantomWeight:
+    """Weight-load-time artifact: packed payload + compacted queue."""
+
+    packed: jnp.ndarray  # [nnzb, bk, bn]
+    mi: np.ndarray
+    ni: np.ndarray
+    ki: np.ndarray
+    wq: np.ndarray
+    start: np.ndarray
+    last: np.ndarray
+    valid: np.ndarray  # 0 on empty-output steps (abit forced 0)
+    flat_ak: np.ndarray  # mi*Kt + ki per step (activation-bit gather index)
+    block: tuple[int, int, int]
+    grid_tiles: tuple[int, int, int]
+    shape: tuple[int, int]  # original (K, N)
+    w_bmask: np.ndarray  # [Kt, Nt] (kept for tests / stats)
+
+    @property
+    def steps(self) -> int:
+        return int(self.mi.shape[0])
+
+    def density(self) -> float:
+        return float(self.w_bmask.mean())
+
+
+def prepare_weight(
+    w: np.ndarray,
+    *,
+    m: int,
+    block: tuple[int, int, int] = (256, 256, 256),
+    interleave: bool = True,
+    dtype=jnp.float32,
+) -> PhantomWeight:
+    """Pack a (pruned) dense weight [K, N] for activations with ``m`` rows."""
+    w = np.asarray(w)
+    k, n = w.shape
+    bm, bk, bn = block
+    mt = math.ceil(m / bm)
+    bmask = bs.block_mask_from_dense(w, (bk, bn)).mask
+    queue = bs.build_work_queue(bmask, mt, interleave=interleave)
+    packed = jnp.asarray(bs.pack_blocks(w, bmask, (bk, bn)), dtype=dtype)
+    kt = bmask.shape[0]
+
+    # Append §3.8 empty-output steps: start=last=1, compute gated off, so the
+    # kernel writes an exact zero tile.
+    e = queue.empty_out
+    ones = np.ones(len(e), dtype=np.int32)
+    zeros = np.zeros(len(e), dtype=np.int32)
+    mi = np.concatenate([queue.mi, e[:, 0].astype(np.int32)])
+    ni = np.concatenate([queue.ni, e[:, 1].astype(np.int32)])
+    ki = np.concatenate([queue.ki, zeros])
+    wq = np.concatenate([queue.wq, zeros])
+    start = np.concatenate([queue.start, ones])
+    last = np.concatenate([queue.last, ones])
+    valid = np.concatenate([np.ones(queue.steps, dtype=np.int32), zeros])
+    return PhantomWeight(
+        packed=packed,
+        mi=mi,
+        ni=ni,
+        ki=ki,
+        wq=wq,
+        start=start,
+        last=last,
+        valid=valid,
+        flat_ak=mi * kt + ki,
+        block=block,
+        grid_tiles=(mt, kt, bmask.shape[1]),
+        shape=(k, n),
+        w_bmask=bmask,
+    )
+
+
+def activation_tile_bits(x2d: jnp.ndarray, block: tuple[int, int], threshold: float = 0.0):
+    """Dynamic activation tile mask (int32 [Mt, Kt]) for a 2-D activation."""
+    return ref_activation_block_mask(x2d, block, threshold).astype(jnp.int32)
+
+
+def _pad2(x, bm, bk):
+    m, k = x.shape
+    pm, pk = (-m) % bm, (-k) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    return x
+
+
+def _run(call, x, pw: PhantomWeight, act_bits, interpret, **kw):
+    bm, bk, bn = pw.block
+    xp = _pad2(x, bm, bk)
+    abit = act_bits.reshape(-1)[jnp.asarray(pw.flat_ak)] * jnp.asarray(pw.valid)
+    return call(
+        xp,
+        pw.packed,
+        jnp.asarray(pw.mi),
+        jnp.asarray(pw.ni),
+        jnp.asarray(pw.ki),
+        jnp.asarray(pw.wq),
+        jnp.asarray(pw.start),
+        jnp.asarray(pw.last),
+        abit.astype(jnp.int32),
+        block=pw.block,
+        grid_tiles=pw.grid_tiles,
+        interpret=interpret,
+        **kw,
+    )
+
+
+def phantom_matmul(
+    x: jnp.ndarray,
+    pw: PhantomWeight,
+    *,
+    act_threshold: float = 0.0,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """``y = x @ w`` through the two-sided block-sparse kernel.
+
+    ``x``: [..., K]; leading dims are flattened to M (must satisfy
+    ``ceil(M/bm) == grid_tiles[0]`` of ``pw``).
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    k, n = pw.shape
+    x2 = x.reshape(-1, k)
+    bm, bk, _ = pw.block
+    bits = activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
+    y = _run(
+        phantom_spmm.phantom_spmm_call,
+        x2,
+        pw,
+        bits,
+        interpret,
+        out_dtype=out_dtype or x.dtype,
+    )
+    return y[: x2.shape[0], :n].reshape(*lead, n)
+
+
+def phantom_linear_act(
+    x: jnp.ndarray,
+    pw: PhantomWeight,
+    *,
+    activation: str = "none",
+    act_threshold: float = 0.0,
+    mask_threshold: float = 0.0,
+    out_dtype=None,
+    interpret: bool | None = None,
+):
+    """Fused ``y = act(x @ w)`` + §3.8 output-encoding tile mask.
+
+    Returns ``(y, y_tile_mask)`` — feed the mask to the next layer's
+    ``phantom_matmul`` instead of recomputing it from ``y``.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    k, n = pw.shape
+    x2 = x.reshape(-1, k)
+    bm, bk, _ = pw.block
+    bits = activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
+    y, ymask = _run(
+        phantom_ffn.phantom_linear_act_call,
+        x2,
+        pw,
+        bits,
+        interpret,
+        activation=activation,
+        threshold=mask_threshold,
+        out_dtype=out_dtype or x.dtype,
+    )
+    return y[: x2.shape[0], :n].reshape(*lead, n), ymask

@@ -1,0 +1,120 @@
+"""Fused block-sparse linear + activation + output-encoding epilogue.
+
+Same two-sided schedule as :mod:`repro.kernels.phantom_spmm`, plus — on the
+``last`` step of each (mi, ni) accumulation run, while the fp32 tile is still
+resident in VMEM — the activation function and the §3.8 output encoding: the
+consumer layer's activation tile bit ``any(|act(y_tile)| > τ)``.  Fusing the
+encoding here means the next layer's sparsity metadata costs zero extra HBM
+reads (the paper generates the output sparse mask on the fly for exactly
+this reason).
+
+Extra output: ``y_mask`` int32 [Mt, Nt] tile mask, BlockSpec (1, 1).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import ACTIVATIONS
+
+__all__ = ["phantom_linear_act_kernel", "phantom_linear_act_call"]
+
+
+def phantom_linear_act_kernel(
+    mi_ref,
+    ni_ref,
+    ki_ref,
+    wq_ref,
+    start_ref,
+    last_ref,
+    abit_ref,
+    x_ref,
+    w_ref,
+    o_ref,
+    omask_ref,
+    acc_ref,
+    *,
+    activation: str,
+    threshold: float,
+):
+    i = pl.program_id(0)
+
+    @pl.when(start_ref[i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(abit_ref[i] == 1)
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(last_ref[i] == 1)
+    def _flush():
+        y = ACTIVATIONS[activation](acc_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+        # §3.8 output encoding, post-activation, on the resident tile.
+        omask_ref[0, 0] = jnp.any(jnp.abs(y) > threshold).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "block",
+        "grid_tiles",
+        "activation",
+        "threshold",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def phantom_linear_act_call(
+    x,
+    w_packed,
+    mi,
+    ni,
+    ki,
+    wq,
+    start,
+    last,
+    abit,
+    *,
+    block: tuple[int, int, int],
+    grid_tiles: tuple[int, int, int],
+    activation: str = "none",
+    threshold: float = 0.0,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    bm, bk, bn = block
+    mt, _kt, nt = grid_tiles
+    q = mi.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, mi, ni, ki, wq, st, la, ab: (mi[i], ki[i])),
+            pl.BlockSpec((1, bk, bn), lambda i, mi, ni, ki, wq, st, la, ab: (wq[i], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, mi, ni, ki, wq, st, la, ab: (mi[i], ni[i])),
+            pl.BlockSpec((1, 1), lambda i, mi, ni, ki, wq, st, la, ab: (mi[i], ni[i])),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(
+        phantom_linear_act_kernel, activation=activation, threshold=threshold
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((mt * bm, nt * bn), out_dtype),
+            jax.ShapeDtypeStruct((mt, nt), jnp.int32),
+        ],
+        interpret=interpret,
+    )(mi, ni, ki, wq, start, last, abit, x, w_packed)

@@ -1,0 +1,109 @@
+"""Two-sided block-sparse matmul — the Phantom core on the MXU.
+
+``y[M, N] = x[M, K] @ w[K, N]`` where
+
+* the weight's zero (bk × bn) tiles are *compacted away*: the grid walks a
+  dense work queue of effectual tiles (``repro.core.blocksparse.WorkQueue``),
+  so — exactly like the paper's TDS — no compute step is ever issued for a
+  zero weight tile, and the packed weight payload (§3.1 sparse-mask storage)
+  is the only weight data that ever moves HBM→VMEM;
+* the activation's zero tiles are *gated*: the per-step activation tile bit
+  arrives via scalar prefetch and a ``pl.when`` skips the MXU op (the grid
+  step itself cannot be elided — TPU grids are static; DESIGN.md §2 records
+  this asymmetry vs. the paper).
+
+Accumulation is k-major in a VMEM fp32 scratch tile that stays resident for
+a full (mi, ni) run — the paper's output-buffer L2 accumulation with zero
+partial-output HBM traffic.
+
+BlockSpec layout (VMEM):
+  x: (bm, bk) tile at (mi[i], ki[i])
+  w: (1, bk, bn) tile of the packed [nnzb, bk, bn] payload at wq[i]
+  y: (bm, bn) tile at (mi[i], ni[i])   — written on ``last`` steps only
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["phantom_spmm_kernel", "phantom_spmm_call"]
+
+
+def phantom_spmm_kernel(
+    # --- scalar prefetch (SMEM) ---
+    mi_ref,
+    ni_ref,
+    ki_ref,
+    wq_ref,
+    start_ref,
+    last_ref,
+    abit_ref,
+    # --- VMEM operands ---
+    x_ref,
+    w_ref,
+    o_ref,
+    # --- scratch ---
+    acc_ref,
+):
+    i = pl.program_id(0)
+
+    @pl.when(start_ref[i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(abit_ref[i] == 1)
+    def _mac():  # effectual tile: one MXU op
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(last_ref[i] == 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "grid_tiles", "out_dtype", "interpret"),
+)
+def phantom_spmm_call(
+    x: jnp.ndarray,  # [M, K] (padded to tile multiples)
+    w_packed: jnp.ndarray,  # [nnzb, bk, bn]
+    mi: jnp.ndarray,  # int32 [Q] queue arrays (incl. empty-output steps)
+    ni: jnp.ndarray,
+    ki: jnp.ndarray,
+    wq: jnp.ndarray,
+    start: jnp.ndarray,
+    last: jnp.ndarray,
+    abit: jnp.ndarray,  # int32 [Q] activation tile bit per step (dynamic)
+    *,
+    block: tuple[int, int, int],
+    grid_tiles: tuple[int, int, int],
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bm, bk, bn = block
+    mt, _kt, nt = grid_tiles
+    q = mi.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, mi, ni, ki, wq, st, la, ab: (mi[i], ki[i])),
+            pl.BlockSpec((1, bk, bn), lambda i, mi, ni, ki, wq, st, la, ab: (wq[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bm, bn), lambda i, mi, ni, ki, wq, st, la, ab: (mi[i], ni[i])
+        ),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        phantom_spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mt * bm, nt * bn), out_dtype),
+        interpret=interpret,
+    )(mi, ni, ki, wq, start, last, abit, x, w_packed)

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact reference semantics).
+
+The kernels compute ``y = act_fn(x @ w)`` where
+  * weight tiles with a zero block-mask bit are exactly zero (static,
+    block-pruned weights), and
+  * activation tiles with a zero block-mask bit are treated as exactly zero
+    (dynamic tile mask from the producing layer's epilogue, §3.8).
+
+These oracles materialise that semantics densely; tests assert_allclose the
+kernels (interpret mode on CPU) against them over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "expand_block_mask",
+    "ref_phantom_spmm",
+    "ref_phantom_linear_act",
+    "ref_activation_block_mask",
+    "ACTIVATIONS",
+]
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def expand_block_mask(bmask: jnp.ndarray, block: tuple[int, int], shape) -> jnp.ndarray:
+    """Tile mask [Mt, Nt] → element mask [M, N] (crop to ``shape``)."""
+    bm, bn = block
+    m, n = shape
+    e = jnp.repeat(jnp.repeat(bmask, bm, axis=0), bn, axis=1)
+    return e[:m, :n]
+
+
+def ref_phantom_spmm(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    w_bmask: jnp.ndarray,  # bool [Kt, Nt]
+    act_bmask: jnp.ndarray,  # bool [Mt, Kt]
+    block: tuple[int, int, int],  # (bm, bk, bn)
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Oracle for the two-sided block-sparse matmul."""
+    bm, bk, bn = block
+    m, k = x.shape
+    _, n = w.shape
+    xm = expand_block_mask(act_bmask.astype(x.dtype), (bm, bk), (m, k))
+    wm = expand_block_mask(w_bmask.astype(w.dtype), (bk, bn), (k, n))
+    acc = jnp.dot(
+        (x * xm).astype(jnp.float32),
+        (w * wm).astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return acc.astype(out_dtype or x.dtype)
+
+
+def ref_phantom_linear_act(
+    x, w, w_bmask, act_bmask, block, activation: str = "none", threshold: float = 0.0,
+    out_dtype=None,
+):
+    """Oracle for the fused linear + activation + output-encoding kernel.
+
+    Returns ``(y, y_block_mask)`` where the mask is the §3.8 output encoding
+    of the *activated* output at (bm, bn) granularity.
+    """
+    y32 = ref_phantom_spmm(x, w, w_bmask, act_bmask, block, out_dtype=jnp.float32)
+    y32 = ACTIVATIONS[activation](y32)
+    y = y32.astype(out_dtype or x.dtype)
+    ymask = ref_activation_block_mask(y, (block[0], block[2]), threshold)
+    return y, ymask
+
+
+def ref_activation_block_mask(x, block: tuple[int, int], threshold: float = 0.0):
+    """Tile kept ⇔ any(|x| > τ) over the tile (τ=0 ⇒ exact-zero skipping)."""
+    bm, bn = block
+    m, n = x.shape
+    mt, nt = -(-m // bm), -(-n // bn)
+    xp = jnp.zeros((mt * bm, nt * bn), x.dtype).at[:m, :n].set(x)
+    return (
+        (jnp.abs(xp) > threshold)
+        .reshape(mt, bm, nt, bn)
+        .any(axis=(1, 3))
+    )

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (device count is locked at first backend init, and
+the dry-run needs to set XLA_FLAGS before that happens).
+
+Mesh shapes: single pod = (16, 16) over ('data', 'model') — 256 chips of a
+v5e pod; multi-pod = (2, 16, 16) over ('pod', 'data', 'model') — 512 chips.
+The 'pod' axis only ever carries gradient all-reduce traffic (params are
+FSDP'd within a pod), matching the slow cross-pod links.  An optional
+'stage' axis prepends pipeline parallelism.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_shape"]
+
+
+def make_mesh_shape(*, multi_pod: bool = False, pipeline_stages: int = 1):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if pipeline_stages > 1:
+        # Stages take over the data axis: total chips stay fixed.
+        shape = (pipeline_stages,) + shape[:-2] + (shape[-2] // pipeline_stages, shape[-1])
+        axes = ("stage",) + axes
+    return shape, axes
+
+
+def make_production_mesh(*, multi_pod: bool = False, pipeline_stages: int = 1):
+    shape, axes = make_mesh_shape(multi_pod=multi_pod, pipeline_stages=pipeline_stages)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

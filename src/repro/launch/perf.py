@@ -1,0 +1,162 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing harness: hypothesis → change → re-lower → re-analyse.
+
+Runs the corrected roofline (see roofline_sweep.py) for one cell under a
+sequence of named config overrides and prints the before/after terms.  The
+three hillclimbed cells (per assignment: worst roofline fraction, most
+collective-bound, most representative of the paper's technique):
+
+  A  smollm_360m × train_4k      (worst compute/dominant fraction)
+  B  moonshot_v1_16b_a3b × train_4k  (most collective-bound)
+  C  qwen2_0p5b × prefill_32k    (Phantom serving cell)
+
+  PYTHONPATH=src python -m repro.launch.perf --cell A
+"""
+import argparse
+import dataclasses
+import json
+
+from repro import configs, roofline
+from repro.configs import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline_sweep import _cell_costs, _depths, _reduced
+
+
+CELLS = {
+    "A": ("smollm_360m", "train_4k", [
+        ("baseline", {}),
+        ("chunked_attn", {"attn_impl": "chunked"}),
+        ("chunked+embed1d", {"attn_impl": "chunked", "embed_table_2d": False}),
+        ("chunked4k", {"attn_impl": "chunked", "attn_chunk": 4096}),
+        ("chunked4k+noremat",
+         {"attn_impl": "chunked", "attn_chunk": 4096, "remat": False}),
+        ("chunked1k+noremat", {"attn_impl": "chunked", "remat": False}),
+        ("chunked512", {"attn_impl": "chunked", "attn_chunk": 512}),
+    ]),
+    "B": ("moonshot_v1_16b_a3b", "train_4k", [
+        ("baseline", {}),
+        ("grouped_moe", {"moe_groups": 16}),
+        ("grouped+chunked", {"moe_groups": 16, "attn_impl": "chunked"}),
+        ("grouped+chunked+embed1d",
+         {"moe_groups": 16, "attn_impl": "chunked", "embed_table_2d": False}),
+    ]),
+    "C": ("qwen2_0p5b", "prefill_32k", [
+        ("baseline", {}),
+        ("chunked_attn", {"attn_impl": "chunked"}),
+        ("chunked+embed1d", {"attn_impl": "chunked", "embed_table_2d": False}),
+    ]),
+}
+
+
+def corrected_terms(arch, shape, overrides: dict) -> dict:
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = dataclasses.replace(configs.get_config(arch), **overrides)
+    l1, l2 = _depths(cfg)
+    with mesh:
+        f1, b1, c1 = _cell_costs(arch, shape, mesh, _reduced(cfg, l1))
+        f2, b2, c2 = _cell_costs(arch, shape, mesh, _reduced(cfg, l2))
+    scale = (cfg.n_layers - l1) / (l2 - l1)
+    flops = f1 + (f2 - f1) * scale
+    byts = b1 + (b2 - b1) * scale
+    coll = {k: c1[k] + (c2[k] - c1[k]) * scale for k in c1}
+    coll_total = sum(v * (2 if k == "all-reduce" else 1) for k, v in coll.items())
+    hw = roofline.HW
+    terms = {
+        "compute_s": flops / hw["peak_flops_bf16"],
+        "memory_s": byts / hw["hbm_bw"],
+        "collective_s": coll_total / hw["link_bw"],
+    }
+    mf = roofline.model_flops(cfg, shp.SHAPES[shape])
+    dom = max(terms.values())
+    return {
+        **terms,
+        "dominant": max(terms, key=terms.get),
+        "useful": mf / (flops * mesh.size) if flops else 0.0,
+        "roofline_fraction": terms["compute_s"] / dom if dom else 0.0,
+        "collective_breakdown": coll,
+    }
+
+
+def phantom_kernel_analytic(arch, shape, base: dict, weight_density=0.25,
+                            block=(256, 256, 256)) -> dict:
+    """Beyond-dry-run term: the Pallas kernel path cannot lower for a fake
+    TPU, so its effect is derived from the *real* work queue built on the
+    arch's actual FFN shapes: MXU grid steps shrink to the measured
+    compaction ratio; packed-weight HBM bytes shrink to ~weight_density."""
+    import numpy as np
+
+    from repro.core.sparsity import block_prune
+    from repro.kernels import ops
+
+    cfg = configs.get_config(arch)
+    sp = shp.SHAPES[shape]
+    rng = np.random.default_rng(0)
+    d, ff = cfg.d_model, cfg.d_ff
+    tokens = sp.global_batch * sp.seq_len
+    ratios = []
+    for (k_, n_) in ((d, ff), (ff, d)):
+        w = rng.standard_normal((k_, n_)).astype(np.float32)
+        w *= block_prune(w, weight_density, block[1:])
+        pw = ops.prepare_weight(w, m=4096, block=block)
+        mt, kt, nt = pw.grid_tiles
+        ratios.append(pw.steps / (mt * kt * nt))
+    r = float(np.mean(ratios))
+    # FFN share of model GEMM flops (gate+up+down) per token.
+    ffn_flops = 2.0 * 3 * d * ff * tokens * (1 if sp.kind != "train" else 3)
+    chips = 256
+    ffn_compute_s = ffn_flops / chips / roofline.HW["peak_flops_bf16"]
+    w_bytes = cfg.n_layers * 3 * d * ff * 2 / chips
+    out = dict(base)
+    out["compute_s"] = base["compute_s"] - ffn_compute_s * (1 - r)
+    out["memory_s"] = base["memory_s"] - w_bytes * (1 - weight_density) / roofline.HW["hbm_bw"]
+    dom = max(out["compute_s"], out["memory_s"], out["collective_s"])
+    out["dominant"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: out[k]
+    )
+    out["roofline_fraction"] = out["compute_s"] / dom
+    out["note"] = f"kernel compaction r={r:.3f} @ density {weight_density}"
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=list(CELLS), required=True)
+    ap.add_argument("--out", default="perf_results.jsonl")
+    args = ap.parse_args()
+    arch, shape, steps = CELLS[args.cell]
+    print(f"=== cell {args.cell}: {arch} × {shape} (single-pod 16x16) ===")
+    base = None
+    for name, ov in steps:
+        rec = corrected_terms(arch, shape, ov)
+        if base is None:
+            base = rec
+        line = (
+            f"{name:26s} comp={rec['compute_s']*1e3:9.2f}ms "
+            f"mem={rec['memory_s']*1e3:9.2f}ms coll={rec['collective_s']*1e3:9.2f}ms "
+            f"dom={rec['dominant'][:-2]:10s} frac={rec['roofline_fraction']:.3f} "
+            f"useful={rec['useful']:.2%}"
+        )
+        print(line, flush=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps({"cell": args.cell, "arch": arch, "shape": shape,
+                                "step": name, **{k: v for k, v in rec.items()}}) + "\n")
+    if args.cell == "C":
+        rec = phantom_kernel_analytic(arch, shape, rec)
+        print(
+            f"{'phantom_kernel(analytic)':26s} comp={rec['compute_s']*1e3:9.2f}ms "
+            f"mem={rec['memory_s']*1e3:9.2f}ms coll={rec['collective_s']*1e3:9.2f}ms "
+            f"dom={rec['dominant'][:-2]:10s} frac={rec['roofline_fraction']:.3f} "
+            f"[{rec['note']}]",
+            flush=True,
+        )
+        with open(args.out, "a") as f:
+            f.write(json.dumps({"cell": "C", "arch": arch, "shape": shape,
+                                "step": "phantom_kernel_analytic",
+                                **{k: v for k, v in rec.items()}}) + "\n")
+
+
+if __name__ == "__main__":
+    main()

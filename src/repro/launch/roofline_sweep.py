@@ -1,0 +1,151 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Corrected roofline sweep (§Roofline).
+
+XLA's ``cost_analysis`` counts a ``while``-loop (scan-over-layers) body ONCE,
+not × trip-count — the raw dry-run numbers therefore undercount FLOPs/bytes/
+collectives by ~n_layers.  This sweep derives exact per-layer costs by
+compiling each cell UNROLLED at two depths (L1, L2 = 2·L1; depths are
+family-aware so hybrids keep whole shared-attention segments) and
+extrapolating linearly:
+
+  per_layer = (cost(L2) − cost(L1)) / (L2 − L1)
+  corrected = cost(L1) + (L_full − L1) · per_layer
+
+Memory residency still comes from the full-depth scanned compile (scan
+reuses layer buffers — that *is* the real residency).  Output:
+roofline_corrected.jsonl, one record per (arch × shape) on the single-pod
+mesh (per assignment the roofline table is single-pod only).
+
+  PYTHONPATH=src python -m repro.launch.roofline_sweep [--arch A --shape S]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs, roofline
+from repro.configs import shapes as shp
+from repro.launch.dryrun import build_step
+from repro.launch.mesh import make_production_mesh
+
+
+def _depths(cfg):
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every or 1
+        return k, 2 * k
+    return 1, 2
+
+
+def _reduced(cfg, L):
+    kw = {"n_layers": L, "scan_layers": False}
+    if cfg.family == "encdec":
+        kw["enc_layers"] = L
+    return dataclasses.replace(cfg, **kw)
+
+
+def _cell_costs(arch, shape, mesh, cfg):
+    fn, args = build_step(arch, shape, mesh, cfg_override=cfg)
+    compiled = fn.lower(*args).compile()
+    ca = compiled.cost_analysis()
+    coll = roofline.collective_bytes(compiled.as_text())
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        coll,
+    )
+
+
+def run_cell(arch: str, shape: str) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = configs.get_config(arch)
+    l1, l2 = _depths(cfg)
+    l_full = cfg.n_layers
+    with mesh:
+        f1, b1, c1 = _cell_costs(arch, shape, mesh, _reduced(cfg, l1))
+        f2, b2, c2 = _cell_costs(arch, shape, mesh, _reduced(cfg, l2))
+    scale = (l_full - l1) / (l2 - l1)
+    flops = f1 + (f2 - f1) * scale
+    byts = b1 + (b2 - b1) * scale
+    coll = {k: c1[k] + (c2[k] - c1[k]) * scale for k in c1}
+    coll_total = sum(v * (2 if k == "all-reduce" else 1) for k, v in coll.items())
+
+    hw = roofline.HW
+    compute_s = flops / hw["peak_flops_bf16"]
+    memory_s = byts / hw["hbm_bw"]
+    collective_s = coll_total / hw["link_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = roofline.model_flops(cfg, shp.SHAPES[shape])
+    chips = mesh.size
+    return {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "16x16",
+        "ok": True,
+        "chips": chips,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": byts,
+        "collective_bytes_per_chip": coll_total,
+        "collective_breakdown": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "model_flops_ratio": mf / (flops * chips) if flops else 0.0,
+        "roofline_fraction": compute_s / max(terms.values()) if max(terms.values()) else 0.0,
+        "elapsed_s": round(time.time() - t0, 1),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=list(shp.SHAPES))
+    ap.add_argument("--out", default="roofline_corrected.jsonl")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    cells = (
+        [(args.arch, args.shape)]
+        if args.arch
+        else [(a, s) for a in configs.ARCHS for s in configs.shape_grid(a)]
+    )
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            done = {
+                (r["arch"], r["shape"]) for r in map(json.loads, f) if r.get("ok")
+            }
+    for arch, shape in cells:
+        if (arch, shape) in done:
+            print(f"[SKIP] {arch} × {shape}", flush=True)
+            continue
+        try:
+            rec = run_cell(arch, shape)
+            print(
+                f"[OK]   {arch:22s} {shape:12s} "
+                f"comp={rec['compute_s']*1e3:9.2f}ms mem={rec['memory_s']*1e3:9.2f}ms "
+                f"coll={rec['collective_s']*1e3:9.2f}ms dom={rec['dominant']:10s} "
+                f"useful={rec['model_flops_ratio']:.2%} "
+                f"frac={rec['roofline_fraction']:.3f}",
+                flush=True,
+            )
+        except Exception as e:
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+            print(f"[FAIL] {arch} × {shape}: {e}", flush=True)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm_360m \
+      --steps 50 --batch 8 --seq 256 [--smoke] [--ckpt-dir /tmp/ckpt]
+
+On this CPU container use ``--smoke`` (reduced config).  On a real cluster
+the same driver runs under the production mesh (--mesh single|multi).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro import configs, optim
+from repro.data import DataConfig, SyntheticTokens
+from repro.models.registry import build
+from repro.train import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm_360m", choices=configs.ARCHS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"], default="none")
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
+    model = build(cfg)
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    data = SyntheticTokens(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
+    )
+    opt_cfg = optim.AdamWConfig(
+        lr=args.lr, warmup_steps=max(2, args.steps // 10), total_steps=args.steps
+    )
+    trainer = Trainer(
+        model,
+        data,
+        opt_cfg,
+        TrainConfig(micro_batches=args.micro_batches, ckpt_every=args.ckpt_every),
+        mesh=mesh,
+        ckpt_dir=args.ckpt_dir,
+    )
+    params, opt_state = trainer.init_state()
+    params, opt_state = trainer.maybe_restore(params, opt_state)
+    params, opt_state = trainer.run(params, opt_state, args.steps)
+    first, last = trainer.history[0], trainer.history[-1]
+    print(
+        f"steps {first['step']}..{last['step']}  "
+        f"loss {first['loss']:.4f} -> {last['loss']:.4f}  "
+        f"stragglers={trainer.straggler_events}"
+    )
+
+
+if __name__ == "__main__":
+    main()

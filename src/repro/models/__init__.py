@@ -1,0 +1,1 @@
+"""Model zoo: pure-JAX pytree models for the assigned architectures."""

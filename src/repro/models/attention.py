@@ -1,0 +1,215 @@
+"""Grouped-query attention with RoPE / M-RoPE and a KV cache.
+
+Supports the assigned archs' attention variants:
+  * GQA with any (n_heads, n_kv_heads) ratio, optional QKV bias (qwen2),
+  * rotary embeddings with configurable theta,
+  * M-RoPE (qwen2-vl): the rotary half-dim is split into (t, h, w) sections,
+    each rotated by its own position stream (text default: t=h=w=pos),
+  * causal training attention and single-step decode against a cache,
+  * cross-attention (seamless-m4t decoder) via explicit kv inputs.
+
+The KV cache layout is ``[B, S_max, n_kv, hd]``; decode shapes shard S_max
+over the model axis (sequence parallelism) — see parallel/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, shard_act
+from .layers import linear, linear_spec
+
+__all__ = [
+    "attention_spec",
+    "rope",
+    "mrope",
+    "attention",
+    "decode_attention",
+    "init_cache",
+]
+
+
+def attention_spec(cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    spec = {
+        "wq": linear_spec(d, nq * hd, "embed", "kv", bias=cfg.qkv_bias),
+        "wk": linear_spec(d, nkv * hd, "embed", "kv", bias=cfg.qkv_bias),
+        "wv": linear_spec(d, nkv * hd, "embed", "kv", bias=cfg.qkv_bias),
+        # o-proj is Phantom-eligible (DESIGN.md §6)
+        "wo": linear_spec(nq * hd, d, "kv", "embed", phantom=cfg.phantom),
+    }
+    return spec
+
+
+def _rotate_half(x):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def rope(x, positions, theta: float):
+    """x: [B, S, H, D]; positions: [B, S] int32."""
+    d2 = x.shape[-1] // 2
+    freqs = theta ** (-jnp.arange(0, d2, dtype=jnp.float32) / d2)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, d2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.concatenate([cos, cos], axis=-1).astype(x.dtype)
+    sin = jnp.concatenate([sin, sin], axis=-1).astype(x.dtype)
+    return x * cos + _rotate_half(x) * sin
+
+
+def mrope(x, positions3, theta: float, sections: tuple[int, ...]):
+    """Multimodal RoPE (qwen2-vl): ``positions3`` [3, B, S] — the (t, h, w)
+    position streams; the rotary half-dim is partitioned into ``sections``
+    (which must sum to D/2), section ``i`` rotated by stream ``i``."""
+    d2 = x.shape[-1] // 2
+    assert sum(sections) == d2, (sections, d2)
+    freqs = theta ** (-jnp.arange(0, d2, dtype=jnp.float32) / d2)
+    ang_each = positions3[..., None].astype(jnp.float32) * freqs  # [3, B, S, d2]
+    # Select, per frequency index, which position stream rotates it.
+    sel = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=d2
+    )
+    idx = jnp.broadcast_to(sel[None, None, None, :], (1, *ang_each.shape[1:3], d2))
+    ang = jnp.take_along_axis(ang_each, idx, axis=0)[0]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.concatenate([cos, cos], axis=-1).astype(x.dtype)
+    sin = jnp.concatenate([sin, sin], axis=-1).astype(x.dtype)
+    return x * cos + _rotate_half(x) * sin
+
+
+def _apply_rope(q, k, positions, cfg: ModelConfig):
+    if cfg.mrope_sections:
+        if positions.ndim == 2:  # text-only: t = h = w = pos
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        q = mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: [B,S,Hq,D], k/v: [B,T,Hkv,D] → [B,S,Hq,D].  GQA via head groups."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, hq, d)
+
+
+def _sdpa_chunked(q, k, v, cfg: ModelConfig, causal: bool, chunk: int = 1024):
+    """Flash-style online-softmax attention: scans KV in chunks with running
+    (max, denom, acc) so the [S, T] logits tensor is never materialised —
+    HBM traffic drops from O(S·T) to O(S + T) per head (beyond-paper §Perf
+    optimization; numerically matches `_sdpa` to fp32 softmax accuracy)."""
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (t + pad) // chunk
+    qg = (q.reshape(b, s, hkv, g, d).astype(jnp.float32)) / jnp.sqrt(d)
+    kc = k.reshape(b, nc, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nc) * chunk
+    qpos = jnp.arange(s)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, start = inp
+        lg = jnp.einsum("bskgd,btkd->bkgst", qg, k_c.astype(jnp.float32))
+        kpos = start + jnp.arange(chunk)
+        valid = kpos < t
+        keep = valid[None, :] & (
+            (kpos[None, :] <= qpos[:, None]) if causal else valid[None, :]
+        )
+        lg = jnp.where(keep[None, None, None], lg, -jnp.inf)
+        m_new = jnp.maximum(m, lg.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(lg - m_new[..., None])
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p, v_c.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, s), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, hq, d).astype(q.dtype)
+
+
+def attention(
+    p,
+    x,
+    cfg: ModelConfig,
+    positions,
+    *,
+    kv_input=None,  # cross-attention source (enc-dec)
+    causal: bool = True,
+):
+    b, s, _ = x.shape
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = linear(p["wq"], x, cfg).reshape(b, s, nq, hd)
+    src = x if kv_input is None else kv_input
+    t = src.shape[1]
+    k = linear(p["wk"], src, cfg).reshape(b, t, nkv, hd)
+    v = linear(p["wv"], src, cfg).reshape(b, t, nkv, hd)
+    if kv_input is None:  # self-attention: rotary
+        q, k = _apply_rope(q, k, positions, cfg)
+    q = shard_act(q, ("batch", "seq", "heads", None))
+    k = shard_act(k, ("batch", "seq", "kv_heads", None))
+    if cfg.attn_impl == "chunked":
+        o = _sdpa_chunked(q, k, v, cfg, causal=causal and kv_input is None,
+                          chunk=cfg.attn_chunk)
+    else:
+        mask = None
+        if causal and kv_input is None:
+            mask = (jnp.arange(t)[None, :] <= jnp.arange(s)[:, None])[
+                None, None, None, :, :
+            ]
+        o = _sdpa(q, k, v, mask, cfg)
+    return linear(p["wo"], o.reshape(b, s, nq * hd), cfg, cfg.phantom)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.dtype()
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_attention(p, x, cache, index, cfg: ModelConfig):
+    """One-token decode: ``x`` [B, 1, D]; ``cache`` k/v [B, S_max, nkv, hd];
+    ``index`` int32 scalar or [B] vector — per-slot write position (= number
+    of tokens already cached; vector form supports continuous batching)."""
+    b, _, _ = x.shape
+    hd, nq, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    index = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (b,))
+    q = linear(p["wq"], x, cfg).reshape(b, 1, nq, hd)
+    k = linear(p["wk"], x, cfg).reshape(b, 1, nkv, hd)
+    v = linear(p["wv"], x, cfg).reshape(b, 1, nkv, hd)
+    pos = index[:, None]
+    q, k = _apply_rope(q, k, pos, cfg)
+    rows = jnp.arange(b)
+    ck = cache["k"].at[rows, index].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[rows, index].set(v[:, 0].astype(cache["v"].dtype))
+    t = ck.shape[1]
+    mask = (jnp.arange(t)[None, :] <= index[:, None])[:, None, None, None, :]
+    o = _sdpa(q, ck, cv, mask, cfg)
+    y = linear(p["wo"], o.reshape(b, 1, nq * hd), cfg, cfg.phantom)
+    return y, {"k": ck, "v": cv}

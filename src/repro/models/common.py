@@ -1,0 +1,247 @@
+"""Model substrate: parameter specs, logical-axis sharding, config.
+
+Pure-JAX module system (no flax): every layer declares a tree of
+:class:`ParamSpec` leaves — shape, initializer, and *logical axes*.  One
+source of truth yields (a) the parameter pytree (``init_params``), (b) the
+logical-axes pytree (``axes_tree``), and (c) via
+:mod:`repro.parallel.sharding`, the mesh ``PartitionSpec`` tree used by pjit.
+
+Logical axis vocabulary (resolved by the rule table in parallel/sharding.py):
+  ``embed``     model width             → FSDP axis ('data') on weights
+  ``mlp``       FFN hidden              → TP axis ('model')
+  ``kv``        flattened heads×head_dim→ TP axis ('model')
+  ``vocab``     vocabulary              → TP axis ('model')
+  ``expert``    MoE expert count        → EP axis ('model')
+  ``layers``    stacked scan dim        → never sharded
+  ``conv``/``state``/…                  → replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.phantom_linear import PhantomConfig, PHANTOM_DISABLED
+
+__all__ = [
+    "ParamSpec",
+    "ModelConfig",
+    "init_params",
+    "axes_tree",
+    "stack_specs",
+    "dense_spec",
+    "shard_act",
+    "set_mesh_rules",
+    "get_mesh_rules",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # default: 1/sqrt(fan_in)
+
+    def initializer(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        # Fan-in = second-to-last dim (works for 2-D [in, out] and stacked
+        # 3-D expert weights [E, in, out]).
+        fan_in = self.shape[-2] if len(self.shape) > 1 else self.shape[-1]
+        scale = self.scale if self.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(key, spec_tree, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.initializer(k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    """ShapeDtypeStruct tree — used by the dry-run (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def stack_specs(spec_tree, n: int):
+    """Stack a per-layer spec tree along a leading ``layers`` scan dim."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n, *s.shape), ("layers", *s.axes), s.init, s.scale),
+        spec_tree,
+        is_leaf=is_spec,
+    )
+
+
+def dense_spec(d_in, d_out, in_ax="embed", out_ax="mlp", bias=False, scale=None):
+    spec = {"w": ParamSpec((d_in, d_out), (in_ax, out_ax), scale=scale)}
+    if bias:
+        spec["b"] = ParamSpec((d_out,), (out_ax,), init="zeros")
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Activation sharding constraints.  A launcher installs (mesh, rules); model
+# code calls ``shard_act(x, ('batch', 'seq', 'embed'))``.  Outside a mesh
+# context (unit tests, CPU) this is the identity.
+# --------------------------------------------------------------------------
+
+_MESH_RULES: list = [None]
+
+
+def set_mesh_rules(mesh, rules: dict | None):
+    """Install the active (mesh, logical-rule table); None disables."""
+    _MESH_RULES[0] = (mesh, rules) if mesh is not None else None
+
+
+def get_mesh_rules():
+    return _MESH_RULES[0]
+
+
+def shard_act(x: jnp.ndarray, logical_axes: tuple[Optional[str], ...]):
+    ctx = _MESH_RULES[0]
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = []
+    claimed: set = set()
+    for dim, ax in zip(x.shape, logical_axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if mesh_ax is None:
+            spec.append(None)
+            continue
+        flat = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        size = math.prod(mesh.shape[a] for a in flat)
+        # A mesh axis may shard at most one dim per tensor (first claim wins).
+        if dim % size == 0 and not (claimed & set(flat)):
+            spec.append(mesh_ax)
+            claimed.update(flat)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*spec))
+    )
+
+
+# --------------------------------------------------------------------------
+# The unified model configuration covering all assigned families.
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    mrope_sections: tuple[int, ...] = ()  # qwen2-vl M-RoPE (t, h, w) halves
+    act: str = "silu"
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0  # per-expert hidden (d_ff used when 0)
+    n_shared_experts: int = 0
+    moe_capacity_factor: float = 1.25
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    # hybrid (zamba2-style): shared attention block every k SSM blocks
+    hybrid_attn_every: int = 0
+    # enc-dec
+    enc_layers: int = 0
+    frontend: Optional[str] = None  # 'vision' | 'audio' stubs (per assignment)
+    # technique
+    phantom: PhantomConfig = PHANTOM_DISABLED
+    # numerics / implementation knobs (§Perf hillclimbing)
+    param_dtype: str = "float32"
+    act_dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    attn_impl: str = "naive"  # naive | chunked (flash-style online softmax)
+    attn_chunk: int = 1024  # KV tile for the chunked path
+    moe_groups: int = 0  # >0: route within token groups (shard-local dispatch)
+    embed_table_2d: bool = True  # False: vocab-only sharding (gather-friendly)
+    # long-context capability flag (sub-quadratic families)
+    subquadratic: bool = False
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def dtype(self):
+        return jnp.dtype(self.act_dtype)
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def param_count(self) -> int:
+        """Approximate N for MODEL_FLOPS = 6·N·D bookkeeping."""
+        d, v, L = self.d_model, self.vocab, self.n_layers
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+        if self.family == "moe":
+            ff = 3 * d * (self.moe_d_ff or self.d_ff) * self.n_experts
+        else:
+            ff = 3 * d * self.d_ff if self.d_ff else 0
+        ssm = 0
+        if self.family in ("ssm", "hybrid"):
+            di = self.d_inner
+            ssm = d * 2 * di + di * d + di * (2 * self.ssm_groups * self.ssm_state)
+        if self.family == "hybrid":
+            # The attention+MLP block is a single shared weight copy (zamba2).
+            per_layer = ssm
+            shared = attn + ff
+        else:
+            per_layer = ff + (attn if self.family != "ssm" else 0) + ssm
+            shared = 0
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        layers = L + (self.enc_layers or 0)
+        return per_layer * layers + shared + emb
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (experts scaled by top_k / n_experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        ff_all = 3 * d * (self.moe_d_ff or self.d_ff) * self.n_experts
+        ff_act = 3 * d * (self.moe_d_ff or self.d_ff) * max(self.top_k, 1)
+        return self.param_count() - L * (ff_all - ff_act)

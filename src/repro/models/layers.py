@@ -1,0 +1,102 @@
+"""Shared layers: RMSNorm, embeddings, (Phantom-aware) linears, gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.phantom_linear import PhantomConfig, phantom_linear
+from .common import ModelConfig, ParamSpec, dense_spec, shard_act
+
+__all__ = [
+    "rmsnorm_spec",
+    "rmsnorm",
+    "embed_spec",
+    "embed",
+    "unembed",
+    "linear_spec",
+    "linear",
+    "mlp_spec",
+    "mlp",
+    "ACT",
+]
+
+ACT = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "none": lambda x: x,
+}
+
+
+def rmsnorm_spec(d):
+    return {"scale": ParamSpec((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"].astype(dt)
+
+
+def embed_spec(cfg: ModelConfig):
+    # 2-D (vocab×FSDP) sharding is densest at rest but makes the token gather
+    # reshard through a full rematerialisation (XLA SPMD limitation observed
+    # in the dry-run); ``embed_table_2d=False`` shards vocab only (§Perf).
+    axes = ("vocab", "embed") if cfg.embed_table_2d else ("vocab", None)
+    return {"table": ParamSpec((cfg.vocab, cfg.d_model), axes, scale=0.02)}
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    x = p["table"].astype(cfg.dtype())[tokens]
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def unembed(p, x, cfg: ModelConfig):
+    """LM head; with tied embeddings, reuses the embed table."""
+    logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(cfg.dtype()))
+    return shard_act(logits, ("batch", "seq", "vocab"))
+
+
+def linear_spec(d_in, d_out, in_ax, out_ax, bias=False, phantom: PhantomConfig | None = None):
+    spec = dense_spec(d_in, d_out, in_ax, out_ax, bias=bias)
+    if phantom is not None and phantom.enabled:
+        # Element-expanded block mask stored with the weight (non-trainable in
+        # spirit; the optimizer sees zero gradient through the multiply).
+        spec["wmask"] = ParamSpec((d_in, d_out), (in_ax, out_ax), init="ones")
+    return spec
+
+
+def linear(p, x, cfg: ModelConfig, phantom: PhantomConfig | None = None, prepared=None):
+    dt = cfg.dtype()
+    w = p["w"].astype(dt)
+    b = p.get("b")
+    if phantom is not None and phantom.enabled:
+        return phantom_linear(
+            x,
+            w,
+            p.get("wmask", None) if p.get("wmask") is None else p["wmask"].astype(dt),
+            phantom,
+            prepared=prepared,
+            bias=None if b is None else b.astype(dt),
+        )
+    y = jnp.einsum("...k,kn->...n", x, w)
+    return y if b is None else y + b.astype(dt)
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: int | None = None):
+    """SwiGLU MLP; gate/up/down are Phantom-eligible (DESIGN.md §6)."""
+    ff = d_ff or cfg.d_ff
+    ph = cfg.phantom
+    return {
+        "gate": linear_spec(cfg.d_model, ff, "embed", "mlp", phantom=ph),
+        "up": linear_spec(cfg.d_model, ff, "embed", "mlp", phantom=ph),
+        "down": linear_spec(ff, cfg.d_model, "mlp", "embed", phantom=ph),
+    }
+
+
+def mlp(p, x, cfg: ModelConfig):
+    ph = cfg.phantom
+    h = ACT[cfg.act](linear(p["gate"], x, cfg, ph)) * linear(p["up"], x, cfg, ph)
+    h = shard_act(h, ("batch", "seq", "mlp"))
+    return linear(p["down"], h, cfg, ph)

@@ -1,0 +1,159 @@
+"""Top-k routed mixture-of-experts with expert parallelism.
+
+Dispatch is the sort-based, capacity-bounded formulation (TPU-friendly —
+static shapes, no [T, E, C] one-hot): assignments are sorted by expert id,
+ranked within expert by a cumulative count, and scattered into a dense
+``[E, C, d]`` buffer that is batch-matmul'd against the stacked expert
+weights (the ``expert`` axis shards over the model axis = EP; XLA inserts the
+token all-to-all at the sharding boundary).  Tokens beyond capacity are
+dropped (standard), tracked by ``dropped_frac`` in the aux outputs.
+
+Phantom mapping (DESIGN.md §6): the paper's *inter-core* balancer dispatches
+the densest filters to the earliest-finishing cores using mask popcounts.
+For MoE serving with Phantom-pruned experts the identical policy applies at
+expert granularity: ``expert_permutation`` orders experts densest-first LPT
+across EP shards so per-shard effectual work is even.  At routing time the
+standard load-balance auxiliary loss plays the dynamic role.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import ModelConfig, ParamSpec, shard_act
+from .layers import ACT
+
+__all__ = ["moe_spec", "moe", "expert_permutation", "load_balance_loss"]
+
+
+def moe_spec(cfg: ModelConfig):
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.n_experts
+    spec = {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "gate": ParamSpec((e, d, ff), ("expert", "embed", "mlp")),
+        "up": ParamSpec((e, d, ff), ("expert", "embed", "mlp")),
+        "down": ParamSpec((e, ff, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        sff = ff * cfg.n_shared_experts
+        spec["shared"] = {
+            "gate": ParamSpec((d, sff), ("embed", "mlp")),
+            "up": ParamSpec((d, sff), ("embed", "mlp")),
+            "down": ParamSpec((sff, d), ("mlp", "embed")),
+        }
+    return spec
+
+
+def load_balance_loss(probs, expert_ids, n_experts: int):
+    """Switch-style auxiliary loss: E · Σ_e f_e · p̄_e."""
+    one_hot = jax.nn.one_hot(expert_ids[..., 0], n_experts, dtype=probs.dtype)
+    f = one_hot.mean(axis=0)
+    p = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+def _route_tokens(p, xt, cfg: ModelConfig, cap: int):
+    """Dispatch/compute/combine for one token group ``xt`` [T, d]."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    dt = xt.dtype
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_ids = jax.lax.top_k(probs, k)  # [t, k]
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Sort the t·k assignments by expert id; rank within expert = position in
+    # the sorted run minus the run start (computed from per-expert counts).
+    flat_ids = expert_ids.reshape(-1)  # [t*k]
+    order = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[order]
+    counts = jnp.bincount(flat_ids, length=e)  # tokens per expert
+    run_start = jnp.cumsum(counts) - counts  # [e]
+    rank_sorted = jnp.arange(t * k) - run_start[sorted_ids]
+    keep = rank_sorted < cap
+    # Dropped assignments route to a dedicated dead slot (index e·cap) so
+    # they can never clobber a live slot.
+    slot_sorted = jnp.where(keep, sorted_ids * cap + rank_sorted, e * cap)
+
+    tok_sorted = order // k
+    buf = jnp.zeros((e * cap + 1, d), dt)
+    buf = buf.at[slot_sorted].set(xt[tok_sorted].astype(dt))
+    buf = buf[: e * cap].reshape(e, cap, d)
+
+    # Expert FFN: batched matmul over the (EP-sharded) expert dim.
+    h = ACT[cfg.act](jnp.einsum("ecd,edf->ecf", buf, p["gate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["up"].astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", h, p["down"].astype(dt)).reshape(e * cap, d)
+
+    # Combine: scatter expert outputs back to tokens, weighted by gates
+    # (dead-slot reads are gated to zero).
+    out = jnp.concatenate([out, jnp.zeros((1, d), out.dtype)], axis=0)
+    flat_gates = gates.reshape(-1)[order] * keep
+    y = jnp.zeros((t, d), dt)
+    y = y.at[tok_sorted].add(out[slot_sorted] * flat_gates[:, None].astype(dt))
+    aux = {
+        "lb_loss": load_balance_loss(probs, expert_ids, e),
+        "dropped_frac": 1.0 - keep.mean(),
+    }
+    return y, aux
+
+
+def moe(p, x, cfg: ModelConfig, *, capacity_factor: float | None = None):
+    """x: [B, S, d] → (y, aux) with aux = {'lb_loss', 'dropped_frac'}.
+
+    With ``cfg.moe_groups = G > 1`` tokens are routed within G independent
+    groups (aligned to the data shards): the sort/scatter dispatch stays
+    shard-local and only the [G, E, C, d] buffer crosses the EP axis — the
+    §Perf fix for the global-dispatch collective blow-up.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    cf = capacity_factor if capacity_factor is not None else cfg.moe_capacity_factor
+    g = max(1, cfg.moe_groups)
+    if t % g:
+        g = 1
+    tg = t // g
+    cap = max(1, int(np.ceil(tg * k / e * cf)))
+
+    # NOTE (§Perf cell B): an explicitly-batched variant with a forced
+    # "return leg" resharding constraint on the expert outputs was tried and
+    # REFUTED — XLA responded with full-buffer all-gathers (~8× worse than
+    # letting the partitioner place the combine for the vmapped form).
+    xt = shard_act(x.reshape(g, tg, d), ("batch", None, "embed"))
+    route = lambda xg: _route_tokens(p, xg, cfg, cap)
+    if g > 1:
+        y, aux = jax.vmap(route)(xt)
+        aux = jax.tree.map(lambda a: a.mean(), aux)
+    else:
+        y, aux = route(xt[0])
+        y = y[None]
+    y = shard_act(y, ("batch", None, "embed")).reshape(t, d)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        xf = x.reshape(t, d)
+        dt = x.dtype
+        hs = ACT[cfg.act](xf @ sp["gate"].astype(dt)) * (xf @ sp["up"].astype(dt))
+        y = y + hs @ sp["down"].astype(dt)
+    return y.reshape(b, s, d), aux
+
+
+def expert_permutation(expert_masks: np.ndarray, n_shards: int) -> np.ndarray:
+    """Inter-core balancing for Phantom-pruned experts (§4.3.1 analogue):
+    order experts densest-first onto the least-loaded EP shard.
+
+    ``expert_masks``: bool [E, ...] weight masks; returns a permutation of
+    experts (apply to the stacked expert weights before sharding)."""
+    from repro.core.blocksparse import balance_columns
+
+    e = expert_masks.shape[0]
+    dens = expert_masks.reshape(e, -1).sum(1)
+    # balance_columns works on [K, N] column masks; synthesise one.
+    col = np.zeros((int(dens.max()) + 1, e), dtype=bool)
+    for i, d_ in enumerate(dens):
+        col[: int(d_), i] = True
+    return balance_columns(col, n_shards)

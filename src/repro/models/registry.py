@@ -1,0 +1,69 @@
+"""Unified model interface: build(cfg) → Model(init/loss/forward/decode…).
+
+Every family exposes the same callables so the trainer, server, dry-run and
+benchmarks are family-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec as encdec_mod
+from . import transformer as tf_mod
+from .common import ModelConfig, abstract_params, axes_tree, init_params
+
+__all__ = ["Model", "build"]
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    spec: Any
+    loss: Callable  # (params, batch) -> (loss, metrics)
+    forward: Callable  # (params, batch) -> logits  (prefill / scoring)
+    init_cache: Callable  # (batch, max_len) -> cache
+    decode_step: Callable  # (params, cache, tokens, index) -> (logits, cache)
+
+    def init(self, key, dtype=None):
+        return init_params(key, self.spec, dtype or self.cfg.pdtype())
+
+    def abstract_params(self, dtype=None):
+        return abstract_params(self.spec, dtype or self.cfg.pdtype())
+
+    def axes(self):
+        return axes_tree(self.spec)
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        spec = encdec_mod.encdec_spec(cfg)
+        return Model(
+            cfg=cfg,
+            spec=spec,
+            loss=lambda p, b: encdec_mod.encdec_loss(p, b, cfg),
+            forward=lambda p, b: encdec_mod.encdec_forward(
+                p, b["frontend_embeds"], b["tokens"], cfg
+            )[0],
+            init_cache=lambda batch, max_len, enc_len=None: encdec_mod.init_encdec_cache(
+                cfg, batch, max_len, enc_len or max_len
+            ),
+            decode_step=lambda p, c, t, i: encdec_mod.encdec_decode_step(p, c, t, i, cfg),
+        )
+    spec = tf_mod.lm_spec(cfg)
+    return Model(
+        cfg=cfg,
+        spec=spec,
+        loss=lambda p, b: tf_mod.lm_loss(p, b, cfg),
+        forward=lambda p, b: tf_mod.lm_forward(
+            p,
+            b["tokens"],
+            cfg,
+            positions=b.get("positions"),
+            frontend_embeds=b.get("frontend_embeds"),
+        )[0],
+        init_cache=lambda batch, max_len: tf_mod.init_lm_cache(cfg, batch, max_len),
+        decode_step=lambda p, c, t, i: tf_mod.lm_decode_step(p, c, t, i, cfg),
+    )

@@ -1,0 +1,196 @@
+"""Mamba2 (state-space duality / SSD) block — chunked scan + decode step.
+
+Implements the SSD algorithm of arXiv:2405.21060: the sequence is split into
+chunks; intra-chunk terms use the quadratic (attention-like) form, inter-
+chunk terms propagate the [heads, head_dim, state] recurrent state with
+exponential decay.  Sub-quadratic in sequence length (this is why
+mamba2-2.7b / zamba2-2.7b run the ``long_500k`` shape).
+
+Decode is the O(1) recurrence: ``h ← h·exp(dtA) + dt·B⊗x``, plus a rolling
+causal-conv state.  The SSD scan itself is *not* Phantom-sparsified
+(sequential state recurrence has no zero-skippable GEMM tiles — DESIGN.md
+§6); the in/out projections are.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, ParamSpec, shard_act
+from .layers import linear, linear_spec
+
+__all__ = ["ssm_spec", "ssm", "ssm_decode", "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    h, p = cfg.ssm_heads, cfg.ssm_head_dim
+    d_xbc = di + 2 * g * n
+    return di, g, n, h, p, d_xbc
+
+
+def ssm_spec(cfg: ModelConfig):
+    di, g, n, h, p, d_xbc = _dims(cfg)
+    d_in_proj = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    return {
+        "in_proj": linear_spec(cfg.d_model, d_in_proj, "embed", "mlp", phantom=cfg.phantom),
+        "conv_w": ParamSpec((cfg.ssm_conv, d_xbc), (None, "mlp")),
+        "conv_b": ParamSpec((d_xbc,), ("mlp",), init="zeros"),
+        "A_log": ParamSpec((h,), (None,), init="zeros"),
+        "D": ParamSpec((h,), (None,), init="ones"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+        "norm": ParamSpec((di,), ("mlp",), init="ones"),
+        "out_proj": linear_spec(di, cfg.d_model, "mlp", "embed", phantom=cfg.phantom),
+    }
+
+
+def _split(zxbcdt, cfg: ModelConfig):
+    di, g, n, h, p, _ = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, state=None):
+    """Depthwise causal conv, width K.  ``state``: [b, K-1, C] carry for
+    decode; training pads with zeros."""
+    k = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * conv_w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + conv_b[None, None, :]), xp[:, -(k - 1) :, :]
+
+
+def _segsum(x):
+    """[..., l] → [..., l, l] lower-triangular segment sums (−inf above)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _ssd_scan(x, dA, b_mat, c_mat, chunk: int):
+    """SSD: x [b,s,h,p], dA [b,s,h], B/C [b,s,h,n] (already group-broadcast).
+
+    Returns y [b,s,h,p] and the final state [b,h,p,n].  All decay math in
+    fp32 for stability.
+    """
+    bsz, s0, h, p = x.shape
+    n = b_mat.shape[-1]
+    pad = (-s0) % chunk
+    if pad:  # causal: zero-padded tail never influences earlier outputs
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        x, dA, b_mat, c_mat = zp(x), zp(dA), zp(b_mat), zp(c_mat)
+    s = s0 + pad
+    nc = s // chunk
+    r = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:])
+    xc, bc, cc = r(x), r(b_mat), r(c_mat)
+    dac = r(dA).transpose(0, 3, 1, 2).astype(jnp.float32)  # [b,h,c,l]
+    da_cum = jnp.cumsum(dac, axis=-1)
+
+    # Intra-chunk (quadratic) term.
+    ell = jnp.exp(_segsum(dac))  # [b,h,c,l,l]
+    y_diag = jnp.einsum(
+        "bclhn,bcshn,bhcls,bcshp->bclhp", cc, bc, ell.astype(x.dtype), xc
+    )
+
+    # Chunk-final states.
+    decay_states = jnp.exp(da_cum[..., -1:] - da_cum)  # [b,h,c,l]
+    states = jnp.einsum(
+        "bclhn,bhcl,bclhp->bchpn", bc, decay_states.astype(x.dtype), xc
+    )
+
+    # Inter-chunk recurrence (scan over chunks — O(nc) sequential).
+    chunk_decay = jnp.exp(da_cum[..., -1])  # [b,h,c]
+
+    def step(carry, inp):
+        st, dec = inp  # st: [b,h,p,n], dec: [b,h]
+        new = carry * dec[..., None, None].astype(carry.dtype) + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = jnp.zeros((bsz, h, p, n), x.dtype)
+    final, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b,c,h,p,n]
+
+    state_decay = jnp.exp(da_cum)  # [b,h,c,l]
+    y_off = jnp.einsum(
+        "bclhn,bchpn,bhcl->bclhp", cc, prev_states, state_decay.astype(x.dtype)
+    )
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :s0]
+    return y, final
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    var = jnp.mean(y32 * y32, axis=-1, keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps)).astype(y.dtype) * scale.astype(y.dtype)
+
+
+def ssm(p, u, cfg: ModelConfig, chunk: int = 128):
+    """Training / prefill forward.  u: [b, s, d_model]."""
+    di, g, n, h, pd, _ = _dims(cfg)
+    bsz, s, _ = u.shape
+    chunk = min(chunk, s)
+    zxbcdt = linear(p["in_proj"], u, cfg, cfg.phantom)
+    z, xbc, dt = _split(zxbcdt, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"].astype(u.dtype), p["conv_b"].astype(u.dtype))
+    x, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+    x = shard_act(x.reshape(bsz, s, h, pd), ("batch", "seq", "heads", None))
+    rep = h // g
+    b_mat = jnp.repeat(b_mat.reshape(bsz, s, g, n), rep, axis=2)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, s, g, n), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # [h]
+    da = dt * a  # [b,s,h]
+    y, _ = _ssd_scan(x * dt.astype(x.dtype)[..., None], da, b_mat, c_mat, chunk)
+    y = y + x * p["D"].astype(x.dtype)[None, None, :, None]
+    y = _gated_norm(y.reshape(bsz, s, di), z, p["norm"], cfg.norm_eps)
+    return linear(p["out_proj"], y, cfg, cfg.phantom)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=None):
+    di, g, n, h, pd, d_xbc = _dims(cfg)
+    dt = dtype or cfg.dtype()
+    return {
+        "ssm": jnp.zeros((batch, h, pd, n), dt),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_xbc), dt),
+    }
+
+
+def ssm_decode(p, u, state, cfg: ModelConfig):
+    """One-token decode.  u: [b, 1, d_model]; state from init_ssm_state."""
+    di, g, n, h, pd, _ = _dims(cfg)
+    bsz = u.shape[0]
+    zxbcdt = linear(p["in_proj"], u, cfg, cfg.phantom)
+    z, xbc, dt = _split(zxbcdt, cfg)
+    xbc, conv_state = _causal_conv(
+        xbc, p["conv_w"].astype(u.dtype), p["conv_b"].astype(u.dtype), state["conv"]
+    )
+    x, b_mat, c_mat = jnp.split(xbc[:, 0], [di, di + g * n], axis=-1)
+    x = x.reshape(bsz, h, pd)
+    rep = h // g
+    b_mat = jnp.repeat(b_mat.reshape(bsz, g, n), rep, axis=1)
+    c_mat = jnp.repeat(c_mat.reshape(bsz, g, n), rep, axis=1)
+    dt1 = jax.nn.softplus(
+        dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # [b,h]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a).astype(x.dtype)  # [b,h]
+    upd = (x * dt1.astype(x.dtype)[..., None])[..., None] * b_mat[:, :, None, :]
+    new_ssm = state["ssm"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, c_mat)
+    y = y + x * p["D"].astype(x.dtype)[None, :, None]
+    y = _gated_norm(y.reshape(bsz, 1, di), z, p["norm"], cfg.norm_eps)
+    out = linear(p["out_proj"], y, cfg, cfg.phantom)
+    return out, {"ssm": new_ssm, "conv": conv_state}

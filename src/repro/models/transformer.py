@@ -1,0 +1,317 @@
+"""Decoder-only LM assembly for all decoder families.
+
+One spec/forward pair covers the four assigned decoder families:
+
+* ``dense``   — pre-norm attention + SwiGLU blocks (llama-style; optional
+  QKV bias / M-RoPE per config),
+* ``moe``     — attention + routed-expert FFN (:mod:`repro.models.moe`),
+* ``ssm``     — attention-free Mamba2 blocks (:mod:`repro.models.ssm`),
+* ``hybrid``  — Mamba2 backbone with a *shared* attention+MLP block applied
+  every ``hybrid_attn_every`` layers (zamba2-style weight sharing; each
+  application keeps its own KV cache).
+
+Layers are stacked and scanned (``jax.lax.scan``) so the lowered HLO is
+O(1) in depth; ``cfg.remat`` wraps the block in ``jax.checkpoint`` with the
+dots-saveable policy.  Forward returns ``(logits, aux)``; aux carries MoE
+load-balance loss / drop fractions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import ModelConfig, init_params, axes_tree, stack_specs, shard_act
+from .layers import embed, embed_spec, mlp, mlp_spec, rmsnorm, rmsnorm_spec, unembed
+
+__all__ = [
+    "lm_spec",
+    "lm_forward",
+    "lm_loss",
+    "init_lm_cache",
+    "lm_decode_step",
+]
+
+
+def _attn_block_spec(cfg: ModelConfig, ffn_kind: str):
+    spec = {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "attn": attn_mod.attention_spec(cfg),
+        "ln2": rmsnorm_spec(cfg.d_model),
+    }
+    spec["ffn"] = moe_mod.moe_spec(cfg) if ffn_kind == "moe" else mlp_spec(cfg)
+    return spec
+
+
+def _block_spec(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm"):
+        return _attn_block_spec(cfg, "mlp")
+    if cfg.family == "moe":
+        return _attn_block_spec(cfg, "moe")
+    if cfg.family in ("ssm", "hybrid"):
+        return {"ln": rmsnorm_spec(cfg.d_model), "ssm": ssm_mod.ssm_spec(cfg)}
+    raise ValueError(cfg.family)
+
+
+def lm_spec(cfg: ModelConfig):
+    spec = {
+        "embed": embed_spec(cfg),
+        "layers": stack_specs(_block_spec(cfg), cfg.n_layers),
+        "final_norm": rmsnorm_spec(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = embed_spec(cfg)  # same (vocab, d) layout
+    if cfg.family == "hybrid":
+        spec["shared"] = _attn_block_spec(cfg, "mlp")
+    return spec
+
+
+def _attn_mlp_block(p, x, cfg, positions):
+    x = x + attn_mod.attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg, positions)
+    x = x + mlp(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return shard_act(x, ("batch", "seq", "embed"))
+
+
+def _attn_moe_block(p, x, cfg, positions):
+    x = x + attn_mod.attention(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg, positions)
+    h, aux = moe_mod.moe(p["ffn"], rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return shard_act(x + h, ("batch", "seq", "embed")), aux
+
+
+def _ssm_block(p, x, cfg):
+    return shard_act(
+        x + ssm_mod.ssm(p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps), cfg),
+        ("batch", "seq", "embed"),
+    )
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat:
+        return fn
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+
+
+def _scan_blocks(stacked, x, cfg: ModelConfig, positions, block_kind: str):
+    """Scan a stack of homogeneous blocks; returns (x, summed aux)."""
+
+    def body(carry, layer_params):
+        x, lb = carry
+        if block_kind == "moe":
+            x, aux = _attn_moe_block(layer_params, x, cfg, positions)
+            lb = lb + aux["lb_loss"]
+        elif block_kind == "ssm":
+            x = _ssm_block(layer_params, x, cfg)
+        else:
+            x = _attn_mlp_block(layer_params, x, cfg, positions)
+        return (x, lb), None
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        (x, lb), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stacked)
+    else:
+        lb = jnp.zeros((), jnp.float32)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        for i in range(n):
+            (x, lb), _ = body((x, lb), jax.tree.map(lambda t: t[i], stacked))
+    return x, lb
+
+
+def lm_forward(
+    params,
+    tokens: jnp.ndarray,  # [B, S] int32
+    cfg: ModelConfig,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    frontend_embeds: Optional[jnp.ndarray] = None,
+):
+    """Causal forward over full sequences (training / prefill).
+
+    ``frontend_embeds`` [B, S_f, d] (vlm/audio stubs, per assignment):
+    precomputed patch/frame embeddings that *replace* the first S_f token
+    embeddings.
+    """
+    b, s = tokens.shape
+    x = embed(params["embed"], tokens, cfg)
+    if frontend_embeds is not None:
+        sf = frontend_embeds.shape[1]
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x[:, sf:]], axis=1)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    aux = {}
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every or cfg.n_layers
+        lb = jnp.zeros((), jnp.float32)
+        shared_block = _maybe_remat(
+            lambda p_, x_: _attn_mlp_block(p_, x_, cfg, positions), cfg
+        )
+        for seg_start in range(0, cfg.n_layers, k):
+            seg = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(
+                    t, seg_start, min(seg_start + k, cfg.n_layers), axis=0
+                ),
+                params["layers"],
+            )
+            x, _ = _scan_blocks(seg, x, cfg, positions, "ssm")
+            x = shared_block(params["shared"], x)
+        aux["lb_loss"] = lb
+    else:
+        kind = {"moe": "moe", "ssm": "ssm"}.get(cfg.family, "attn")
+        x, lb = _scan_blocks(params["layers"], x, cfg, positions, kind)
+        aux["lb_loss"] = lb
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x, cfg), aux
+
+
+def lm_loss(params, batch: dict, cfg: ModelConfig, lb_coef: float = 0.01):
+    """Next-token cross-entropy (+ MoE balance aux).  batch: tokens, labels,
+    and optional frontend_embeds / positions."""
+    logits, aux = lm_forward(
+        params,
+        batch["tokens"],
+        cfg,
+        positions=batch.get("positions"),
+        frontend_embeds=batch.get("frontend_embeds"),
+    )
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = -(ll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    total = loss + lb_coef * aux.get("lb_loss", 0.0)
+    return total, {"ce_loss": loss, "lb_loss": aux.get("lb_loss", 0.0)}
+
+
+# --------------------------------------------------------------------------
+# Decode (serving): stacked per-layer caches scanned alongside the params.
+# --------------------------------------------------------------------------
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv = attn_mod.init_cache(cfg, batch, max_len)
+        return {
+            "kv": jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (cfg.n_layers, *t.shape)).copy(),
+                kv,
+            )
+        }
+    if cfg.family == "ssm":
+        st = ssm_mod.init_ssm_state(cfg, batch)
+        return {
+            "ssm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (cfg.n_layers, *t.shape)).copy(),
+                st,
+            )
+        }
+    if cfg.family == "hybrid":
+        st = ssm_mod.init_ssm_state(cfg, batch)
+        n_shared = cfg.n_layers // (cfg.hybrid_attn_every or cfg.n_layers)
+        kv = attn_mod.init_cache(cfg, batch, max_len)
+        return {
+            "ssm": jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (cfg.n_layers, *t.shape)).copy(),
+                st,
+            ),
+            "kv": jax.tree.map(
+                lambda t: jnp.broadcast_to(t[None], (n_shared, *t.shape)).copy(), kv
+            ),
+        }
+    raise ValueError(cfg.family)
+
+
+def _decode_attn_block(p, x, kv, index, cfg):
+    h, kv = attn_mod.decode_attention(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), kv, index, cfg
+    )
+    x = x + h
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if "router" in p["ffn"]:
+        hf, _ = moe_mod.moe(p["ffn"], h2, cfg)
+    else:
+        hf = mlp(p["ffn"], h2, cfg)
+    return x + hf, kv
+
+
+def _scan_or_unroll(body, x, xs, cfg: ModelConfig):
+    """lax.scan over stacked (params, cache) or an unrolled python loop —
+    unrolled keeps XLA cost_analysis exact (scan bodies are counted once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        x, o = body(x, jax.tree.map(lambda t: t[i], xs))
+        outs.append(o)
+    return x, jax.tree.map(lambda *ts: jnp.stack(ts, 0), *outs)
+
+
+def lm_decode_step(params, cache, tokens, index, cfg: ModelConfig):
+    """One decode step.  tokens: [B, 1]; index: int32 scalar (cache fill)."""
+    x = embed(params["embed"], tokens, cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+
+        def body(x, inp):
+            p, kv = inp
+            x, kv = _decode_attn_block(p, x, kv, index, cfg)
+            return x, kv
+
+        x, new_kv = _scan_or_unroll(body, x, (params["layers"], cache["kv"]), cfg)
+        cache = {"kv": new_kv}
+    elif cfg.family == "ssm":
+
+        def body(x, inp):
+            p, st = inp
+            h, st = ssm_mod.ssm_decode(p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps), st, cfg)
+            return x + h, st
+
+        x, new_st = _scan_or_unroll(body, x, (params["layers"], cache["ssm"]), cfg)
+        cache = {"ssm": new_st}
+    else:  # hybrid
+        k = cfg.hybrid_attn_every or cfg.n_layers
+        new_ssm = []
+        new_kv = []
+        for si, seg_start in enumerate(range(0, cfg.n_layers, k)):
+            seg_p = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(
+                    t, seg_start, min(seg_start + k, cfg.n_layers), axis=0
+                ),
+                params["layers"],
+            )
+            seg_c = jax.tree.map(
+                lambda t: jax.lax.slice_in_dim(
+                    t, seg_start, min(seg_start + k, cfg.n_layers), axis=0
+                ),
+                cache["ssm"],
+            )
+
+            def body(x, inp):
+                p, st = inp
+                h, st = ssm_mod.ssm_decode(
+                    p["ssm"], rmsnorm(p["ln"], x, cfg.norm_eps), st, cfg
+                )
+                return x + h, st
+
+            x, seg_new = _scan_or_unroll(body, x, (seg_p, seg_c), cfg)
+            new_ssm.append(seg_new)
+            kv_i = jax.tree.map(lambda t: t[si], cache["kv"])
+            x, kv_i = _decode_attn_block(params["shared"], x, kv_i, index, cfg)
+            new_kv.append(kv_i)
+        cache = {
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm),
+            "kv": jax.tree.map(lambda *xs: jnp.stack(xs, 0), *new_kv),
+        }
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return unembed(head, x, cfg), cache

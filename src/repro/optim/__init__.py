@@ -1,0 +1,13 @@
+"""Optimizer substrate: AdamW, schedules, clipping, gradient compression."""
+from .adamw import AdamWConfig, init_opt_state, adamw_update, learning_rate
+from .compression import int8_compress, int8_decompress, compressed_psum_grads
+
+__all__ = [
+    "AdamWConfig",
+    "init_opt_state",
+    "adamw_update",
+    "learning_rate",
+    "int8_compress",
+    "int8_decompress",
+    "compressed_psum_grads",
+]

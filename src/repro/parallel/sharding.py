@@ -1,0 +1,168 @@
+"""Logical-axis sharding rules → mesh PartitionSpecs (DP/TP/EP/SP/FSDP).
+
+One rule table drives everything.  Each *logical* axis carries a priority
+list of mesh axes; per tensor, resolution walks the dims left→right and
+claims the first mesh axis that (a) is still unclaimed within that tensor
+and (b) divides the dim — so e.g. grok-1's 8 experts silently fall back from
+EP to replication while its 32768-wide FFN still takes the TP axis, and a
+batch of 1 (long_500k) falls back from DP to sequence sharding.  Fallbacks
+are *by construction*, not special cases, and the dry-run exercises all of
+them.
+
+Weight rules give 2-D sharding (FSDP over 'data' × TP over 'model') so even
+grok-1-314b fits per-chip HBM; activations shard batch over ('pod','data')
+and model-parallel dims over 'model'; decode KV caches shard their sequence
+dim over 'model' (sequence parallelism) since a single decode token cannot
+use TP on its own.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "PARAM_RULES",
+    "act_rules",
+    "param_pspecs",
+    "param_shardings",
+    "batch_pspecs",
+    "cache_pspecs",
+    "resolve_tensor",
+]
+
+# logical axis → priority list of mesh axes (first fit wins)
+PARAM_RULES: dict = {
+    "embed": ("data",),  # FSDP: weights gathered per layer, sharded at rest
+    "mlp": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "expert": ("model",),
+    "heads": ("model",),
+    "layers": (),
+    None: (),
+}
+
+ACT_RULES: dict = {
+    "batch": (("pod", "data"), ("data",)),
+    "seq": (),
+    "embed": (),
+    "mlp": ("model",),
+    "kv": ("model",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": (),
+    "expert": ("model",),
+    "kv_seq": ("model",),
+    None: (),
+}
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if isinstance(ax, tuple):
+        return math.prod(mesh.shape[a] for a in ax)
+    return mesh.shape[ax]
+
+
+def resolve_tensor(shape, axes, mesh: Mesh, rules: dict) -> P:
+    """Per-tensor resolution with divisibility + claimed-axis fallback."""
+    claimed: set = set()
+    spec = []
+    for dim, ax in zip(shape, axes):
+        choice = None
+        for cand in rules.get(ax, ()):  # priority list
+            flat = cand if isinstance(cand, tuple) else (cand,)
+            if any(a in claimed for a in flat):
+                continue
+            if all(a in mesh.shape for a in flat) and dim % _axis_size(mesh, cand) == 0:
+                choice = cand
+                claimed.update(flat)
+                break
+        spec.append(choice)
+    return P(*spec)
+
+
+def act_rules(mesh: Mesh) -> dict:
+    """Flat rules for shard_act (first applicable candidate per call site)."""
+    out = {}
+    for k, cands in ACT_RULES.items():
+        out[k] = None
+        for cand in cands:
+            flat = cand if isinstance(cand, tuple) else (cand,)
+            if all(a in mesh.shape for a in flat):
+                out[k] = cand
+                break
+    return out
+
+
+def param_pspecs(abstract_params, axes_tree, mesh: Mesh) -> dict:
+    """PartitionSpec tree aligned with the parameter pytree."""
+    return jax.tree.map(
+        lambda a, ax: resolve_tensor(a.shape, ax, mesh, PARAM_RULES),
+        abstract_params,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def param_shardings(abstract_params, axes_tree, mesh: Mesh):
+    specs = param_pspecs(abstract_params, axes_tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def _batch_axes(mesh: Mesh, batch: int):
+    for cand in ACT_RULES["batch"]:
+        flat = cand if isinstance(cand, tuple) else (cand,)
+        if all(a in mesh.shape for a in flat) and batch % _axis_size(mesh, cand) == 0:
+            return cand
+    return None
+
+
+def batch_pspecs(specs: dict, mesh: Mesh) -> dict:
+    """Input shardings for a train/prefill batch of ShapeDtypeStructs:
+    leading dim over the data axes (when divisible), rest replicated."""
+
+    def one(leaf):
+        if not hasattr(leaf, "shape") or len(leaf.shape) == 0:
+            return P()
+        b = leaf.shape[0]
+        ba = _batch_axes(mesh, b)
+        return P(ba, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(one, specs)
+
+
+def cache_pspecs(cache_specs, mesh: Mesh) -> dict:
+    """Decode-cache shardings: [L, B, S, ...] — batch over data axes when
+    divisible, else the sequence dim over 'model' ∪ 'data' (SP decode for
+    global_batch=1 long-context)."""
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) < 3:
+            return P()
+        _, b, s = shape[0], shape[1], shape[2]
+        ba = _batch_axes(mesh, b)
+        spec = [None, ba]
+        # Sequence dim (KV cache / conv state): shard over 'model'; if batch
+        # could not shard, also claim the data axes for S.
+        seq_ax: Optional[tuple] = None
+        if "model" in mesh.shape and s % mesh.shape["model"] == 0:
+            seq_ax = "model"
+            if ba is None:
+                for cand in (("pod", "data", "model"), ("data", "model")):
+                    if all(a in mesh.shape for a in cand) and s % _axis_size(
+                        mesh, cand
+                    ) == 0:
+                        seq_ax = cand
+                        break
+        spec.append(seq_ax)
+        spec.extend([None] * (len(shape) - 3))
+        return P(*spec)
+
+    return jax.tree.map(one, cache_specs)

@@ -1,0 +1,156 @@
+"""Roofline analysis from the compiled dry-run artifact (deliverable g).
+
+No real TPU is attached, so wall-time MFU cannot be measured; instead the
+three roofline terms are *derived* from the compiled SPMD program:
+
+  compute term    = HLO_FLOPs_per_chip   / peak_FLOP/s          (197 TF bf16)
+  memory term     = HLO_bytes_per_chip   / HBM_bw               (819 GB/s)
+  collective term = collective_bytes_per_chip / link_bw         (50 GB/s/link)
+
+``compiled.cost_analysis()`` reports the per-chip partitioned program's
+FLOPs / bytes.  Collective bytes are not in cost_analysis: the optimized HLO
+text is parsed and the output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op are summed (all-reduce
+counted 2× for the ring's reduce-scatter + all-gather phases; a single
+active ICI link is assumed — conservative).
+
+``model_flops_ratio`` = MODEL_FLOPS / (HLO_FLOPs × chips) shows how much of
+the compiled compute is "useful" (6·N·D for training dense, 6·N_active·D for
+MoE, 2·N·D for inference) — catching remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+__all__ = ["HW", "RooflineReport", "collective_bytes", "analyze", "model_flops"]
+
+HW = {
+    "peak_flops_bf16": 197e12,  # per chip (TPU v5e-class target)
+    "hbm_bw": 819e9,  # B/s per chip
+    "link_bw": 50e9,  # B/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>\(?[^=]*?)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(fragment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(fragment):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind output bytes of every collective op in the (per-chip) HLO."""
+    out: dict = {k: 0 for k in
+                 ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        frag = m.group(0)
+        if "-done(" in frag:  # async pairs: count the start only
+            continue
+        kind = m.group("kind")
+        out[kind] += _shape_bytes(m.group("out"))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    collective_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    model_flops_ratio: float
+    memory_per_chip_bytes: float
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+    def summary(self) -> str:
+        return (
+            f"{self.arch:22s} {self.shape:12s} {self.mesh:10s} "
+            f"compute={self.compute_s*1e3:9.3f}ms memory={self.memory_s*1e3:9.3f}ms "
+            f"collective={self.collective_s*1e3:9.3f}ms -> {self.dominant:10s} "
+            f"useful={self.model_flops_ratio:6.2%}"
+        )
+
+
+def model_flops(cfg, shape_spec) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D inference (N = active params)."""
+    n = cfg.active_param_count()
+    if shape_spec.kind == "train":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 6.0 * n * tokens
+    if shape_spec.kind == "prefill":
+        tokens = shape_spec.global_batch * shape_spec.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape_spec.global_batch  # decode: one token per row
+
+
+def analyze(compiled, mesh, *, arch: str, shape: str, cfg=None, shape_spec=None) -> RooflineReport:
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    chips = mesh.size
+    coll = collective_bytes(compiled.as_text())
+    coll_bytes = sum(
+        v * (2 if k == "all-reduce" else 1) for k, v in coll.items()
+    )
+    compute_s = flops / HW["peak_flops_bf16"]
+    memory_s = byts / HW["hbm_bw"]
+    collective_s = coll_bytes / HW["link_bw"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_spec) if cfg is not None and shape_spec is not None else 0.0
+    ratio = mf / (flops * chips) if flops else 0.0
+    ma = compiled.memory_analysis()
+    mem_per_chip = (
+        ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes
+        - ma.alias_size_in_bytes
+    )
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh="x".join(str(s) for s in mesh.devices.shape),
+        chips=chips,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=byts,
+        collective_bytes_per_chip=float(coll_bytes),
+        collective_breakdown=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=mf,
+        model_flops_ratio=ratio,
+        memory_per_chip_bytes=float(mem_per_chip),
+    )

@@ -1,0 +1,4 @@
+"""Serving engine."""
+from .engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

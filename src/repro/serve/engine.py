@@ -1,0 +1,111 @@
+"""Batched serving engine: slot-based KV cache with continuous batching.
+
+``ServeEngine`` owns a fixed pool of ``batch_size`` cache slots.  Requests
+queue up; free slots are filled immediately (continuous batching — a
+finishing request never stalls the rest of the batch).  Prompts are fed
+token-by-token through the same jitted decode step that generates (teacher
+forcing into the cache), so there is exactly one compiled program — the
+per-slot ``index`` vector tracks each slot's fill independently.
+
+This is where Phantom serves: with ``cfg.phantom.enabled`` the FFN/o-proj
+matmuls route through the masked (or Pallas-kernel) block-sparse path, and
+activation tile masks flow between layers (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, batch_size: int, max_len: int):
+        self.model, self.params = model, params
+        self.b, self.max_len = batch_size, max_len
+        self.cache = model.init_cache(batch_size, max_len)
+        self.index = np.zeros(batch_size, dtype=np.int32)  # per-slot fill
+        self.slot_req: list[Optional[Request]] = [None] * batch_size
+        self.slot_pending: list[deque] = [deque() for _ in range(batch_size)]
+        self.queue: deque[Request] = deque()
+        self._rid = itertools.count()
+        self._step = jax.jit(model.decode_step)
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int = 16, eos_id=None) -> Request:
+        req = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        self.queue.append(req)
+        return req
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Drive until every submitted request completes; returns them."""
+        finished = []
+        for _ in range(max_steps):
+            self._fill_slots()
+            if all(r is None for r in self.slot_req):
+                break
+            self._decode_once(finished)
+        return finished
+
+    # -- internals -------------------------------------------------------------
+    def _fill_slots(self):
+        for s in range(self.b):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[s] = req
+                self.slot_pending[s] = deque(req.prompt)
+                self.index[s] = 0
+                self._reset_slot_cache(s)
+
+    def _reset_slot_cache(self, s: int):
+        self.cache = jax.tree.map(
+            lambda t: t.at[:, s].set(jnp.zeros_like(t[:, s])), self.cache
+        )
+
+    def _decode_once(self, finished: list):
+        tokens = np.zeros((self.b, 1), dtype=np.int32)
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if self.slot_pending[s]:
+                tokens[s, 0] = self.slot_pending[s].popleft()
+            elif req.output:
+                tokens[s, 0] = req.output[-1]
+            else:
+                tokens[s, 0] = req.prompt[-1]
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.index)
+        )
+        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+        for s, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.index[s] += 1
+            if self.slot_pending[s]:
+                continue  # still prefilling this slot
+            req.output.append(int(nxt[s]))
+            hit_eos = req.eos_id is not None and int(nxt[s]) == req.eos_id
+            if (
+                len(req.output) >= req.max_new_tokens
+                or hit_eos
+                or self.index[s] >= self.max_len - 1
+            ):
+                req.done = True
+                finished.append(req)
+                self.slot_req[s] = None

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see 1 device; only the dry-run forces 512 placeholder devices (and it does
+so in its own process, repro/launch/dryrun.py lines 1–3)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

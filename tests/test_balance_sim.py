@@ -1,0 +1,77 @@
+"""Balancers + simulator invariants (paper §4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import balance, blocksparse, dataflow as df, simulator
+
+
+@given(st.integers(1, 40), st.integers(2, 8), st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_inter_core_schedule_conserves_work(n_jobs, workers, seed):
+    rng = np.random.default_rng(seed)
+    costs = rng.integers(1, 50, n_jobs).astype(float)
+    for balanced in (False, True):
+        s = balance.inter_core_schedule(costs, workers, balanced=balanced)
+        jobs = sorted(j for w in s.assignment for j in w)
+        assert jobs == list(range(n_jobs))  # every job exactly once
+        assert s.makespan >= costs.sum() / workers - 1e-9  # LPT lower bound
+    b = balance.inter_core_schedule(costs, workers, balanced=True)
+    u = balance.inter_core_schedule(costs, workers, balanced=False)
+    assert b.makespan <= u.makespan + 1e-9  # balancing never hurts
+
+
+@given(st.integers(1, 30), st.integers(2, 5), st.integers(0, 2**31 - 1))
+@settings(max_examples=50, deadline=None)
+def test_intra_shift_roundtrip(n, pes, seed):
+    rng = np.random.default_rng(seed)
+    entries = rng.random((n, pes, 3)) < 0.5
+    shifted, shifts = balance.intra_core_shift(entries)
+    back = balance.intra_core_unshift_maps(shifted, shifts)
+    assert np.array_equal(back, entries)
+    # Work is conserved per entry.
+    assert np.array_equal(shifted.sum((1, 2)), entries.sum((1, 2)))
+
+
+def test_simulator_small_net_sanity():
+    layers = [df.ConvSpec("c1", 8, 8, 14, 14), df.FCSpec("f1", 72, 16)]
+    wd, ad = np.array([0.3, 0.3]), np.array([0.4, 0.4])
+    variants = simulator.default_variants(6)
+    res = simulator.simulate_network(layers, wd, ad, variants,
+                                     simulator.SimOptions(job_frac=1.0))
+    for r in res:
+        assert r.cycles["dense"] >= r.cycles["tds_oo"] > 0
+        assert r.cycles["tds_oo"] <= r.cycles["tds_io"] * 1.001
+        assert 0 < r.utilization["tds_oo"] <= 1
+
+
+def test_blocksparse_queue_complete():
+    """Every effectual weight tile appears exactly once (TDS completeness)."""
+    rng = np.random.default_rng(1)
+    w = rng.random((6, 5)) < 0.4
+    q = blocksparse.build_work_queue(w, m_tiles=3)
+    trips = set(zip(q.mi.tolist(), q.ki.tolist(), q.ni.tolist()))
+    expect = {
+        (mi, ki, ni)
+        for mi in range(3)
+        for ki in range(6)
+        for ni in range(5)
+        if w[ki, ni]
+    }
+    assert trips == expect
+    # start/last bracket each (mi, ni) run
+    assert q.start.sum() == q.last.sum()
+    # empty columns are reported for §3.8 zero outputs
+    empty_cols = {ni for ni in range(5) if not w[:, ni].any()}
+    assert {tuple(e) for e in q.empty_out.tolist()} == {
+        (mi, ni) for mi in range(3) for ni in empty_cols
+    }
+
+
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_balance_columns_is_permutation(shards, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random((8, 12)) < 0.5
+    perm = blocksparse.balance_columns(w, shards)
+    assert sorted(perm.tolist()) == list(range(12))

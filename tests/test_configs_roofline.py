@@ -1,0 +1,109 @@
+"""Config-registry exactness (deliverable f) + roofline parser units."""
+import jax
+import pytest
+
+from repro import configs, roofline
+from repro.configs import shapes as shp
+
+# Exact published numbers from the assignment table.
+EXPECT = {
+    "qwen2_vl_7b": dict(n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+                        d_ff=18944, vocab=152064),
+    "zamba2_2p7b": dict(n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+                        d_ff=10240, vocab=32000, ssm_state=64),
+    "deepseek_coder_33b": dict(n_layers=62, d_model=7168, n_heads=56,
+                               n_kv_heads=8, d_ff=19200, vocab=32256),
+    "qwen2_0p5b": dict(n_layers=24, d_model=896, n_heads=14, n_kv_heads=2,
+                       d_ff=4864, vocab=151936, qkv_bias=True),
+    "smollm_360m": dict(n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+                        d_ff=2560, vocab=49152),
+    "internlm2_20b": dict(n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+                          d_ff=16384, vocab=92544),
+    "seamless_m4t_medium": dict(n_layers=12, enc_layers=12, d_model=1024,
+                                n_heads=16, n_kv_heads=16, d_ff=4096,
+                                vocab=256206),
+    "moonshot_v1_16b_a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                n_kv_heads=16, moe_d_ff=1408, vocab=163840,
+                                n_experts=64, top_k=6),
+    "grok_1_314b": dict(n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+                        d_ff=32768, vocab=131072, n_experts=8, top_k=2),
+    "mamba2_2p7b": dict(n_layers=64, d_model=2560, vocab=50280, ssm_state=128),
+}
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_exact_published_config(arch):
+    cfg = configs.get_config(arch)
+    for k, v in EXPECT[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_param_counts_match_model_size():
+    """N within ~20% of the advertised size (dense/MoE bookkeeping sanity)."""
+    approx = {
+        "qwen2_0p5b": 0.5e9, "smollm_360m": 0.36e9, "internlm2_20b": 20e9,
+        "deepseek_coder_33b": 33e9, "grok_1_314b": 314e9,
+        # the ASSIGNED moonshot numbers (64e × d_ff 1408 × 48L) imply ~28B
+        # total; the A3B active count is what must match (below)
+        "moonshot_v1_16b_a3b": 28e9, "mamba2_2p7b": 2.7e9,
+        "zamba2_2p7b": 2.7e9, "qwen2_vl_7b": 7e9,
+    }
+    for arch, n in approx.items():
+        got = configs.get_config(arch).param_count()
+        assert 0.7 * n < got < 1.45 * n, (arch, got, n)
+    # MoE active params: moonshot 16B-A3B ⇒ ~3B active.
+    a3b = configs.get_config("moonshot_v1_16b_a3b").active_param_count()
+    assert 1.8e9 < a3b < 4.5e9, a3b
+
+
+def test_shape_grid_matches_assignment():
+    grids = {a: configs.shape_grid(a) for a in configs.ARCHS}
+    # long_500k only for the sub-quadratic families
+    assert grids["zamba2_2p7b"][-1] == "long_500k"
+    assert grids["mamba2_2p7b"][-1] == "long_500k"
+    for a in configs.ARCHS:
+        if a not in ("zamba2_2p7b", "mamba2_2p7b"):
+            assert "long_500k" not in grids[a]
+    assert sum(len(g) for g in grids.values()) == 32  # the dry-run cell count
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0p5b", "seamless_m4t_medium", "mamba2_2p7b"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_input_specs_are_abstract(arch, shape):
+    cfg = configs.get_config(arch)
+    specs = shp.input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)  # no allocation
+    sp = shp.SHAPES[shape]
+    if sp.kind != "decode":
+        assert specs["tokens"].shape == (sp.global_batch, sp.seq_len)
+    else:
+        assert specs["tokens"].shape == (sp.global_batch, 1)
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(bf16[1,128] %x), dimensions={0}
+  %ar = f32[896]{0} all-reduce(f32[896]{0} %y), to_apply=%add
+  %rs = (f32[4,4]{1,0}, f32[4,4]{1,0}) reduce-scatter(f32[16,4] %a, f32[16,4] %b)
+  %cp = u8[100]{0} collective-permute(u8[100]{0} %z)
+  %ard = f32[2]{0} all-reduce-done(f32[2]{0} %w)
+  %ignored = f32[9]{0} add(f32[9]{0} %p, f32[9]{0} %q)
+"""
+    out = roofline.collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 128 * 2
+    assert out["all-reduce"] == 896 * 4  # -done not double counted
+    assert out["reduce-scatter"] == 2 * 16 * 4
+    assert out["collective-permute"] == 100
+    assert out["all-to-all"] == 0
+
+
+def test_model_flops_kinds():
+    cfg = configs.get_config("smollm_360m")
+    tr = roofline.model_flops(cfg, shp.SHAPES["train_4k"])
+    pf = roofline.model_flops(cfg, shp.SHAPES["prefill_32k"])
+    dc = roofline.model_flops(cfg, shp.SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == 6.0 * n * 4096 * 256
+    assert pf == 2.0 * n * 32768 * 32
+    assert dc == 2.0 * n * 128

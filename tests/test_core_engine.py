@@ -1,0 +1,71 @@
+"""Functional Phantom core must bit-match dense oracles while its cycle
+model rides the same schedule (paper §3 end-to-end)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import engine
+
+
+@given(
+    st.integers(4, 10),
+    st.integers(4, 12),
+    st.floats(0.1, 0.9),
+    st.floats(0.1, 0.9),
+    st.integers(0, 2**31 - 1),
+    st.sampled_from(["inorder", "outoforder"]),
+    st.integers(1, 9),
+)
+@settings(max_examples=40, deadline=None)
+def test_conv2d_matches_dense(h, w, dw, da, seed, policy, lf):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-3, 4, (h, w)).astype(float) * (rng.random((h, w)) < da)
+    k = rng.integers(-3, 4, (3, 3)).astype(float) * (rng.random((3, 3)) < dw)
+    res = engine.phantom_conv2d(a, k, lookahead=lf, policy=policy)
+    oh, ow = h - 2, w - 2
+    ref = np.zeros(oh * ow)
+    for i in range(oh):
+        for j in range(ow):
+            ref[i * ow + j] = (a[i : i + 3, j : j + 3] * k).sum()
+    np.testing.assert_allclose(res.outputs, ref)
+    # §3.8 output encoding: mask ⊇ non-zero outputs (a one may still sum to 0)
+    assert np.all(res.out_mask[ref != 0])
+    assert res.stats.cycles >= 1
+
+
+@given(
+    st.integers(2, 4),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_non_unit_stride(s, seed):
+    """Goal G3: strides SCNN cannot run."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((11, 11)) * (rng.random((11, 11)) < 0.5)
+    k = rng.standard_normal((3, 3)) * (rng.random((3, 3)) < 0.5)
+    res = engine.phantom_conv2d(a, k, stride=(s, s))
+    oh = (11 - 3) // s + 1
+    ref = np.array(
+        [
+            (a[i * s : i * s + 3, j * s : j * s + 3] * k).sum()
+            for i in range(oh)
+            for j in range(oh)
+        ]
+    )
+    np.testing.assert_allclose(res.outputs, ref)
+
+
+def test_fc_matches_dense(rng):
+    act = (rng.random(45) < 0.4) * rng.standard_normal(45)
+    w = (rng.random((45, 30)) < 0.3) * rng.standard_normal((45, 30))
+    res = engine.phantom_fc(act, w, lookahead=6)
+    np.testing.assert_allclose(res.outputs, act @ w, rtol=1e-9, atol=1e-9)
+    assert res.stats.speedup_vs_dense > 1.0  # sparse must beat dense here
+
+
+def test_intra_balance_never_wrong(rng):
+    a = rng.standard_normal((8, 10)) * (rng.random((8, 10)) < 0.3)
+    k = rng.standard_normal((3, 3)) * (rng.random((3, 3)) < 0.6)
+    r_bal = engine.phantom_conv2d(a, k, intra_balance=True)
+    r_un = engine.phantom_conv2d(a, k, intra_balance=False)
+    np.testing.assert_allclose(r_bal.outputs, r_un.outputs)

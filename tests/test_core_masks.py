@@ -1,0 +1,50 @@
+"""Property tests: sparse-mask representation + traffic models (paper §3.1,
+Fig. 25)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import masks
+
+
+@st.composite
+def small_matrix(draw):
+    r = draw(st.integers(1, 12))
+    c = draw(st.integers(1, 12))
+    vals = draw(
+        st.lists(st.integers(-4, 4), min_size=r * c, max_size=r * c)
+    )
+    return np.array(vals, dtype=np.int64).reshape(r, c)
+
+
+@given(small_matrix())
+@settings(max_examples=100, deadline=None)
+def test_pack_unpack_roundtrip(m):
+    sm = masks.to_sparse_mask(m)
+    assert np.array_equal(masks.from_sparse_mask(sm), m)
+    assert sm.nnz == int((m != 0).sum())
+
+
+@given(small_matrix())
+@settings(max_examples=50, deadline=None)
+def test_mask_traffic_cheaper_for_metadata(m):
+    """The binary mask is one bit/elem; CSC metadata ≥ 1 byte per nnz."""
+    sm = masks.to_sparse_mask(m)
+    mb = masks.mask_traffic_bytes(m.shape)
+    cb = masks.csc_traffic_bytes(sm.mask)
+    assert mb == int(np.ceil(m.size / 8))
+    if sm.nnz >= m.size // 8:  # beyond 1/8 density CSC must lose
+        assert cb >= mb
+
+
+def test_fig25_regime():
+    """Low-sparsity activations: CSC ≈ 4× the mask traffic; high sparsity
+    shrinks the gap (paper Fig. 25: → ~1.7×).  CSC columns are per-(W, C)
+    stripes with H rows (1-byte row indices, as streamed by CSC PEs)."""
+    rng = np.random.default_rng(0)
+    m = rng.random((224, 224 * 64)) < 0.5
+    ratio = masks.csc_traffic_bytes(m) / masks.mask_traffic_bytes(m.shape)
+    assert 3.0 < ratio < 5.5  # paper: ~4×
+    m2 = rng.random((14, 14 * 512)) < 0.2
+    ratio2 = masks.csc_traffic_bytes(m2) / masks.mask_traffic_bytes(m2.shape)
+    assert 1.2 < ratio2 < ratio  # gap narrows with sparsity

@@ -1,0 +1,87 @@
+"""Property tests: LAM + TDS invariants (paper §3.3–3.4).
+
+ * LAM = elementwise AND;
+ * every non-zero entry is selected exactly once, zero entries never;
+ * ≤ threads entries and ≤ threads ones per selection (mapper capacity);
+ * OO cycles ≤ IO cycles ≤ entry count; L_f=1 replicates dense (= E cycles);
+ * cycles non-increasing in L_f;
+ * the vectorised batch timer matches the exact selector on random queues.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lam, tds
+
+
+@given(
+    st.integers(1, 60),  # queue length
+    st.integers(1, 27),  # lookahead
+    st.integers(1, 4),  # threads
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=150, deadline=None)
+def test_select_column_invariants(n, lf, threads, seed):
+    rng = np.random.default_rng(seed)
+    pops = rng.integers(0, threads + 1, size=n)
+    for policy in tds.POLICIES:
+        sched = tds.select_column(pops, lookahead=lf, threads=threads, policy=policy)
+        seen = [e for sel in sched.selections for e in sel]
+        nonzero = [i for i in range(n) if pops[i] > 0]
+        assert sorted(seen) == nonzero  # all valid work, exactly once
+        for sel in sched.selections:
+            assert len(sel) <= threads
+            assert sum(pops[e] for e in sel) <= threads
+
+
+@given(
+    st.integers(1, 40),
+    st.integers(1, 4),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_oo_no_slower_than_io_and_lf_monotone(n, threads, seed):
+    rng = np.random.default_rng(seed)
+    pops = rng.integers(0, threads + 1, size=n)
+    prev_oo = None
+    for lf in (1, 3, 9, 27):
+        io = tds.select_column(pops, lookahead=lf, threads=threads, policy="inorder").cycles
+        oo = tds.select_column(pops, lookahead=lf, threads=threads, policy="outoforder").cycles
+        assert oo <= io <= n
+        if lf == 1:
+            assert io == oo == n  # dense replication (§5.2.1)
+        if prev_oo is not None:
+            assert oo <= prev_oo  # more lookahead never hurts
+        prev_oo = oo
+
+
+@given(
+    st.integers(1, 50),
+    st.integers(1, 27),
+    st.integers(1, 4),
+    st.sampled_from(tds.POLICIES),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=150, deadline=None)
+def test_batch_matches_exact(n, lf, threads, policy, seed):
+    rng = np.random.default_rng(seed)
+    pops = rng.integers(0, threads + 1, size=n)
+    exact = tds.select_column(pops, lookahead=lf, threads=threads, policy=policy).cycles
+    vec = int(
+        tds.batch_cycles(
+            pops[None].astype(np.int32),
+            np.array([n]),
+            lookahead=lf,
+            threads=threads,
+            policy=policy,
+        )[0]
+    )
+    assert vec == exact
+
+
+def test_lam_is_and(rng=np.random.default_rng(0)):
+    w = rng.random((3, 3)) < 0.5
+    chunks = rng.random((6, 3, 3)) < 0.5
+    out = lam.lam_and(w, chunks)
+    assert np.array_equal(out, chunks & w[None])
+    om = lam.output_mask(out)
+    assert np.array_equal(om, out.reshape(6, -1).any(1))

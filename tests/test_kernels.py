@@ -1,0 +1,77 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracle (interpret mode)."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sparsity
+from repro.kernels import ops, ref
+
+CASES = [
+    # (M, K, N, (bm, bk, bn), w_density)
+    (64, 128, 96, (32, 32, 32), 0.3),
+    (128, 256, 128, (64, 64, 64), 0.15),
+    (100, 200, 60, (32, 64, 32), 0.5),  # ragged shapes
+    (32, 32, 32, (32, 32, 32), 0.0),  # fully pruned weight
+    (48, 64, 64, (16, 32, 64), 1.0),  # dense weight
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _mk(mkn, blk, wd, dtype, seed=0):
+    m, k, n = mkn
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    if wd < 1.0:
+        w = w * sparsity.block_prune(w, wd, blk[1:])
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    x[: blk[0], : blk[1]] = 0.0  # force a zero activation tile
+    return jnp.asarray(x, dtype), np.asarray(w, np.float32)
+
+
+@pytest.mark.parametrize("case", CASES, ids=str)
+@pytest.mark.parametrize("dtype", DTYPES, ids=("f32", "bf16"))
+def test_phantom_spmm_vs_ref(case, dtype):
+    m, k, n, blk, wd = case
+    x, w = _mk((m, k, n), blk, wd, dtype)
+    pw = ops.prepare_weight(w, m=m, block=blk, dtype=dtype)
+    y = ops.phantom_matmul(x, pw, interpret=True, out_dtype=jnp.float32)
+    mt, kt = math.ceil(m / blk[0]), math.ceil(k / blk[1])
+    xp = jnp.zeros((mt * blk[0], kt * blk[1]), x.dtype).at[:m, :k].set(x)
+    ab = ref.ref_activation_block_mask(xp, (blk[0], blk[1]))
+    yref = ref.ref_phantom_spmm(x, jnp.asarray(w, dtype), jnp.asarray(pw.w_bmask), ab, blk,
+                                out_dtype=jnp.float32)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2 * max(1.0, float(jnp.abs(yref).max()))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=tol, rtol=1e-2)
+
+
+@pytest.mark.parametrize("activation", ["none", "relu", "silu", "gelu"])
+def test_phantom_linear_act_vs_ref(activation):
+    m, k, n, blk, wd = 64, 128, 96, (32, 32, 32), 0.4
+    x, w = _mk((m, k, n), blk, wd, jnp.float32, seed=3)
+    pw = ops.prepare_weight(w, m=m, block=blk)
+    y, ymask = ops.phantom_linear_act(x, pw, activation=activation, interpret=True)
+    mt, kt = math.ceil(m / blk[0]), math.ceil(k / blk[1])
+    xp = jnp.zeros((mt * blk[0], kt * blk[1])).at[:m, :k].set(x)
+    ab = ref.ref_activation_block_mask(xp, (blk[0], blk[1]))
+    yref, ymref = ref.ref_phantom_linear_act(
+        x, jnp.asarray(w), jnp.asarray(pw.w_bmask), ab, blk, activation=activation
+    )
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-4, rtol=1e-3)
+    assert (np.asarray(ymask).astype(bool) == np.asarray(ymref)).all()
+
+
+def test_queue_compaction_scales_with_density():
+    """The TDS analogue: grid steps ∝ weight block density (+ empties)."""
+    m = k = n = 256
+    blk = (64, 64, 64)
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    steps = []
+    for wd in (1.0, 0.5, 0.25):
+        wp = w * sparsity.block_prune(w, wd, blk[1:]) if wd < 1 else w
+        pw = ops.prepare_weight(wp, m=m, block=blk)
+        steps.append(pw.steps)
+    assert steps[0] > steps[1] > steps[2]
