@@ -15,9 +15,75 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sparsity
-from repro.kernels import ops
+from repro.kernels import ops, phantom_conv
 
 from .common import emit
+
+
+def _conv_rows(rng):
+    """im2col conv path: structural metrics per layer archetype.
+
+    Archetypes cover what differentiates Phantom (§4): a VGG16-style 3x3
+    stride-1 layer, a MobileNet stride-2 layer (the case SCNN cannot run),
+    and a depthwise layer (block-diagonal weight → structural compaction).
+    """
+    rows = []
+    cases = [
+        ("vgg3x3_s1", dict(cin=128, cout=128, kh=3, stride=(1, 1), groups=1)),
+        ("mbnet3x3_s2", dict(cin=64, cout=128, kh=3, stride=(2, 2), groups=1)),
+        ("depthwise_s2", dict(cin=128, cout=128, kh=3, stride=(2, 2), groups=128)),
+        ("pointwise", dict(cin=256, cout=256, kh=1, stride=(1, 1), groups=1)),
+    ]
+    b, hw, blk = 1, 28, (32, 32, 32)
+    for name, c in cases:
+        # Depthwise filters don't survive magnitude pruning (few, critical
+        # weights — block-pruning the tiny HWIO tensor would drop whole
+        # channels); their compaction comes from the structural zeros of
+        # the block-diagonal im2col matrix alone.
+        densities = (1.0,) if c["groups"] > 1 else (1.0, 0.3)
+        for wd in densities:
+            w = rng.standard_normal(
+                (c["kh"], c["kh"], c["cin"] // c["groups"], c["cout"])
+            ).astype(np.float32)
+            if wd < 1.0:
+                # Block-prune the im2col-reshaped matrix — the structured
+                # pruning the TPU adaptation compacts (zero tiles leave the
+                # work queue).
+                w2 = w.reshape(-1, c["cout"])
+                w2 *= sparsity.block_prune(w2, wd, blk[1:])
+                w = w2.reshape(w.shape)
+            pcw = phantom_conv.prepare_conv_weight(
+                w, batch=b, in_hw=(hw, hw), stride=c["stride"],
+                groups=c["groups"], block=blk,
+            )
+            mt, kt, nt = pcw.pw.grid_tiles
+            dense_steps = mt * kt * nt
+            x = rng.standard_normal((b, hw, hw, c["cin"])).astype(np.float32)
+            xj, wj = jnp.asarray(x), jnp.asarray(w)
+            dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+            f_dense = jax.jit(
+                lambda a, k: jax.lax.conv_general_dilated(
+                    a, k, c["stride"], "SAME", dimension_numbers=dn,
+                    feature_group_count=c["groups"],
+                )
+            )
+            f_dense(xj, wj).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(5):
+                f_dense(xj, wj).block_until_ready()
+            t_dense = (time.perf_counter() - t0) / 5 * 1e6
+            wbytes = pcw.pw.packed.size * pcw.pw.packed.dtype.itemsize
+            # Dense baseline is the im2col matrix [kh*kw*Cin, Cout] — the
+            # operand the kernel would otherwise move — not the compact
+            # HWIO tensor (they differ for grouped/depthwise layers).
+            dbytes = c["kh"] * c["kh"] * c["cin"] * c["cout"] * 4
+            rows.append(
+                (f"conv/{name}/wd{wd}", f"{t_dense:.0f}",
+                 f"grid_compaction={pcw.steps / dense_steps:.3f};"
+                 f"weight_bytes_ratio={wbytes / dbytes:.3f};"
+                 f"block_density={pcw.density():.3f}")
+            )
+    return rows
 
 
 def run():
@@ -58,6 +124,7 @@ def run():
              f"grid_compaction={compaction:.3f};weight_bytes_ratio={wbytes/dbytes:.3f};"
              f"masked_us={t_masked:.0f}")
         )
+    rows += _conv_rows(rng)
     return emit(rows)
 
 

@@ -147,6 +147,10 @@ class FCSpec:
     name: str
     in_dim: int
     out_dim: int
+    # How a 4-D conv output enters this FC: plain flatten, max-pool then
+    # flatten (VGG16 pool5), or global average pool (MobileNet).  Explicit
+    # on the spec so the forwards never guess from shape arithmetic.
+    pool: str = "flatten"  # flatten | pool5 | gap
 
     @property
     def macs(self) -> int:
@@ -227,6 +231,8 @@ def _group_pops(and_mask: np.ndarray, pes: int, threads: int) -> np.ndarray:
     """``[n, K]`` AND masks → ``[n*G, pes]`` entry popcounts (batches of
     ``pes × threads`` bits, the §4.4–4.5 'batches of 9')."""
     n, k = and_mask.shape
+    if n == 0:  # empty band (fewer output rows than cores)
+        return np.zeros((0, pes), dtype=np.int32)
     unit = pes * threads
     pad = (-k) % unit
     if pad:

@@ -53,8 +53,11 @@ def vgg16_layers(include_fc: bool = True, input_hw: int = 224):
         in_ch = out_ch
         idx += 1
     if include_fc:
+        # pool5 halves the conv13 output once more: 224 → 7.  Scale with
+        # input_hw so reduced-resolution smoke configs stay consistent.
+        fc_hw = max(1, input_hw // 32)
         layers += [
-            FCSpec("fc14", 512 * 7 * 7, 4096),
+            FCSpec("fc14", 512 * fc_hw * fc_hw, 4096, pool="pool5"),
             FCSpec("fc15", 4096, 4096),
             FCSpec("fc16", 4096, 1000),
         ]
@@ -88,7 +91,7 @@ def mobilenet_layers(include_fc: bool = True, input_hw: int = 224):
         ohw = hw // s
         layers.append(ConvSpec(f"conv{i}-pw", cin, cout, ohw, ohw, 1, 1, (1, 1)))
     if include_fc:
-        layers.append(FCSpec("fc", 1024, 1000))
+        layers.append(FCSpec("fc", 1024, 1000, pool="gap"))
     return layers
 
 

@@ -29,6 +29,7 @@ __all__ = [
     "PhantomWeight",
     "prepare_weight",
     "activation_tile_bits",
+    "element_mask_tile_bits",
     "phantom_matmul",
     "phantom_linear_act",
     "default_interpret",
@@ -125,6 +126,19 @@ def _pad2(x, bm, bk):
     return x
 
 
+def element_mask_tile_bits(
+    mask2d: jnp.ndarray, block: tuple[int, int], threshold: float = 0.0
+):
+    """§3.8 inter-layer flow: a producing layer's *element* mask [M, K]
+    (bool/0-1, unpadded) → the consuming layer's tile bits int32 [Mt, Kt].
+
+    Pass the result as ``act_bits`` to :func:`phantom_matmul` /
+    :func:`phantom_linear_act` instead of letting them re-inspect values.
+    """
+    m = jnp.asarray(mask2d, jnp.float32)
+    return activation_tile_bits(_pad2(m, *block), block, threshold)
+
+
 def _run(call, x, pw: PhantomWeight, act_bits, interpret, **kw):
     bm, bk, bn = pw.block
     xp = _pad2(x, bm, bk)
@@ -150,6 +164,7 @@ def phantom_matmul(
     x: jnp.ndarray,
     pw: PhantomWeight,
     *,
+    act_bits: jnp.ndarray | None = None,
     act_threshold: float = 0.0,
     out_dtype=None,
     interpret: bool | None = None,
@@ -157,14 +172,21 @@ def phantom_matmul(
     """``y = x @ w`` through the two-sided block-sparse kernel.
 
     ``x``: [..., K]; leading dims are flattened to M (must satisfy
-    ``ceil(M/bm) == grid_tiles[0]`` of ``pw``).
+    ``ceil(M/bm) == grid_tiles[0]`` of ``pw``).  ``act_bits`` (int32
+    [Mt, Kt]) overrides the tile bits computed from ``x`` — the §3.8 flow
+    where the producing layer already emitted the mask (conv patch bits use
+    this, :func:`repro.kernels.phantom_conv.conv_patch_tile_bits`).
     """
     interpret = default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     k, n = pw.shape
     x2 = x.reshape(-1, k)
     bm, bk, _ = pw.block
-    bits = activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
+    bits = (
+        activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
+        if act_bits is None
+        else act_bits.astype(jnp.int32)
+    )
     y = _run(
         phantom_spmm.phantom_spmm_call,
         x2,
@@ -181,6 +203,7 @@ def phantom_linear_act(
     pw: PhantomWeight,
     *,
     activation: str = "none",
+    act_bits: jnp.ndarray | None = None,
     act_threshold: float = 0.0,
     mask_threshold: float = 0.0,
     out_dtype=None,
@@ -189,14 +212,19 @@ def phantom_linear_act(
     """Fused ``y = act(x @ w)`` + §3.8 output-encoding tile mask.
 
     Returns ``(y, y_tile_mask)`` — feed the mask to the next layer's
-    ``phantom_matmul`` instead of recomputing it from ``y``.
+    ``phantom_matmul`` instead of recomputing it from ``y``.  ``act_bits``
+    as in :func:`phantom_matmul`.
     """
     interpret = default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     k, n = pw.shape
     x2 = x.reshape(-1, k)
     bm, bk, _ = pw.block
-    bits = activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
+    bits = (
+        activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
+        if act_bits is None
+        else act_bits.astype(jnp.int32)
+    )
     y, ymask = _run(
         phantom_ffn.phantom_linear_act_call,
         x2,

@@ -1,0 +1,283 @@
+"""Block-sparse convolution on the Phantom core — the im2col lowering.
+
+The paper's claim (§4, goal G3) is that Phantom runs *every* CNN layer kind:
+unit- and non-unit-stride convolutions, depthwise, pointwise, and FC — where
+SCNN handles only unit-stride.  The TPU adaptation keeps that property by
+lowering Conv2D to the existing two-sided block-sparse matmul
+(:mod:`repro.kernels.phantom_spmm`) via im2col, mirroring the direct sparse
+convolution lowering of Park et al. and the mask-level
+:func:`repro.core.dataflow.im2col_mask` used by the cycle simulator:
+
+* **weights** ``[kh, kw, Cin, Cout]`` reshape to a ``[kh·kw·Cin, Cout]``
+  matrix whose zero (bk × bn) tiles are compacted away by the
+  :class:`repro.core.blocksparse.WorkQueue` — stride never appears on the
+  weight side, so non-unit strides cost nothing extra;
+* **grouped / depthwise** convolutions expand to a block-diagonal
+  ``[kh·kw·Cin, Cout]`` matrix (group g's patch rows connect only to group
+  g's filters).  The off-diagonal blocks are structurally zero, so the block
+  mask compacts a depthwise layer to ~1/C of the dense tile count — the
+  "grouped pointwise" view of depthwise;
+* **activations** ``[B, H, W, Cin]`` unfold to a ``[B·oh·ow, kh·kw·Cin]``
+  patch matrix (stride and SAME/VALID padding are absorbed here, at patch
+  extraction); its zero tiles are gated in-kernel via the prefetched
+  activation tile bits.  The bits can be derived either from the patch
+  matrix itself or from the previous layer's §3.8 output-encoding element
+  mask run through the same unfolding (``conv_patch_tile_bits``), so masks
+  flow between layers without re-inspecting values.
+
+``prepare_conv_weight`` runs once at weight-load time;
+``phantom_conv_call`` is the runtime entry point and drives
+``phantom_spmm_call`` (``phantom_conv_act_call`` drives the fused
+linear+activation+output-encoding kernel for bias-free epilogues).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ops
+
+__all__ = [
+    "PhantomConvWeight",
+    "conv_geometry",
+    "im2col_patches",
+    "grouped_weight_matrix",
+    "prepare_conv_weight",
+    "conv_patch_tile_bits",
+    "phantom_conv_call",
+    "phantom_conv_act_call",
+]
+
+
+def conv_geometry(
+    h: int, w: int, kh: int, kw: int, stride=(1, 1), padding: str = "SAME"
+):
+    """Output spatial size and explicit pads, matching ``lax`` conventions.
+
+    Returns ``(oh, ow, ((ph_lo, ph_hi), (pw_lo, pw_hi)))``.
+    """
+    sh, sw = stride
+    padding = padding.upper()
+    if padding == "SAME":
+        oh, ow = math.ceil(h / sh), math.ceil(w / sw)
+        ph = max((oh - 1) * sh + kh - h, 0)
+        pw = max((ow - 1) * sw + kw - w, 0)
+        pads = ((ph // 2, ph - ph // 2), (pw // 2, pw - pw // 2))
+    elif padding == "VALID":
+        oh, ow = (h - kh) // sh + 1, (w - kw) // sw + 1
+        pads = ((0, 0), (0, 0))
+    else:
+        raise ValueError(f"padding must be SAME or VALID, got {padding!r}")
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"empty output for input {h}x{w}, kernel {kh}x{kw}")
+    return oh, ow, pads
+
+
+def im2col_patches(
+    x: jnp.ndarray, kh: int, kw: int, stride=(1, 1), padding: str = "SAME"
+) -> jnp.ndarray:
+    """``[B, H, W, C]`` → ``[B·oh·ow, kh·kw·C]`` patch matrix.
+
+    Feature order is ``(dy·kw + dx)·C + c`` — exactly the row order of the
+    ``[kh, kw, Cin, Cout]`` weight reshaped to 2-D, and the column order of
+    :func:`repro.core.dataflow.im2col_mask`.  Stride is absorbed by strided
+    slicing, so the kh·kw loop is static and jit-friendly.
+    """
+    b, h, w, c = x.shape
+    sh, sw = stride
+    oh, ow, pads = conv_geometry(h, w, kh, kw, stride, padding)
+    xp = jnp.pad(x, ((0, 0),) + pads + ((0, 0),))
+    cols = [
+        xp[:, dy : dy + (oh - 1) * sh + 1 : sh, dx : dx + (ow - 1) * sw + 1 : sw, :]
+        for dy in range(kh)
+        for dx in range(kw)
+    ]
+    patches = jnp.stack(cols, axis=3)  # [B, oh, ow, kh*kw, C]
+    return patches.reshape(b * oh * ow, kh * kw * c)
+
+
+def grouped_weight_matrix(w: np.ndarray, groups: int) -> np.ndarray:
+    """``[kh, kw, Cin/groups, Cout]`` HWIO → block-diagonal
+    ``[kh·kw·Cin, Cout]``.
+
+    Group ``g``'s input channels feed only its ``Cout/groups`` filters; the
+    cross-group blocks are exact zeros the block mask then compacts away.
+    ``groups == Cin`` is depthwise (weight ``[kh, kw, 1, Cin·mult]``).
+    """
+    w = np.asarray(w)
+    kh, kw, cpg, cout = w.shape
+    if cout % groups:
+        raise ValueError(f"Cout={cout} not divisible by groups={groups}")
+    cin = cpg * groups
+    opg = cout // groups
+    w2 = np.zeros((kh * kw * cin, cout), dtype=w.dtype)
+    for dy in range(kh):
+        for dx in range(kw):
+            base = (dy * kw + dx) * cin
+            for g in range(groups):
+                w2[base + g * cpg : base + (g + 1) * cpg, g * opg : (g + 1) * opg] = w[
+                    dy, dx, :, g * opg : (g + 1) * opg
+                ]
+    return w2
+
+
+@dataclasses.dataclass
+class PhantomConvWeight:
+    """Weight-load-time artifact for one conv layer: the packed/compacted
+    ``[kh·kw·Cin, Cout]`` matrix plus the geometry needed to unfold inputs."""
+
+    pw: ops.PhantomWeight
+    kh: int
+    kw: int
+    stride: tuple[int, int]
+    padding: str
+    in_ch: int
+    out_ch: int
+    groups: int
+    batch: int
+    in_hw: tuple[int, int]
+    out_hw: tuple[int, int]
+
+    @property
+    def steps(self) -> int:
+        return self.pw.steps
+
+    def density(self) -> float:
+        return self.pw.density()
+
+
+def prepare_conv_weight(
+    w: np.ndarray,  # [kh, kw, Cin/groups, Cout] (HWIO)
+    *,
+    batch: int,
+    in_hw: tuple[int, int],
+    stride: tuple[int, int] = (1, 1),
+    padding: str = "SAME",
+    groups: int = 1,
+    block: tuple[int, int, int] = (128, 128, 128),
+    interleave: bool = True,
+    dtype=jnp.float32,
+) -> PhantomConvWeight:
+    """Lower a (pruned) conv weight to the Phantom spmm artifact.
+
+    The work queue is built on the reshaped ``[kh·kw·Cin, Cout]`` matrix for
+    a patch matrix of ``batch · oh · ow`` rows; zero weight tiles (pruned
+    blocks *and* the structural zeros of grouped convs) never enter the
+    queue.
+    """
+    w = np.asarray(w)
+    kh, kw, cpg, cout = w.shape
+    cin = cpg * groups
+    h, wd = in_hw
+    oh, ow, _ = conv_geometry(h, wd, kh, kw, stride, padding)
+    m = batch * oh * ow
+    w2d = w.reshape(kh * kw * cin, cout) if groups == 1 else grouped_weight_matrix(w, groups)
+    pw = ops.prepare_weight(w2d, m=m, block=block, interleave=interleave, dtype=dtype)
+    return PhantomConvWeight(
+        pw=pw,
+        kh=kh,
+        kw=kw,
+        stride=tuple(stride),
+        padding=padding.upper(),
+        in_ch=cin,
+        out_ch=cout,
+        groups=groups,
+        batch=batch,
+        in_hw=(h, wd),
+        out_hw=(oh, ow),
+    )
+
+
+def conv_patch_tile_bits(
+    x_mask: jnp.ndarray, pcw: PhantomConvWeight, threshold: float = 0.0
+) -> jnp.ndarray:
+    """Previous layer's element mask ``[B, H, W, Cin]`` → activation tile
+    bits ``int32 [Mt, Kt]`` of the unfolded patch matrix.
+
+    This is the §3.8 inter-layer mask flow: the producing layer's output
+    encoding is unfolded with the *same* im2col as the values, so a patch
+    tile is gated iff every element it covers was encoded zero.
+    """
+    mp = im2col_patches(
+        x_mask.astype(jnp.float32), pcw.kh, pcw.kw, pcw.stride, pcw.padding
+    )
+    bm, bk, _ = pcw.pw.block
+    return ops.element_mask_tile_bits(mp, (bm, bk), threshold)
+
+
+def _check_input(x: jnp.ndarray, pcw: PhantomConvWeight):
+    b, h, w, c = x.shape
+    if (b, (h, w), c) != (pcw.batch, pcw.in_hw, pcw.in_ch):
+        raise ValueError(
+            f"input {x.shape} does not match prepared conv weight "
+            f"(batch={pcw.batch}, in_hw={pcw.in_hw}, in_ch={pcw.in_ch})"
+        )
+
+
+def phantom_conv_call(
+    x: jnp.ndarray,  # [B, H, W, Cin]
+    pcw: PhantomConvWeight,
+    *,
+    x_mask: jnp.ndarray | None = None,  # [B, H, W, Cin] element mask (§3.8)
+    act_threshold: float = 0.0,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Conv2D (any stride, SAME/VALID, grouped/depthwise) on the Phantom
+    core: unfold → two-sided block-sparse matmul → fold.
+
+    Returns ``[B, oh, ow, Cout]``.  When ``x_mask`` is given, activation
+    tile bits come from the producing layer's output encoding instead of
+    re-inspecting ``x`` (identical for exact-zero masks, cheaper on TPU).
+    """
+    _check_input(x, pcw)
+    patches = im2col_patches(x, pcw.kh, pcw.kw, pcw.stride, pcw.padding)
+    bits = None if x_mask is None else conv_patch_tile_bits(x_mask, pcw, act_threshold)
+    y2 = ops.phantom_matmul(
+        patches,
+        pcw.pw,
+        act_bits=bits,
+        act_threshold=act_threshold,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    oh, ow = pcw.out_hw
+    return y2.reshape(pcw.batch, oh, ow, pcw.out_ch)
+
+
+def phantom_conv_act_call(
+    x: jnp.ndarray,
+    pcw: PhantomConvWeight,
+    *,
+    activation: str = "relu",
+    x_mask: jnp.ndarray | None = None,
+    act_threshold: float = 0.0,
+    mask_threshold: float = 0.0,
+    out_dtype=None,
+    interpret: bool | None = None,
+):
+    """Fused bias-free ``act(conv(x))`` + §3.8 output-encoding tile mask.
+
+    Returns ``(y [B, oh, ow, Cout], y_tile_mask [Mt, Nt])`` — the tile mask
+    is over the flattened ``[B·oh·ow, Cout]`` output (feed it to a following
+    FC/pointwise layer; spatial layers should flow the element mask of the
+    activated output instead).
+    """
+    _check_input(x, pcw)
+    patches = im2col_patches(x, pcw.kh, pcw.kw, pcw.stride, pcw.padding)
+    bits = None if x_mask is None else conv_patch_tile_bits(x_mask, pcw, act_threshold)
+    y2, ymask = ops.phantom_linear_act(
+        patches,
+        pcw.pw,
+        activation=activation,
+        act_bits=bits,
+        act_threshold=act_threshold,
+        mask_threshold=mask_threshold,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    oh, ow = pcw.out_hw
+    return y2.reshape(pcw.batch, oh, ow, pcw.out_ch), ymask

@@ -16,6 +16,17 @@ Accumulation is k-major in a VMEM fp32 scratch tile that stays resident for
 a full (mi, ni) run — the paper's output-buffer L2 accumulation with zero
 partial-output HBM traffic.
 
+This kernel is also the execution engine for *convolutions* (the paper's
+headline: all CNN layer kinds, §4 goal G3).  ``repro.kernels.phantom_conv``
+lowers Conv2D to it via im2col: the [kh, kw, Cin, Cout] weight reshapes to
+[kh·kw·Cin, Cout] (grouped/depthwise becomes block-diagonal) and is packed
+once at load time; activations unfold to a [B·oh·ow, kh·kw·Cin] patch
+matrix.  Stride and padding are absorbed entirely at patch extraction — the
+M dimension simply shrinks to B·⌈H/sh⌉·⌈W/sw⌉ — so non-unit-stride layers
+(where SCNN degrades) run through the identical queue/kernel machinery at
+proportionally *fewer* grid steps, and the per-layer §3.8 element mask
+unfolds through the same im2col into the next layer's activation tile bits.
+
 BlockSpec layout (VMEM):
   x: (bm, bk) tile at (mi[i], ki[i])
   w: (1, bk, bn) tile of the packed [nnzb, bk, bn] payload at wq[i]

@@ -18,6 +18,7 @@ __all__ = [
     "expand_block_mask",
     "ref_phantom_spmm",
     "ref_phantom_linear_act",
+    "ref_phantom_conv",
     "ref_activation_block_mask",
     "ACTIVATIONS",
 ]
@@ -74,6 +75,27 @@ def ref_phantom_linear_act(
     y = y32.astype(out_dtype or x.dtype)
     ymask = ref_activation_block_mask(y, (block[0], block[2]), threshold)
     return y, ymask
+
+
+def ref_phantom_conv(
+    x: jnp.ndarray,  # [B, H, W, Cin]
+    w: jnp.ndarray,  # [kh, kw, Cin/groups, Cout] (HWIO)
+    stride=(1, 1),
+    padding: str = "SAME",
+    groups: int = 1,
+) -> jnp.ndarray:
+    """Oracle for the im2col conv lowering: the dense XLA convolution on the
+    already-pruned weight (kept tiles are exact, τ=0 activation gating is
+    semantics-free, so the dense op IS the reference)."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape, ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=tuple(stride),
+        padding=padding.upper(),
+        dimension_numbers=dn,
+        feature_group_count=groups,
+    )
 
 
 def ref_activation_block_mask(x, block: tuple[int, int], threshold: float = 0.0):

@@ -33,11 +33,7 @@ from repro.train import TrainConfig, Trainer
 
 
 def make_mesh(n_data: int, n_model: int):
-    return jax.make_mesh(
-        (n_data, n_model),
-        ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return shd.compat_make_mesh((n_data, n_model), ("data", "model"))
 
 
 def run(arch: str = "smollm_360m", steps_a: int = 6, steps_b: int = 6, batch=8, seq=64):

@@ -12,8 +12,6 @@ FSDP'd within a pod), matching the slow cross-pod links.  An optional
 """
 from __future__ import annotations
 
-import jax
-
 __all__ = ["make_production_mesh", "make_mesh_shape"]
 
 
@@ -28,7 +26,7 @@ def make_mesh_shape(*, multi_pod: bool = False, pipeline_stages: int = 1):
 
 
 def make_production_mesh(*, multi_pod: bool = False, pipeline_stages: int = 1):
+    from repro.parallel.sharding import compat_make_mesh
+
     shape, axes = make_mesh_shape(multi_pod=multi_pod, pipeline_stages=pipeline_stages)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return compat_make_mesh(shape, axes)

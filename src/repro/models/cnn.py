@@ -2,9 +2,18 @@
 
 These are the networks the paper evaluates (§5.1).  The JAX forwards share
 the layer tables in :mod:`repro.core.netlib`, so the cycle simulator and the
-functional network agree on shapes.  ``phantom_infer_fc`` runs an FC layer
-through the *functional Phantom core* (bit-exact engine) so end-to-end
-example flows exercise the paper's datapath on real values.
+functional network agree on shapes.
+
+Two execution paths share one parameter pytree:
+
+* ``cnn_forward`` — dense XLA (``lax.conv_general_dilated`` + matmul), the
+  numerical oracle;
+* ``prepare_cnn_phantom`` + ``cnn_forward_phantom`` — every conv *and* FC
+  layer runs on the Phantom block-sparse core: convs lower through the
+  im2col path (:mod:`repro.kernels.phantom_conv`, any stride / depthwise),
+  FCs through :func:`repro.kernels.ops.phantom_matmul`, and each layer's
+  §3.8 output-encoding element mask flows to the next layer's activation
+  tile bits instead of re-inspecting values.
 """
 from __future__ import annotations
 
@@ -13,10 +22,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import netlib
-from repro.core.dataflow import ConvSpec, FCSpec
+from repro.core.dataflow import ConvSpec
+from repro.kernels import ops, phantom_conv
 from .common import ParamSpec
 
-__all__ = ["cnn_spec", "cnn_forward", "cnn_layers"]
+__all__ = [
+    "cnn_spec",
+    "cnn_forward",
+    "cnn_layers",
+    "prepare_cnn_phantom",
+    "cnn_forward_phantom",
+]
 
 
 def cnn_layers(name: str):
@@ -35,7 +51,8 @@ def cnn_spec(name: str, input_hw: int = 224):
     for l in layers:
         if isinstance(l, ConvSpec):
             if l.depthwise:
-                shape = (l.kh, l.kw, l.in_ch, 1)
+                # HWIO with feature_group_count=in_ch: I dim is Cin/groups=1.
+                shape = (l.kh, l.kw, 1, l.out_ch)
             else:
                 shape = (l.kh, l.kw, l.in_ch, l.out_ch)
             spec[l.name] = {
@@ -50,23 +67,27 @@ def cnn_spec(name: str, input_hw: int = 224):
     return spec, layers
 
 
-def cnn_forward(params, x: jnp.ndarray, layers, final_pool: bool = True):
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(params, x: jnp.ndarray, layers):
     """x: [B, H, W, 3] → logits.  ReLU after every layer (the paper's source
     of dynamic activation sparsity, §1)."""
     prev_hw = x.shape[1]
     for l in layers:
         if isinstance(l, ConvSpec):
             if l.in_h != prev_hw and prev_hw // 2 == l.in_h:
-                x = jax.lax.reduce_window(
-                    x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
-                )
+                x = _maxpool2(x)
             p = params[l.name]
             dn = jax.lax.conv_dimension_numbers(x.shape, p["w"].shape, ("NHWC", "HWIO", "NHWC"))
             x = jax.lax.conv_general_dilated(
                 x,
                 p["w"],
                 window_strides=l.stride,
-                padding="SAME",
+                padding=l.pad.upper(),
                 dimension_numbers=dn,
                 feature_group_count=l.in_ch if l.depthwise else 1,
             )
@@ -74,15 +95,134 @@ def cnn_forward(params, x: jnp.ndarray, layers, final_pool: bool = True):
             prev_hw = x.shape[1]
         else:
             if x.ndim == 4:
-                if x.shape[1] * x.shape[2] * x.shape[3] != l.in_dim:
-                    # Global average pool (MobileNet) vs flatten (VGG16).
+                if l.pool == "gap":
                     x = x.mean(axis=(1, 2))
                 else:
-                    if final_pool and x.shape[1] > 7:
-                        pass
+                    if l.pool == "pool5" and x.shape[1] > 1:
+                        x = _maxpool2(x)
                     x = x.reshape(x.shape[0], -1)
             p = params[l.name]
             x = x @ p["w"] + p["b"]
             if l.name != list(params)[-1]:
                 x = jax.nn.relu(x)
+    return x
+
+
+def prepare_cnn_phantom(
+    params,
+    layers,
+    batch: int,
+    *,
+    block: tuple[int, int, int] = (128, 128, 128),
+    interleave: bool = True,
+    dtype=jnp.float32,
+):
+    """Weight-load-time lowering of every conv/FC layer to the Phantom core.
+
+    Returns ``{layer name: PhantomConvWeight | PhantomWeight}`` for the given
+    ``batch`` (the work queue's M-tile count is shape-specialised).  Prune
+    the weights in ``params`` first; zero tiles never enter the queues.
+    """
+    prepared = {}
+    for l in layers:
+        w = np.asarray(params[l.name]["w"])
+        if isinstance(l, ConvSpec):
+            prepared[l.name] = phantom_conv.prepare_conv_weight(
+                w,
+                batch=batch,
+                in_hw=(l.in_h, l.in_w),
+                stride=l.stride,
+                padding=l.pad,
+                groups=l.in_ch if l.depthwise else 1,
+                block=block,
+                interleave=interleave,
+                dtype=dtype,
+            )
+        else:
+            prepared[l.name] = ops.prepare_weight(
+                w, m=batch, block=block, interleave=interleave, dtype=dtype
+            )
+    return prepared
+
+
+def cnn_forward_phantom(
+    params,
+    prepared,
+    x: jnp.ndarray,
+    layers,
+    *,
+    act_threshold: float = 0.0,
+    interpret: bool | None = None,
+):
+    """``cnn_forward`` semantics with every conv/FC on the Phantom core.
+
+    The §3.8 element mask of each layer's (post-ReLU) output flows forward:
+    conv layers unfold it into patch tile bits
+    (:func:`repro.kernels.phantom_conv.conv_patch_tile_bits`), FC layers
+    tile-reduce it (:func:`repro.kernels.ops.element_mask_tile_bits`) — the
+    consuming kernel never re-inspects activation values.  Max-pool keeps
+    the mask exact (post-ReLU values are ≥ 0, so ``maxpool(x) ≠ 0 ⇔
+    any(mask)``); global average pooling mixes channels, so the mask is
+    re-encoded there.
+    """
+    prev_hw = x.shape[1]
+    mask = None  # producing layer's element mask; None ⇒ derive from values
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            if l.in_h != prev_hw and prev_hw // 2 == l.in_h:
+                x = _maxpool2(x)
+                if mask is not None:
+                    mask = _maxpool2(mask.astype(x.dtype))
+            p = params[l.name]
+            y = phantom_conv.phantom_conv_call(
+                x,
+                prepared[l.name],
+                x_mask=mask,
+                # τ was applied when the producer emitted `mask`; only the
+                # first layer (no mask yet) thresholds raw values.
+                act_threshold=0.0 if mask is not None else act_threshold,
+                interpret=interpret,
+            )
+            x = jax.nn.relu(y + p["b"])
+            # §3.8 output encoding: the producer applies the (lossy) τ here;
+            # consumers then gate on the mask's exact zeros.
+            mask = (x > act_threshold).astype(x.dtype)
+            prev_hw = x.shape[1]
+        else:
+            if x.ndim == 4:
+                if l.pool == "gap":
+                    # Averaging mixes channels — re-encode the mask.
+                    x = x.mean(axis=(1, 2))
+                    mask = (x != 0).astype(x.dtype)
+                else:
+                    if l.pool == "pool5" and x.shape[1] > 1:
+                        x = _maxpool2(x)
+                        if mask is not None:
+                            mask = _maxpool2(mask.astype(x.dtype))
+                    x = x.reshape(x.shape[0], -1)
+                    if mask is not None:
+                        mask = mask.reshape(mask.shape[0], -1)
+            pw = prepared[l.name]
+            bm, bk, _ = pw.block
+            bits = (
+                None
+                if mask is None
+                else ops.element_mask_tile_bits(mask, (bm, bk))
+            )
+            p = params[l.name]
+            y = (
+                ops.phantom_matmul(
+                    x,
+                    pw,
+                    act_bits=bits,
+                    act_threshold=act_threshold,
+                    interpret=interpret,
+                )
+                + p["b"]
+            )
+            if l.name != layers[-1].name:
+                x = jax.nn.relu(y)
+                mask = (x > act_threshold).astype(x.dtype)
+            else:
+                x = y
     return x

@@ -32,7 +32,18 @@ __all__ = [
     "batch_pspecs",
     "cache_pspecs",
     "resolve_tensor",
+    "compat_make_mesh",
 ]
+
+
+def compat_make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` across jax versions: pass explicit Auto axis types
+    only where the installed jax has them (≥0.5); older versions treat all
+    axes as Auto implicitly."""
+    kw = {} if devices is None else {"devices": devices}
+    if hasattr(jax.sharding, "AxisType"):
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 # logical axis → priority list of mesh axes (first fit wins)
 PARAM_RULES: dict = {

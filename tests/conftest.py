@@ -1,8 +1,25 @@
-"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
-see 1 device; only the dry-run forces 512 placeholder devices (and it does
-so in its own process, repro/launch/dryrun.py lines 1–3)."""
+"""Shared fixtures + suite tiering.
+
+Tier-1 (`PYTHONPATH=src python -m pytest -x -q`) must stay fast (<120 s on
+CPU): tests marked ``slow`` — full property sweeps and whole-network phantom
+runs — are skipped unless an explicit ``-m`` expression is given
+(``-m slow`` runs only them, ``-m "slow or not slow"`` runs everything).
+
+NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device; only
+the dry-run forces 512 placeholder devices (and it does so in its own
+process, repro/launch/dryrun.py lines 1–3).
+"""
 import numpy as np
 import pytest
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("-m"):
+        return  # explicit marker expression takes over tier selection
+    skip_slow = pytest.mark.skip(reason="slow tier: run with -m slow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)
 
 
 @pytest.fixture

@@ -1,6 +1,7 @@
 """Balancers + simulator invariants (paper §4)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import balance, blocksparse, dataflow as df, simulator

@@ -8,6 +8,8 @@
  * the vectorised batch timer matches the exact selector on random queues.
 """
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -e .[dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import lam, tds

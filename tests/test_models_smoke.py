@@ -29,7 +29,14 @@ def _batch(cfg, b=2, s=16, key=jax.random.PRNGKey(0)):
     return batch
 
 
-@pytest.mark.parametrize("arch", configs.ARCHS)
+_HEAVY_SMOKE = {"zamba2_2p7b", "qwen2_vl_7b"}  # 17-25 s each on CPU
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY_SMOKE else a
+     for a in configs.ARCHS],
+)
 def test_smoke_forward_and_train_step(arch):
     cfg = configs.get_smoke(arch)
     model = build(cfg)

@@ -32,12 +32,9 @@ def run_sub(code: str, devices: int = 8):
 
 def test_rule_resolution_fallbacks():
     """Divisibility + claimed-axis fallbacks, no fake devices needed."""
-    import jax
     from repro.parallel import sharding as shd
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = shd.compat_make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}
@@ -57,12 +54,14 @@ def test_rule_resolution_fallbacks():
     assert shd.resolve_tensor((15, 10), ("vocab", "embed"), m, shd.PARAM_RULES)[0] is None
 
 
+@pytest.mark.slow  # fresh 8-fake-device JAX subprocess: minutes on CPU
 def test_pipeline_matches_sequential():
     run_sub(
         """
         import jax, jax.numpy as jnp
         from repro.parallel import pipeline
-        mesh = jax.make_mesh((4,), ('stage',), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.parallel import sharding as shd
+        mesh = shd.compat_make_mesh((4,), ('stage',))
         key = jax.random.PRNGKey(0)
         W = jax.random.normal(key, (8, 16, 16)) * 0.2
         block = lambda w, x: jnp.tanh(x @ w)
@@ -81,6 +80,7 @@ def test_pipeline_matches_sequential():
     )
 
 
+@pytest.mark.slow  # fresh 8-fake-device JAX subprocess: minutes on CPU
 def test_sharded_train_step_matches_single_device():
     run_sub(
         """
@@ -98,10 +98,9 @@ def test_sharded_train_step_matches_single_device():
                  'labels': jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0, cfg.vocab)}
         ocfg = optim.AdamWConfig(lr=1e-3)
         p1, o1, m1 = make_train_step(model, ocfg, TrainConfig())(params, opt, batch)
-        mesh = jax.make_mesh((4, 2), ('data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        from repro.models.common import set_mesh_rules
         from repro.parallel import sharding as shd
+        mesh = shd.compat_make_mesh((4, 2), ('data', 'model'))
+        from repro.models.common import set_mesh_rules
         set_mesh_rules(mesh, shd.act_rules(mesh))
         with mesh:
             params2 = model.init(jax.random.PRNGKey(0))
@@ -116,6 +115,7 @@ def test_sharded_train_step_matches_single_device():
     )
 
 
+@pytest.mark.slow  # fresh 8-fake-device JAX subprocess: minutes on CPU
 def test_elastic_resume_matches_uninterrupted():
     run_sub(
         """
@@ -143,14 +143,15 @@ def test_elastic_resume_matches_uninterrupted():
     )
 
 
+@pytest.mark.slow  # fresh 8-fake-device JAX subprocess: minutes on CPU
 def test_compressed_cross_pod_lowering():
     """int8 cross-pod gradient path must trace and reduce like a mean."""
     run_sub(
         """
         import jax, jax.numpy as jnp
         from repro.optim import compressed_psum_grads
-        mesh = jax.make_mesh((2, 2, 2), ('pod', 'data', 'model'),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.parallel import sharding as shd
+        mesh = shd.compat_make_mesh((2, 2, 2), ('pod', 'data', 'model'))
         g = {'w': jnp.full((8, 8), 3.0)}
         e = {'w': jnp.zeros((8, 8))}
         with mesh:

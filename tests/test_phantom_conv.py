@@ -1,0 +1,194 @@
+"""Reference parity for the im2col block-sparse conv path (interpret mode).
+
+Oracle is ``jax.lax.conv_general_dilated`` on the same (pruned) weight —
+kept tiles compute exactly, τ=0 activation gating only skips exact-zero
+tiles, so the dense op is the ground truth (``ref.ref_phantom_conv``).
+"""
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dataflow import ConvSpec, FCSpec
+from repro.kernels import phantom_conv as pc
+from repro.kernels.ref import ref_phantom_conv
+from repro.models import cnn
+
+BLK = (16, 16, 16)
+
+
+def _sparse(rng, shape, density):
+    a = rng.standard_normal(shape).astype(np.float32)
+    if density < 1.0:
+        a *= rng.random(shape) < density
+    return a
+
+
+def _conv_case(rng, *, b=1, h=7, w=7, cin=8, cout=16, kh=3, kw=3,
+               stride=(1, 1), padding="SAME", groups=1, w_density=1.0,
+               a_density=1.0, blk=BLK):
+    wt = _sparse(rng, (kh, kw, cin // groups, cout), w_density)
+    x = _sparse(rng, (b, h, w, cin), a_density)
+    pcw = pc.prepare_conv_weight(
+        wt, batch=b, in_hw=(h, w), stride=stride, padding=padding,
+        groups=groups, block=blk,
+    )
+    return jnp.asarray(x), jnp.asarray(wt), pcw
+
+
+def _assert_parity(x, wt, pcw, tol=1e-4):
+    y = pc.phantom_conv_call(x, pcw, interpret=True)
+    yref = ref_phantom_conv(x, wt, pcw.stride, pcw.padding, pcw.groups)
+    assert y.shape == yref.shape
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=tol, rtol=1e-3)
+
+
+# One case per point of the issue's sweep axes: stride x padding x kernel,
+# plus the weight/activation sparsity grid on the 3x3 s1 SAME base case.
+GEOMS = [
+    (kh, stride, padding)
+    for kh in (1, 3)
+    for stride in ((1, 1), (2, 2))
+    for padding in ("SAME", "VALID")
+]
+
+
+@pytest.mark.parametrize("kh,stride,padding", GEOMS, ids=str)
+def test_conv_geometry_parity(kh, stride, padding):
+    rng = np.random.default_rng(zlib.crc32(repr((kh, stride, padding)).encode()))
+    x, wt, pcw = _conv_case(
+        rng, kh=kh, kw=kh, stride=stride, padding=padding,
+        w_density=0.5, a_density=0.5,
+    )
+    _assert_parity(x, wt, pcw)
+
+
+@pytest.mark.parametrize("w_density", [1.0, 0.5, 0.1], ids=lambda d: f"wd{d}")
+@pytest.mark.parametrize("a_density", [1.0, 0.5, 0.1], ids=lambda d: f"ad{d}")
+def test_conv_sparsity_parity(w_density, a_density):
+    rng = np.random.default_rng(7)
+    x, wt, pcw = _conv_case(rng, w_density=w_density, a_density=a_density)
+    _assert_parity(x, wt, pcw)
+
+
+def test_conv_depthwise_and_grouped():
+    rng = np.random.default_rng(3)
+    for groups, cin, cout, stride in ((32, 32, 32, (2, 2)), (4, 8, 16, (1, 1))):
+        x, wt, pcw = _conv_case(
+            rng, cin=cin, cout=cout, groups=groups, stride=stride, w_density=0.6,
+        )
+        _assert_parity(x, wt, pcw)
+        if groups == cin:  # depthwise block-diagonal weight compacts away
+            assert pcw.density() < 1.0
+
+
+def test_vgg16_conv_layer_at_70pct_weight_sparsity():
+    """Acceptance: VGG16-style 3x3 stride-1 conv (conv4: 128→128) ≤1e-4."""
+    rng = np.random.default_rng(11)
+    x, wt, pcw = _conv_case(
+        rng, h=8, w=8, cin=128, cout=128, stride=(1, 1), w_density=0.3,
+        a_density=0.4, blk=(32, 32, 32),
+    )
+    _assert_parity(x, wt, pcw, tol=1e-4)
+
+
+def test_mobilenet_stride2_conv_at_70pct_weight_sparsity():
+    """Acceptance: MobileNet-style stride-2 convs (conv1 3→32 and a
+    depthwise s2 layer) ≤1e-4."""
+    rng = np.random.default_rng(13)
+    x, wt, pcw = _conv_case(
+        rng, h=16, w=16, cin=3, cout=32, stride=(2, 2), w_density=0.3,
+        a_density=0.99, blk=(32, 32, 32),
+    )
+    _assert_parity(x, wt, pcw, tol=1e-4)
+    x, wt, pcw = _conv_case(
+        rng, h=8, w=8, cin=64, cout=64, groups=64, stride=(2, 2),
+        w_density=0.3, a_density=0.4, blk=(32, 32, 32),
+    )
+    _assert_parity(x, wt, pcw, tol=1e-4)
+
+
+def test_conv_act_call_fused_relu_and_output_mask():
+    """Fused ``relu(conv(x))`` + §3.8 output tile mask vs the unfused path."""
+    from repro.kernels.ref import ref_activation_block_mask
+
+    rng = np.random.default_rng(23)
+    x, wt, pcw = _conv_case(rng, w_density=0.5, a_density=0.5)
+    y, ymask = pc.phantom_conv_act_call(x, pcw, activation="relu", interpret=True)
+    yref = jnp.maximum(ref_phantom_conv(x, wt, pcw.stride, pcw.padding), 0.0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-4, rtol=1e-3)
+    bm, _, bn = pcw.pw.block
+    y2 = np.zeros((ymask.shape[0] * bm, ymask.shape[1] * bn), np.float32)
+    flat = np.asarray(yref).reshape(-1, pcw.out_ch)
+    y2[: flat.shape[0], : flat.shape[1]] = flat
+    mref = np.asarray(ref_activation_block_mask(jnp.asarray(y2), (bm, bn)))
+    assert (np.asarray(ymask).astype(bool) == mref).all()
+
+
+def test_conv_mask_flow_matches_value_derived_bits():
+    """§3.8 flow: bits from the producer's element mask == bits from values,
+    and the gated output is identical."""
+    rng = np.random.default_rng(5)
+    x, wt, pcw = _conv_case(rng, w_density=0.5, a_density=0.3)
+    y_values = pc.phantom_conv_call(x, pcw, interpret=True)
+    y_mask = pc.phantom_conv_call(x, pcw, x_mask=(x != 0), interpret=True)
+    np.testing.assert_array_equal(np.asarray(y_values), np.asarray(y_mask))
+
+
+def _toy_params(rng, spec):
+    params = {}
+    for n, d in spec.items():
+        params[n] = {
+            k: jnp.asarray(_sparse(rng, p.shape, 0.4 if k == "w" else 1.0) * 0.1)
+            for k, p in d.items()
+        }
+    return params
+
+
+def test_cnn_phantom_forward_toy_net():
+    """Tier-1 end-to-end: conv → depthwise s2 → pointwise → FC through the
+    phantom path matches the dense forward, masks flowing between layers."""
+    rng = np.random.default_rng(17)
+    layers = [
+        ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)),
+        ConvSpec("c2-dw", 16, 16, 8, 8, 3, 3, (2, 2), depthwise=True),
+        ConvSpec("c2-pw", 16, 32, 4, 4, 1, 1, (1, 1)),
+        FCSpec("fc", 32, 10, pool="gap"),
+    ]
+    params = {}
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            wshape = (l.kh, l.kw, 1 if l.depthwise else l.in_ch, l.out_ch)
+            bshape = (l.out_ch,)
+        else:
+            wshape, bshape = (l.in_dim, l.out_dim), (l.out_dim,)
+        params[l.name] = {
+            "w": jnp.asarray(_sparse(rng, wshape, 0.4) * 0.1),
+            "b": jnp.asarray(_sparse(rng, bshape, 1.0) * 0.1),
+        }
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    y_dense = cnn.cnn_forward(params, x, layers)
+    prepared = cnn.prepare_cnn_phantom(params, layers, batch=2, block=BLK)
+    y_ph = cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y_ph), np.asarray(y_dense), atol=1e-4, rtol=1e-3
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name,hw", [("vgg16", 16), ("mobilenet", 32)])
+def test_cnn_phantom_forward_full_network(name, hw):
+    """Whole-network parity (all 16 VGG16 / 28 MobileNet layers) at reduced
+    resolution — every conv and FC goes through the Phantom core."""
+    rng = np.random.default_rng(0)
+    spec, layers = cnn.cnn_spec(name, input_hw=hw)
+    params = _toy_params(rng, spec)
+    x = jnp.asarray(rng.standard_normal((1, hw, hw, 3)).astype(np.float32))
+    y_dense = cnn.cnn_forward(params, x, layers)
+    prepared = cnn.prepare_cnn_phantom(params, layers, batch=1, block=(32, 32, 32))
+    y_ph = cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
+    scale = max(1.0, float(jnp.abs(y_dense).max()))
+    np.testing.assert_allclose(
+        np.asarray(y_ph) / scale, np.asarray(y_dense) / scale, atol=2e-6
+    )

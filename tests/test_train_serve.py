@@ -29,6 +29,7 @@ def _smoke_trainer(tmp=None, steps=8, arch="smollm_360m", micro=1):
     )
 
 
+@pytest.mark.slow
 def test_training_reduces_loss():
     cfg, tr = _smoke_trainer(steps=60)
     p, o = tr.init_state()
@@ -38,6 +39,7 @@ def test_training_reduces_loss():
     assert last < first - 0.05, (first, last)
 
 
+@pytest.mark.slow
 def test_grad_accum_matches_single_batch():
     cfg = configs.get_smoke("smollm_360m")
     cfg = dataclasses.replace(cfg, act_dtype="float32", param_dtype="float32")
@@ -66,6 +68,7 @@ def test_grad_accum_matches_single_batch():
     assert d < 1e-5, d
 
 
+@pytest.mark.slow
 def test_kill_and_resume_is_deterministic():
     with tempfile.TemporaryDirectory() as tmp:
         # Uninterrupted 8-step run.
