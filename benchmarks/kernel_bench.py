@@ -5,9 +5,18 @@ times are NOT TPU-representative; the *derived* metrics that transfer are
 structural: grid-step compaction (queue steps vs dense tile count, = the
 MXU-issue reduction on hardware) and packed-weight bytes (HBM traffic for
 weights).  Dense-vs-masked jnp walltimes are included as the XLA:CPU proxy.
+
+``conv_mode_rows`` compares the two conv lowerings head to head — explicit
+im2col (materialises the ``kh·kw``× patch matrix in HBM) vs the direct
+implicit-im2col kernel (patch gather in-kernel; patch bytes are zero by
+construction) — and ``write_conv_trajectory`` appends the result to
+``BENCH_conv.json`` so the im2col→direct transition stays measurable over
+time.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -56,7 +65,8 @@ def _conv_rows(rng):
                 w, batch=b, in_hw=(hw, hw), stride=c["stride"],
                 groups=c["groups"], block=blk,
             )
-            mt, kt, nt = pcw.pw.grid_tiles
+            art = pcw.pw if pcw.pw is not None else pcw.plan
+            mt, kt, nt = art.grid_tiles
             dense_steps = mt * kt * nt
             x = rng.standard_normal((b, hw, hw, c["cin"])).astype(np.float32)
             xj, wj = jnp.asarray(x), jnp.asarray(w)
@@ -72,7 +82,7 @@ def _conv_rows(rng):
             for _ in range(5):
                 f_dense(xj, wj).block_until_ready()
             t_dense = (time.perf_counter() - t0) / 5 * 1e6
-            wbytes = pcw.pw.packed.size * pcw.pw.packed.dtype.itemsize
+            wbytes = art.packed.size * art.packed.dtype.itemsize
             # Dense baseline is the im2col matrix [kh*kw*Cin, Cout] — the
             # operand the kernel would otherwise move — not the compact
             # HWIO tensor (they differ for grouped/depthwise layers).
@@ -84,6 +94,73 @@ def _conv_rows(rng):
                  f"block_density={pcw.density():.3f}")
             )
     return rows
+
+
+def _time_call(fn, reps=3):
+    fn().block_until_ready()  # compile/trace once
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn().block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def conv_mode_rows(rng, *, b=1, hw=14, cin=64, cout=64, kh=3, stride=(1, 1),
+                   w_density=0.3, blk=(32, 32, 32)):
+    """im2col vs direct on the same 3×3 s1 layer: wall-time (interpret-mode
+    proxy) + the metric that transfers to hardware — peak patch-matrix bytes
+    materialised in HBM (direct: 0 by construction)."""
+    w = rng.standard_normal((kh, kh, cin, cout)).astype(np.float32)
+    w2 = w.reshape(-1, cout)
+    w2 *= sparsity.block_prune(w2, w_density, blk[1:])
+    w = w2.reshape(w.shape)
+    x = rng.standard_normal((b, hw, hw, cin)).astype(np.float32)
+    x[x < 0] = 0.0  # post-ReLU dynamic sparsity
+    xj = jnp.asarray(x)
+    rows, result = [], {}
+    for mode in ("im2col", "direct"):
+        pcw = phantom_conv.prepare_conv_weight(
+            w, batch=b, in_hw=(hw, hw), stride=stride, block=blk, mode=mode
+        )
+        oh, ow = pcw.out_hw
+        if mode == "im2col":
+            patch_bytes = b * oh * ow * kh * kh * cin * 4
+            act_bytes = patch_bytes  # what the kernel actually reads
+        else:
+            patch_bytes = 0  # never materialised — the tentpole claim
+            act_bytes = int(np.prod(pcw.plan.phase_shape)) * 4
+        t_us = _time_call(
+            lambda: phantom_conv.phantom_conv_call(xj, pcw, interpret=True)
+        )
+        result[mode] = dict(us=t_us, patch_bytes=patch_bytes,
+                            act_bytes=act_bytes, steps=pcw.steps)
+        rows.append(
+            (f"conv_mode/{mode}/3x3_s{stride[0]}", f"{t_us:.0f}",
+             f"patch_bytes={patch_bytes};act_bytes={act_bytes};"
+             f"steps={pcw.steps}")
+        )
+    return rows, result
+
+
+def write_conv_trajectory(result, path="BENCH_conv.json"):
+    """Append one trajectory point comparing the two conv lowerings."""
+    p = pathlib.Path(path)
+    hist = json.loads(p.read_text()) if p.exists() else []
+    hist.append(
+        {
+            "direct_us": round(result["direct"]["us"], 1),
+            "im2col_us": round(result["im2col"]["us"], 1),
+            "speedup_direct_over_im2col": round(
+                result["im2col"]["us"] / result["direct"]["us"], 3
+            ),
+            "direct_patch_bytes": result["direct"]["patch_bytes"],
+            "im2col_patch_bytes": result["im2col"]["patch_bytes"],
+            "activation_bytes_ratio": round(
+                result["direct"]["act_bytes"] / result["im2col"]["act_bytes"], 3
+            ),
+        }
+    )
+    p.write_text(json.dumps(hist, indent=2) + "\n")
+    return hist[-1]
 
 
 def run():
@@ -125,8 +202,12 @@ def run():
              f"masked_us={t_masked:.0f}")
         )
     rows += _conv_rows(rng)
-    return emit(rows)
+    mode_rows, mode_result = conv_mode_rows(rng)
+    rows += mode_rows
+    return emit(rows), mode_result
 
 
 if __name__ == "__main__":
-    run()
+    _, result = run()
+    point = write_conv_trajectory(result)
+    print("BENCH_conv.json +=", json.dumps(point))

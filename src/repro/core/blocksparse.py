@@ -41,9 +41,11 @@ import numpy as np
 __all__ = [
     "BlockMask",
     "WorkQueue",
+    "ConvWorkQueue",
     "block_mask_from_dense",
     "activation_block_mask_np",
     "build_work_queue",
+    "build_conv_work_queue",
     "balance_columns",
     "pack_blocks",
     "effectual_tiles",
@@ -201,6 +203,52 @@ def build_work_queue(
         last=cat(la_l),
         empty_out=np.asarray(empty, dtype=np.int32).reshape(-1, 2),
         grid_tiles=(m_tiles, kt, nt),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvWorkQueue(WorkQueue):
+    """Work queue whose k-tiles carry conv spatial coordinates.
+
+    For the direct (implicit-im2col) conv lowering the K dimension is tiled
+    per filter tap: flat k index ``(ky·kw + kx)·ct + ci`` where ``ct`` is the
+    number of Cin blocks.  Each step therefore knows *where* in the padded
+    activation its (bm, bk) tile lives — ``ky``/``kx`` are the filter-window
+    offsets and ``ci`` the input-channel block — so the kernel's
+    scalar-prefetch index maps can place the tile at its strided source
+    location and the patch matrix is never materialised.
+    """
+
+    ky: np.ndarray = None  # int32 [Q] filter-row of the step's k-tile
+    kx: np.ndarray = None  # int32 [Q] filter-col
+    ci: np.ndarray = None  # int32 [Q] Cin-block index
+
+
+def build_conv_work_queue(
+    w_bmask: np.ndarray,
+    m_tiles: int,
+    *,
+    kw: int,
+    ct: int,
+    interleave: bool = True,
+) -> ConvWorkQueue:
+    """Compact a tap-aligned conv weight mask into a coordinate-carrying queue.
+
+    ``w_bmask``: bool [kh·kw·ct, Nt] over the tap-aligned ``[kh·kw·ct·bk, N]``
+    weight matrix (each (ky, kx) channel segment padded to ``ct`` full bk
+    blocks, so no k-tile straddles a filter-tap boundary).  The base queue is
+    identical to :func:`build_work_queue`; the spatial coordinates are the
+    k-index decomposition ``ki = (ky·kw + kx)·ct + ci``.
+    """
+    q = build_work_queue(w_bmask, m_tiles, interleave=interleave)
+    ky = q.ki // (kw * ct)
+    kx = (q.ki // ct) % kw
+    ci = q.ki % ct
+    return ConvWorkQueue(
+        **{f.name: getattr(q, f.name) for f in dataclasses.fields(WorkQueue)},
+        ky=ky.astype(np.int32),
+        kx=kx.astype(np.int32),
+        ci=ci.astype(np.int32),
     )
 
 

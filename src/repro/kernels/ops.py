@@ -28,6 +28,7 @@ from .ref import ref_activation_block_mask
 __all__ = [
     "PhantomWeight",
     "prepare_weight",
+    "append_empty_steps",
     "activation_tile_bits",
     "element_mask_tile_bits",
     "phantom_matmul",
@@ -66,6 +67,29 @@ class PhantomWeight:
         return float(self.w_bmask.mean())
 
 
+def append_empty_steps(queue: bs.WorkQueue):
+    """Append the §3.8 empty-output steps to a compacted queue.
+
+    Output tiles with no effectual k-work still must be written (as exact
+    zeros), so each gets one step with ``start = last = 1`` and ``valid = 0``
+    — the kernel zeroes the accumulator, skips the MXU op (the activation
+    bit is forced 0 through ``valid``), and flushes.  Returns
+    ``(mi, ni, ki, wq, start, last, valid)`` covering every output tile
+    exactly once.  Shared by the matmul and direct-conv preparations.
+    """
+    e = queue.empty_out
+    ones = np.ones(len(e), dtype=np.int32)
+    zeros = np.zeros(len(e), dtype=np.int32)
+    mi = np.concatenate([queue.mi, e[:, 0].astype(np.int32)])
+    ni = np.concatenate([queue.ni, e[:, 1].astype(np.int32)])
+    ki = np.concatenate([queue.ki, zeros])
+    wq = np.concatenate([queue.wq, zeros])
+    start = np.concatenate([queue.start, ones])
+    last = np.concatenate([queue.last, ones])
+    valid = np.concatenate([np.ones(queue.steps, dtype=np.int32), zeros])
+    return mi, ni, ki, wq, start, last, valid
+
+
 def prepare_weight(
     w: np.ndarray,
     *,
@@ -83,19 +107,7 @@ def prepare_weight(
     queue = bs.build_work_queue(bmask, mt, interleave=interleave)
     packed = jnp.asarray(bs.pack_blocks(w, bmask, (bk, bn)), dtype=dtype)
     kt = bmask.shape[0]
-
-    # Append §3.8 empty-output steps: start=last=1, compute gated off, so the
-    # kernel writes an exact zero tile.
-    e = queue.empty_out
-    ones = np.ones(len(e), dtype=np.int32)
-    zeros = np.zeros(len(e), dtype=np.int32)
-    mi = np.concatenate([queue.mi, e[:, 0].astype(np.int32)])
-    ni = np.concatenate([queue.ni, e[:, 1].astype(np.int32)])
-    ki = np.concatenate([queue.ki, zeros])
-    wq = np.concatenate([queue.wq, zeros])
-    start = np.concatenate([queue.start, ones])
-    last = np.concatenate([queue.last, ones])
-    valid = np.concatenate([np.ones(queue.steps, dtype=np.int32), zeros])
+    mi, ni, ki, wq, start, last, valid = append_empty_steps(queue)
     return PhantomWeight(
         packed=packed,
         mi=mi,

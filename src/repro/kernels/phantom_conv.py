@@ -1,11 +1,24 @@
-"""Block-sparse convolution on the Phantom core — the im2col lowering.
+"""Block-sparse convolution on the Phantom core — im2col and direct lowerings.
 
 The paper's claim (§4, goal G3) is that Phantom runs *every* CNN layer kind:
 unit- and non-unit-stride convolutions, depthwise, pointwise, and FC — where
-SCNN handles only unit-stride.  The TPU adaptation keeps that property by
-lowering Conv2D to the existing two-sided block-sparse matmul
-(:mod:`repro.kernels.phantom_spmm`) via im2col, mirroring the direct sparse
-convolution lowering of Park et al. and the mask-level
+SCNN handles only unit-stride.  Two lowerings keep that property on the TPU
+adaptation, selected by ``mode`` at weight-load time (DESIGN.md §3):
+
+* ``mode="direct"`` (default) — implicit im2col: the patch matrix is never
+  built.  The work queue carries per-step ``(ky, kx, cin-block)`` coordinates
+  (:class:`repro.core.blocksparse.ConvWorkQueue`) and the kernel
+  (:mod:`repro.kernels.phantom_conv_direct`) gathers each activation tile
+  straight out of the phase-decomposed padded NHWC input via unblocked
+  scalar-prefetch index maps — the only HBM traffic is the raw activation
+  plus the packed nonzero weight payload, mirroring the in-kernel gather of
+  Park et al.'s direct sparse convolution and Elsen et al.'s fast convnets;
+* ``mode="im2col"`` — the explicit lowering below, kept alive as the oracle
+  the direct kernel must match (it materialises the ``kh·kw``× patch matrix
+  in HBM, so it is the memory-hungry reference path).
+
+The im2col lowering maps Conv2D onto the existing two-sided block-sparse
+matmul (:mod:`repro.kernels.phantom_spmm`), mirroring the mask-level
 :func:`repro.core.dataflow.im2col_mask` used by the cycle simulator:
 
 * **weights** ``[kh, kw, Cin, Cout]`` reshape to a ``[kh·kw·Cin, Cout]``
@@ -38,15 +51,20 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
-from . import ops
+from repro.core import blocksparse as bs
+
+from . import ops, phantom_conv_direct
+from .ref import ref_activation_block_mask
 
 __all__ = [
     "PhantomConvWeight",
+    "DirectConvPlan",
     "conv_geometry",
     "im2col_patches",
     "grouped_weight_matrix",
     "prepare_conv_weight",
     "conv_patch_tile_bits",
+    "direct_conv_tile_bits",
     "phantom_conv_call",
     "phantom_conv_act_call",
 ]
@@ -125,11 +143,54 @@ def grouped_weight_matrix(w: np.ndarray, groups: int) -> np.ndarray:
 
 
 @dataclasses.dataclass
+class DirectConvPlan:
+    """Direct-mode weight-load artifact: tap-aligned packed payload plus the
+    coordinate-carrying work queue, fully lowered to the per-step source
+    offsets the kernel's unblocked index maps consume (DESIGN.md §3).
+
+    K is tiled per filter tap — flat k-tile ``(ky·kw + kx)·ct + ci`` — so a
+    k-tile never straddles a (ky, kx) boundary and its activation source is a
+    contiguous ``[ow, bk]`` window of the phase-decomposed padded input.
+    """
+
+    packed: jnp.ndarray  # [nnzb, bk, bn] tap-aligned payload
+    # Per-step source offsets into the [PH, B, Hq, Wq, Cp] phase array:
+    ph: np.ndarray  # (ky % sh)·sw + kx % sw — phase plane
+    nb: np.ndarray  # batch index
+    r0: np.ndarray  # phase row: oy + ky // sh
+    c0: np.ndarray  # phase col window start: kx // sw
+    ch0: np.ndarray  # channel element offset: ci · bk
+    # Queue arrays (incl. §3.8 empty-output steps):
+    mi: np.ndarray
+    ni: np.ndarray
+    wq: np.ndarray
+    start: np.ndarray
+    last: np.ndarray
+    valid: np.ndarray  # 0 on empty-output steps (abit forced 0)
+    flat_ak: np.ndarray  # mi·Kt + ki per step (tile-bit gather index)
+    block: tuple[int, int]  # (bk, bn)
+    ct: int  # Cin blocks per filter tap
+    grid_tiles: tuple[int, int, int]  # (Mt = B·oh, Kt = kh·kw·ct, Nt)
+    phase_shape: tuple[int, int, int, int, int]  # (PH, B, Hq, Wq, Cp)
+    w_bmask: np.ndarray  # [Kt, Nt] tap-aligned weight tile mask
+
+    @property
+    def steps(self) -> int:
+        return int(self.mi.shape[0])
+
+
+@dataclasses.dataclass
 class PhantomConvWeight:
     """Weight-load-time artifact for one conv layer: the packed/compacted
-    ``[kh·kw·Cin, Cout]`` matrix plus the geometry needed to unfold inputs."""
+    ``[kh·kw·Cin, Cout]`` matrix plus the geometry needed to unfold inputs.
 
-    pw: ops.PhantomWeight
+    ``mode="im2col"`` fills ``pw`` (the generic spmm artifact over the
+    explicit patch matrix); ``mode="direct"`` fills ``plan`` (the implicit
+    gather artifact).  ``mask_block`` is the (bm, bn) tiling of the §3.8
+    output-encoding tile mask — identical for both modes, so masks emitted
+    by either path are directly comparable."""
+
+    pw: ops.PhantomWeight | None
     kh: int
     kw: int
     stride: tuple[int, int]
@@ -140,13 +201,76 @@ class PhantomConvWeight:
     batch: int
     in_hw: tuple[int, int]
     out_hw: tuple[int, int]
+    mode: str = "im2col"
+    plan: DirectConvPlan | None = None
+    mask_block: tuple[int, int] = (128, 128)
 
     @property
     def steps(self) -> int:
-        return self.pw.steps
+        return self.pw.steps if self.pw is not None else self.plan.steps
 
     def density(self) -> float:
-        return self.pw.density()
+        bmask = self.pw.w_bmask if self.pw is not None else self.plan.w_bmask
+        return float(bmask.mean())
+
+
+def _prepare_direct(
+    w2d: np.ndarray,  # [kh·kw·Cin, Cout]
+    *,
+    batch: int,
+    kh: int,
+    kw: int,
+    cin: int,
+    oh: int,
+    ow: int,
+    stride: tuple[int, int],
+    block: tuple[int, int, int],
+    interleave: bool,
+    dtype,
+) -> DirectConvPlan:
+    """Build the implicit-gather plan: tap-align the weight, compact it into
+    a coordinate-carrying queue, and lower every step to its element offsets
+    in the phase-decomposed padded activation."""
+    _bm, bk, bn = block
+    cout = w2d.shape[1]
+    sh, sw = stride
+    ct = math.ceil(cin / bk)
+    cp = ct * bk
+    # Tap-align: pad each (ky, kx) channel segment to ct whole bk-blocks so
+    # no k-tile straddles a filter tap (the padding rows are exact zeros).
+    w3 = np.zeros((kh * kw, cp, cout), dtype=w2d.dtype)
+    w3[:, :cin] = w2d.reshape(kh * kw, cin, cout)
+    wpad = w3.reshape(kh * kw * cp, cout)
+    bmask = bs.block_mask_from_dense(wpad, (bk, bn)).mask  # [kh·kw·ct, Nt]
+    mt = batch * oh
+    queue = bs.build_conv_work_queue(bmask, mt, kw=kw, ct=ct, interleave=interleave)
+    packed = jnp.asarray(bs.pack_blocks(wpad, bmask, (bk, bn)), dtype=dtype)
+    mi, ni, ki, wq, start, last, valid = ops.append_empty_steps(queue)
+    pad0 = np.zeros(len(mi) - queue.steps, dtype=np.int32)
+    ky = np.concatenate([queue.ky, pad0])  # empty steps read (in-bounds) 0s
+    kx = np.concatenate([queue.kx, pad0])
+    ci = np.concatenate([queue.ci, pad0])
+    kt = bmask.shape[0]
+    return DirectConvPlan(
+        packed=packed,
+        ph=((ky % sh) * sw + kx % sw).astype(np.int32),
+        nb=(mi // oh).astype(np.int32),
+        r0=(mi % oh + ky // sh).astype(np.int32),
+        c0=(kx // sw).astype(np.int32),
+        ch0=(ci * bk).astype(np.int32),
+        mi=mi,
+        ni=ni,
+        wq=wq,
+        start=start,
+        last=last,
+        valid=valid,
+        flat_ak=mi * kt + ki,
+        block=(bk, bn),
+        ct=ct,
+        grid_tiles=(mt, kt, bmask.shape[1]),
+        phase_shape=(sh * sw, batch, oh + (kh - 1) // sh, ow + (kw - 1) // sw, cp),
+        w_bmask=bmask,
+    )
 
 
 def prepare_conv_weight(
@@ -159,23 +283,44 @@ def prepare_conv_weight(
     groups: int = 1,
     block: tuple[int, int, int] = (128, 128, 128),
     interleave: bool = True,
+    mode: str = "direct",
     dtype=jnp.float32,
 ) -> PhantomConvWeight:
-    """Lower a (pruned) conv weight to the Phantom spmm artifact.
+    """Lower a (pruned) conv weight to a Phantom core artifact.
 
-    The work queue is built on the reshaped ``[kh·kw·Cin, Cout]`` matrix for
-    a patch matrix of ``batch · oh · ow`` rows; zero weight tiles (pruned
-    blocks *and* the structural zeros of grouped convs) never enter the
-    queue.
+    ``mode="direct"`` (default) builds the implicit-im2col plan — the patch
+    matrix is never materialised at runtime; ``mode="im2col"`` builds the
+    explicit spmm artifact over the ``batch · oh · ow``-row patch matrix.
+    Either way, zero weight tiles (pruned blocks *and* the structural zeros
+    of grouped convs) never enter the work queue.
     """
+    if mode not in ("direct", "im2col"):
+        raise ValueError(f"mode must be 'direct' or 'im2col', got {mode!r}")
     w = np.asarray(w)
     kh, kw, cpg, cout = w.shape
     cin = cpg * groups
     h, wd = in_hw
     oh, ow, _ = conv_geometry(h, wd, kh, kw, stride, padding)
-    m = batch * oh * ow
     w2d = w.reshape(kh * kw * cin, cout) if groups == 1 else grouped_weight_matrix(w, groups)
-    pw = ops.prepare_weight(w2d, m=m, block=block, interleave=interleave, dtype=dtype)
+    pw = plan = None
+    if mode == "im2col":
+        pw = ops.prepare_weight(
+            w2d, m=batch * oh * ow, block=block, interleave=interleave, dtype=dtype
+        )
+    else:
+        plan = _prepare_direct(
+            w2d,
+            batch=batch,
+            kh=kh,
+            kw=kw,
+            cin=cin,
+            oh=oh,
+            ow=ow,
+            stride=tuple(stride),
+            block=block,
+            interleave=interleave,
+            dtype=dtype,
+        )
     return PhantomConvWeight(
         pw=pw,
         kh=kh,
@@ -188,6 +333,9 @@ def prepare_conv_weight(
         batch=batch,
         in_hw=(h, wd),
         out_hw=(oh, ow),
+        mode=mode,
+        plan=plan,
+        mask_block=(block[0], block[2]),
     )
 
 
@@ -195,7 +343,7 @@ def conv_patch_tile_bits(
     x_mask: jnp.ndarray, pcw: PhantomConvWeight, threshold: float = 0.0
 ) -> jnp.ndarray:
     """Previous layer's element mask ``[B, H, W, Cin]`` → activation tile
-    bits ``int32 [Mt, Kt]`` of the unfolded patch matrix.
+    bits ``int32 [Mt, Kt]`` of the unfolded patch matrix (im2col mode).
 
     This is the §3.8 inter-layer mask flow: the producing layer's output
     encoding is unfolded with the *same* im2col as the values, so a patch
@@ -206,6 +354,111 @@ def conv_patch_tile_bits(
     )
     bm, bk, _ = pcw.pw.block
     return ops.element_mask_tile_bits(mp, (bm, bk), threshold)
+
+
+def direct_conv_tile_bits(
+    src: jnp.ndarray, pcw: PhantomConvWeight, threshold: float = 0.0
+) -> jnp.ndarray:
+    """Activation values or element mask ``[B, H, W, Cin]`` → tile bits
+    ``int32 [Mt = B·oh, Kt = kh·kw·ct]`` of the *implicit* patch matrix.
+
+    Direct-mode analogue of :func:`conv_patch_tile_bits`: the any-reduction
+    runs on strided slices of the padded input itself — nothing ``kh·kw``×
+    the activation is ever materialised (the slices are views of one padded
+    copy).  Bit (mi, ki) covers exactly the ``[ow, bk]`` window queue step
+    (mi, ki) would read, so gating is as precise as the im2col path's.
+    """
+    plan = pcw.plan
+    kh, kw = pcw.kh, pcw.kw
+    sh, sw = pcw.stride
+    oh, ow = pcw.out_hw
+    bk = plan.block[0]
+    b = src.shape[0]
+    h, wd = pcw.in_hw
+    _, _, pads = conv_geometry(h, wd, kh, kw, pcw.stride, pcw.padding)
+    cp = plan.ct * bk
+    xp = jnp.pad(
+        jnp.asarray(src, jnp.float32),
+        ((0, 0),) + pads + ((0, cp - pcw.in_ch),),
+    )
+    bits = []
+    for dy in range(kh):
+        for dx in range(kw):
+            sl = xp[
+                :, dy : dy + (oh - 1) * sh + 1 : sh, dx : dx + (ow - 1) * sw + 1 : sw, :
+            ]  # [B, oh, ow, Cp] — the tap's windows, all output positions
+            keep = (jnp.abs(sl) > threshold).reshape(b, oh, ow, plan.ct, bk)
+            bits.append(keep.any(axis=(2, 4)))  # [B, oh, ct]
+    k = jnp.stack(bits, axis=2)  # [B, oh, kh·kw, ct] — matches flat-k order
+    return k.reshape(b * oh, kh * kw * plan.ct).astype(jnp.int32)
+
+
+def _phase_input(x: jnp.ndarray, pcw: PhantomConvWeight) -> jnp.ndarray:
+    """Pad and phase-decompose the activation for the direct kernel.
+
+    Returns ``xph [PH, B, Hq, Wq, Cp]`` with
+    ``xph[py·sw + px, b, i, j, c] = xp[b, i·sh + py, j·sw + px, c]`` — a
+    constant-factor copy of the padded input (and for stride 1 just a
+    reshape), after which every (ky, kx) tap reads a *contiguous* window.
+    """
+    plan = pcw.plan
+    sh, sw = pcw.stride
+    h, wd = pcw.in_hw
+    _, _, pads = conv_geometry(h, wd, pcw.kh, pcw.kw, pcw.stride, pcw.padding)
+    _, _, hq, wq, cp = plan.phase_shape
+    xp = jnp.pad(x, ((0, 0),) + pads + ((0, cp - pcw.in_ch),))
+    if sh == 1 and sw == 1:
+        return xp[None]  # Hq = Hp, Wq = Wp: the padded input IS the phase
+    xph = jnp.zeros(plan.phase_shape, x.dtype)
+    for py in range(sh):
+        for px in range(sw):
+            sl = xp[:, py::sh, px::sw, :][:, :hq, :wq, :]
+            xph = xph.at[
+                py * sw + px, :, : sl.shape[1], : sl.shape[2], :
+            ].set(sl)
+    return xph
+
+
+def _direct_call(
+    x: jnp.ndarray,
+    pcw: PhantomConvWeight,
+    *,
+    activation: str,
+    x_mask: jnp.ndarray | None,
+    act_threshold: float,
+    out_dtype,
+    interpret: bool | None,
+) -> jnp.ndarray:
+    plan = pcw.plan
+    interpret = ops.default_interpret() if interpret is None else interpret
+    xph = _phase_input(x, pcw)
+    bits = direct_conv_tile_bits(
+        x if x_mask is None else x_mask, pcw, act_threshold
+    )
+    abit = bits.reshape(-1)[jnp.asarray(plan.flat_ak)] * jnp.asarray(plan.valid)
+    oh, ow = pcw.out_hw
+    y2 = phantom_conv_direct.phantom_conv_direct_call(
+        xph,
+        plan.packed,
+        jnp.asarray(plan.ph),
+        jnp.asarray(plan.nb),
+        jnp.asarray(plan.r0),
+        jnp.asarray(plan.c0),
+        jnp.asarray(plan.ch0),
+        jnp.asarray(plan.mi),
+        jnp.asarray(plan.ni),
+        jnp.asarray(plan.wq),
+        jnp.asarray(plan.start),
+        jnp.asarray(plan.last),
+        abit.astype(jnp.int32),
+        ow=ow,
+        block=plan.block,
+        grid_tiles=plan.grid_tiles,
+        activation=activation,
+        out_dtype=out_dtype or x.dtype,
+        interpret=interpret,
+    )
+    return y2[:, : pcw.out_ch].reshape(pcw.batch, oh, ow, pcw.out_ch)
 
 
 def _check_input(x: jnp.ndarray, pcw: PhantomConvWeight):
@@ -232,8 +485,20 @@ def phantom_conv_call(
     Returns ``[B, oh, ow, Cout]``.  When ``x_mask`` is given, activation
     tile bits come from the producing layer's output encoding instead of
     re-inspecting ``x`` (identical for exact-zero masks, cheaper on TPU).
+    Dispatches on ``pcw.mode``: the direct path gathers patches in-kernel;
+    the im2col path materialises them here first.
     """
     _check_input(x, pcw)
+    if pcw.mode == "direct":
+        return _direct_call(
+            x,
+            pcw,
+            activation="none",
+            x_mask=x_mask,
+            act_threshold=act_threshold,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
     patches = im2col_patches(x, pcw.kh, pcw.kw, pcw.stride, pcw.padding)
     bits = None if x_mask is None else conv_patch_tile_bits(x_mask, pcw, act_threshold)
     y2 = ops.phantom_matmul(
@@ -262,11 +527,29 @@ def phantom_conv_act_call(
     """Fused bias-free ``act(conv(x))`` + §3.8 output-encoding tile mask.
 
     Returns ``(y [B, oh, ow, Cout], y_tile_mask [Mt, Nt])`` — the tile mask
-    is over the flattened ``[B·oh·ow, Cout]`` output (feed it to a following
-    FC/pointwise layer; spatial layers should flow the element mask of the
-    activated output instead).
+    is over the flattened ``[B·oh·ow, Cout]`` output at ``pcw.mask_block``
+    tiling, identical for both modes (feed it to a following FC/pointwise
+    layer; spatial layers should flow the element mask of the activated
+    output instead).  In direct mode the activation is fused into the
+    kernel's flush step and the tile encoding runs as an XLA reduction over
+    the kernel output (on TPU it would fuse into the epilogue; the im2col
+    kernel computes it on the resident VMEM tile — DESIGN.md §3).
     """
     _check_input(x, pcw)
+    if pcw.mode == "direct":
+        y = _direct_call(
+            x,
+            pcw,
+            activation=activation,
+            x_mask=x_mask,
+            act_threshold=act_threshold,
+            out_dtype=out_dtype,
+            interpret=interpret,
+        )
+        ymask = ref_activation_block_mask(
+            y.reshape(-1, pcw.out_ch), pcw.mask_block, mask_threshold
+        ).astype(jnp.int32)
+        return y, ymask
     patches = im2col_patches(x, pcw.kh, pcw.kw, pcw.stride, pcw.padding)
     bits = None if x_mask is None else conv_patch_tile_bits(x_mask, pcw, act_threshold)
     y2, ymask = ops.phantom_linear_act(

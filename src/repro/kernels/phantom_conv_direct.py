@@ -1,0 +1,160 @@
+"""Direct (implicit-im2col) block-sparse convolution — patch gather in-kernel.
+
+The im2col lowering (:mod:`repro.kernels.phantom_conv`) materialises the
+``[B·oh·ow, kh·kw·Cin]`` patch matrix in HBM first: a ``kh·kw``× activation
+blowup (9× for 3×3 layers) that the paper's core never pays.  This kernel
+removes it.  The only array inputs are the *phase-decomposed padded
+activation* and the packed nonzero weight payload; the patch gather happens
+at tile-fetch time, driven by the work queue's precomputed spatial
+coordinates (DESIGN.md §3).
+
+Decomposition (host side, :func:`repro.kernels.phantom_conv` builds it):
+
+* M is tiled per output row: m-tile ``mi = b·oh + oy`` covers the ``ow``
+  flattened output positions of one (batch, output-row) pair, so
+  ``bm = ow`` and ``M = Mt·ow`` exactly — no M padding, ever;
+* K is tiled per filter tap: flat k-tile ``(ky·kw + kx)·ct + ci`` covers one
+  (ky, kx) window offset and one ``bk``-wide Cin block, so a k-tile never
+  straddles a tap boundary and its source is *contiguous* in the activation;
+* stride is absorbed by phase decomposition: the padded input reshapes to
+  ``xph[(ky%sh)·sw + kx%sw, b, i, j, c] = xp[b, i·sh + ky%sh, j·sw + kx%sw, c]``
+  — a constant-factor copy (identity for stride 1), after which the tile for
+  queue step ``(mi, ky, kx, ci)`` is the contiguous window
+  ``xph[ph, b, oy + ky//sh, kx//sw : kx//sw + ow, ci·bk : (ci+1)·bk]``.
+
+Those five offsets are precomputed per queue step and shipped via scalar
+prefetch; the activation BlockSpec uses **unblocked (element-offset)
+indexing**, so each grid step DMAs exactly its ``[ow, bk]`` window out of the
+raw activation — the patch matrix is never built.  Weight compaction and
+activation gating are identical to :mod:`repro.kernels.phantom_spmm`: zero
+weight tiles never enter the queue, zero activation tiles skip their MXU op
+via the prefetched tile bit.
+
+BlockSpec layout (VMEM):
+  xph: (1, 1, 1, ow, bk) window at element offsets
+       (ph[i], nb[i], r0[i], c0[i], ch0[i])          [unblocked indexing]
+  w:   (1, bk, bn) tile of the packed [nnzb, bk, bn] payload at wq[i]
+  y:   (ow, bn) tile at (mi[i], ni[i])    — written on ``last`` steps only
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import ACTIVATIONS
+
+__all__ = ["phantom_conv_direct_kernel", "phantom_conv_direct_call"]
+
+
+def phantom_conv_direct_kernel(
+    # --- scalar prefetch (SMEM) ---
+    ph_ref,
+    nb_ref,
+    r0_ref,
+    c0_ref,
+    ch0_ref,
+    mi_ref,
+    ni_ref,
+    wq_ref,
+    start_ref,
+    last_ref,
+    abit_ref,
+    # --- VMEM operands ---
+    x_ref,  # (1, 1, 1, ow, bk) activation window
+    w_ref,  # (1, bk, bn) packed weight tile
+    o_ref,  # (ow, bn)
+    # --- scratch ---
+    acc_ref,
+    *,
+    activation: str,
+):
+    i = pl.program_id(0)
+
+    @pl.when(start_ref[i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(abit_ref[i] == 1)
+    def _mac():  # effectual tile: gather-free dot on the strided window
+        acc_ref[...] += jnp.dot(
+            x_ref[0, 0, 0], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(last_ref[i] == 1)
+    def _flush():
+        o_ref[...] = ACTIVATIONS[activation](acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "ow",
+        "block",
+        "grid_tiles",
+        "activation",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def phantom_conv_direct_call(
+    xph: jnp.ndarray,  # [PH, B, Hq, Wq, Cp] phase-decomposed padded activation
+    w_packed: jnp.ndarray,  # [nnzb, bk, bn]
+    ph: jnp.ndarray,  # int32 [Q] per-step source offsets (see module docstring)
+    nb: jnp.ndarray,
+    r0: jnp.ndarray,
+    c0: jnp.ndarray,
+    ch0: jnp.ndarray,
+    mi: jnp.ndarray,  # int32 [Q] queue arrays (incl. empty-output steps)
+    ni: jnp.ndarray,
+    wq: jnp.ndarray,
+    start: jnp.ndarray,
+    last: jnp.ndarray,
+    abit: jnp.ndarray,  # int32 [Q] activation tile bit per step (dynamic)
+    *,
+    ow: int,
+    block: tuple[int, int],  # (bk, bn)
+    grid_tiles: tuple[int, int, int],  # (Mt = B·oh, Kt = kh·kw·ct, Nt)
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bk, bn = block
+    mt, _kt, nt = grid_tiles
+    q = mi.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=11,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, ow, bk),
+                lambda i, ph, nb, r0, c0, ch0, mi, ni, wq, st, la, ab: (
+                    ph[i],
+                    nb[i],
+                    r0[i],
+                    c0[i],
+                    ch0[i],
+                ),
+                indexing_mode=pl.Unblocked(),
+            ),
+            pl.BlockSpec(
+                (1, bk, bn),
+                lambda i, ph, nb, r0, c0, ch0, mi, ni, wq, st, la, ab: (wq[i], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (ow, bn),
+            lambda i, ph, nb, r0, c0, ch0, mi, ni, wq, st, la, ab: (mi[i], ni[i]),
+        ),
+        scratch_shapes=[pltpu.VMEM((ow, bn), jnp.float32)],
+    )
+    kernel = functools.partial(phantom_conv_direct_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mt * ow, nt * bn), out_dtype),
+        interpret=interpret,
+    )(ph, nb, r0, c0, ch0, mi, ni, wq, start, last, abit, xph, w_packed)

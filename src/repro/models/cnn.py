@@ -10,10 +10,11 @@ Two execution paths share one parameter pytree:
   numerical oracle;
 * ``prepare_cnn_phantom`` + ``cnn_forward_phantom`` — every conv *and* FC
   layer runs on the Phantom block-sparse core: convs lower through the
-  im2col path (:mod:`repro.kernels.phantom_conv`, any stride / depthwise),
-  FCs through :func:`repro.kernels.ops.phantom_matmul`, and each layer's
-  §3.8 output-encoding element mask flows to the next layer's activation
-  tile bits instead of re-inspecting values.
+  direct implicit-im2col path by default (:mod:`repro.kernels.phantom_conv`,
+  any stride / depthwise; ``conv_mode="im2col"`` falls back to the explicit
+  patch-matrix path), FCs through :func:`repro.kernels.ops.phantom_matmul`,
+  and each layer's §3.8 output-encoding element mask flows to the next
+  layer's activation tile bits instead of re-inspecting values.
 """
 from __future__ import annotations
 
@@ -115,6 +116,7 @@ def prepare_cnn_phantom(
     *,
     block: tuple[int, int, int] = (128, 128, 128),
     interleave: bool = True,
+    conv_mode: str = "direct",
     dtype=jnp.float32,
 ):
     """Weight-load-time lowering of every conv/FC layer to the Phantom core.
@@ -122,6 +124,8 @@ def prepare_cnn_phantom(
     Returns ``{layer name: PhantomConvWeight | PhantomWeight}`` for the given
     ``batch`` (the work queue's M-tile count is shape-specialised).  Prune
     the weights in ``params`` first; zero tiles never enter the queues.
+    Convs use the direct implicit-im2col kernel by default;
+    ``conv_mode="im2col"`` selects the explicit patch-matrix fallback.
     """
     prepared = {}
     for l in layers:
@@ -136,6 +140,7 @@ def prepare_cnn_phantom(
                 groups=l.in_ch if l.depthwise else 1,
                 block=block,
                 interleave=interleave,
+                mode=conv_mode,
                 dtype=dtype,
             )
         else:
@@ -152,6 +157,7 @@ def cnn_forward_phantom(
     layers,
     *,
     act_threshold: float = 0.0,
+    slot_mask: jnp.ndarray | None = None,
     interpret: bool | None = None,
 ):
     """``cnn_forward`` semantics with every conv/FC on the Phantom core.
@@ -164,8 +170,20 @@ def cnn_forward_phantom(
     the mask exact (post-ReLU values are ≥ 0, so ``maxpool(x) ≠ 0 ⇔
     any(mask)``); global average pooling mixes channels, so the mask is
     re-encoded there.
+
+    ``slot_mask`` (float [B], 1 = live, 0 = padded) re-zeroes dead batch
+    slots after every layer's bias+ReLU — without it a zero image turns
+    nonzero at ``relu(0 + b)`` and padded slots do full work from layer 2
+    on.  With it their activations stay exactly zero, so the flowing mask
+    gates every one of their tiles (per output row in the direct conv path;
+    FC tiles gate only where a bm-row tile holds no live sample).  Live
+    rows are unaffected — samples never mix across the batch dim.
     """
     prev_hw = x.shape[1]
+    sm4 = sm2 = None
+    if slot_mask is not None:
+        sm4 = slot_mask[:, None, None, None]
+        sm2 = slot_mask[:, None]
     mask = None  # producing layer's element mask; None ⇒ derive from values
     for l in layers:
         if isinstance(l, ConvSpec):
@@ -184,6 +202,8 @@ def cnn_forward_phantom(
                 interpret=interpret,
             )
             x = jax.nn.relu(y + p["b"])
+            if sm4 is not None:
+                x = x * sm4
             # §3.8 output encoding: the producer applies the (lossy) τ here;
             # consumers then gate on the mask's exact zeros.
             mask = (x > act_threshold).astype(x.dtype)
@@ -222,6 +242,8 @@ def cnn_forward_phantom(
             )
             if l.name != layers[-1].name:
                 x = jax.nn.relu(y)
+                if sm2 is not None:
+                    x = x * sm2
                 mask = (x > act_threshold).astype(x.dtype)
             else:
                 x = y

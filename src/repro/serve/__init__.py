@@ -1,4 +1,5 @@
-"""Serving engine."""
+"""Serving engines: token-level LM serving and batched CNN inference."""
+from .cnn import CnnRequest, CnnServeEngine, serve_cnn
 from .engine import ServeEngine, Request
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "CnnRequest", "CnnServeEngine", "serve_cnn"]

@@ -1,0 +1,149 @@
+"""Batched CNN serving on the Phantom core: fixed-slot image batching.
+
+The Phantom conv artifacts are shape-specialised at weight-load time (the
+work queue's M-tile count bakes in the batch size), so a serving engine must
+never change the batch dimension between requests.  ``CnnServeEngine`` owns a
+fixed pool of ``batch_size`` slots: incoming images queue up, each engine
+step fills every slot (padding short batches with zero images), and the whole
+prepared network — every conv through the direct implicit-im2col kernel,
+every FC through the block-sparse matmul, §3.8 masks flowing between layers
+— runs as one compiled program whose shapes never vary, so nothing ever
+recompiles after the first step.
+
+Zero-image padding is correct because samples are independent (conv/FC act
+per-row of the batch), and cheap because dead slots stay gated: the forward
+takes a ``slot_mask`` that re-zeroes padded rows after every bias+ReLU
+(``relu(0 + b)`` would otherwise light them up from layer 2 on), so their
+§3.8 masks gate every padded tile in the direct conv path (m-tiles are
+per-sample rows) and every FC tile whose bm rows hold no live sample
+(DESIGN.md §4).
+
+``serve_cnn`` is the one-shot convenience wrapper over a list of images.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from collections import deque
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.cnn import cnn_forward_phantom, prepare_cnn_phantom
+
+__all__ = ["CnnRequest", "CnnServeEngine", "serve_cnn"]
+
+
+@dataclasses.dataclass
+class CnnRequest:
+    rid: int
+    image: np.ndarray  # [H, W, C]
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+
+
+class CnnServeEngine:
+    """Continuous batched inference over a prepared Phantom CNN.
+
+    ``params``/``layers`` as in :func:`repro.models.cnn.cnn_forward`; the
+    network is lowered once in the constructor for exactly ``batch_size``
+    slots (``conv_mode`` selects the conv lowering, direct by default).
+    """
+
+    def __init__(
+        self,
+        params,
+        layers,
+        *,
+        batch_size: int,
+        block: tuple[int, int, int] = (128, 128, 128),
+        conv_mode: str = "direct",
+        act_threshold: float = 0.0,
+        interpret: bool | None = None,
+    ):
+        self.params, self.layers = params, layers
+        self.b = batch_size
+        self.act_threshold = act_threshold
+        self.interpret = interpret
+        self.prepared = prepare_cnn_phantom(
+            params, layers, batch_size, block=block, conv_mode=conv_mode
+        )
+        first = layers[0]
+        self.in_shape = (first.in_h, first.in_w, first.in_ch)
+        self.queue: deque[CnnRequest] = deque()
+        self._rid = itertools.count()
+        self.batches_run = 0
+        self.images_served = 0
+        self.padded_slots = 0
+
+    # -- client API ----------------------------------------------------------
+    def submit(self, image: np.ndarray) -> CnnRequest:
+        image = np.asarray(image, dtype=np.float32)
+        if image.shape != self.in_shape:
+            raise ValueError(f"image {image.shape} != expected {self.in_shape}")
+        req = CnnRequest(next(self._rid), image)
+        self.queue.append(req)
+        return req
+
+    def step(self) -> list[CnnRequest]:
+        """Run one full batch: up to ``batch_size`` queued requests, padded
+        with zero images that the slot mask keeps gated off layer to layer."""
+        if not self.queue:
+            return []
+        reqs = [self.queue.popleft() for _ in range(min(self.b, len(self.queue)))]
+        x = np.zeros((self.b,) + self.in_shape, dtype=np.float32)
+        slot = np.zeros(self.b, dtype=np.float32)
+        for s, req in enumerate(reqs):
+            x[s] = req.image
+            slot[s] = 1.0
+        logits = cnn_forward_phantom(
+            self.params,
+            self.prepared,
+            jnp.asarray(x),
+            self.layers,
+            act_threshold=self.act_threshold,
+            slot_mask=jnp.asarray(slot),
+            interpret=self.interpret,
+        )
+        logits = np.asarray(logits)
+        for s, req in enumerate(reqs):
+            req.logits = logits[s]
+            req.done = True
+        self.batches_run += 1
+        self.images_served += len(reqs)
+        self.padded_slots += self.b - len(reqs)
+        return reqs
+
+    def run(self) -> list[CnnRequest]:
+        """Drain the queue; returns all completed requests in submit order."""
+        finished = []
+        while self.queue:
+            finished.extend(self.step())
+        return finished
+
+
+def serve_cnn(
+    params,
+    layers,
+    images,
+    *,
+    batch_size: int = 4,
+    block: tuple[int, int, int] = (128, 128, 128),
+    conv_mode: str = "direct",
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """One-shot batched inference: ``[N, H, W, C]`` images → ``[N, classes]``
+    logits through one fixed-shape compiled program (requests beyond
+    ``batch_size`` reuse the jit cache — no recompilation)."""
+    eng = CnnServeEngine(
+        params,
+        layers,
+        batch_size=batch_size,
+        block=block,
+        conv_mode=conv_mode,
+        interpret=interpret,
+    )
+    reqs = [eng.submit(im) for im in images]
+    eng.run()
+    return np.stack([r.logits for r in reqs])

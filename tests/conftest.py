@@ -9,8 +9,36 @@ NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device; only
 the dry-run forces 512 placeholder devices (and it does so in its own
 process, repro/launch/dryrun.py lines 1–3).
 """
+import jax.numpy as jnp
 import numpy as np
 import pytest
+
+from repro.core.dataflow import ConvSpec, FCSpec
+
+
+def toy_cnn(rng):
+    """Four-layer toy CNN (conv → depthwise s2 → pointwise → GAP-FC) with
+    0.4-density pruned weights — shared by the conv-parity and serve tests."""
+    layers = [
+        ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)),
+        ConvSpec("c2-dw", 16, 16, 8, 8, 3, 3, (2, 2), depthwise=True),
+        ConvSpec("c2-pw", 16, 32, 4, 4, 1, 1, (1, 1)),
+        FCSpec("fc", 32, 10, pool="gap"),
+    ]
+    params = {}
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            wshape = (l.kh, l.kw, 1 if l.depthwise else l.in_ch, l.out_ch)
+            bshape = (l.out_ch,)
+        else:
+            wshape, bshape = (l.in_dim, l.out_dim), (l.out_dim,)
+        w = rng.standard_normal(wshape).astype(np.float32) * 0.1
+        w *= rng.random(wshape) < 0.4
+        params[l.name] = {
+            "w": jnp.asarray(w),
+            "b": jnp.asarray(rng.standard_normal(bshape).astype(np.float32) * 0.1),
+        }
+    return layers, params
 
 
 def pytest_collection_modifyitems(config, items):

@@ -1,0 +1,68 @@
+"""Batched CNN serving: fixed-slot batching over the prepared Phantom net.
+
+The conv artifacts are shape-specialised, so the engine pads short batches
+with zero images (whose tiles are fully gated) instead of recompiling — the
+whole request stream runs through one compiled program."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import toy_cnn as _toy_net
+
+from repro.models import cnn
+from repro.serve import CnnServeEngine, serve_cnn
+
+BLK = (16, 16, 16)
+
+
+def test_serve_matches_dense_forward_with_padded_batches():
+    """3 requests through batch-2 slots: results equal the dense forward per
+    image; the short second batch is padded, not recompiled."""
+    rng = np.random.default_rng(17)
+    layers, params = _toy_net(rng)
+    imgs = rng.standard_normal((3, 8, 8, 3)).astype(np.float32)
+    eng = CnnServeEngine(params, layers, batch_size=2, block=BLK, interpret=True)
+    reqs = [eng.submit(im) for im in imgs]
+    done = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2] and all(r.done for r in reqs)
+    assert (eng.batches_run, eng.images_served, eng.padded_slots) == (2, 3, 1)
+    ref = np.asarray(cnn.cnn_forward(params, jnp.asarray(imgs), layers))
+    got = np.stack([r.logits for r in reqs])
+    np.testing.assert_allclose(got, ref, atol=1e-4, rtol=1e-3)
+
+
+def test_serve_cnn_one_shot_wrapper():
+    rng = np.random.default_rng(23)
+    layers, params = _toy_net(rng)
+    imgs = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    logits = serve_cnn(params, layers, imgs, batch_size=2, block=BLK, interpret=True)
+    ref = np.asarray(cnn.cnn_forward(params, jnp.asarray(imgs), layers))
+    np.testing.assert_allclose(logits, ref, atol=1e-4, rtol=1e-3)
+
+
+def test_slot_mask_keeps_padded_rows_zero():
+    """The slot mask defeats relu(0 + bias): a padded slot's activations
+    stay exactly zero through every layer, so its flowing §3.8 mask gates
+    all of its tiles and its logits collapse to the final-layer bias."""
+    rng = np.random.default_rng(31)
+    layers, params = _toy_net(rng)
+    imgs = np.zeros((2, 8, 8, 3), np.float32)
+    imgs[0] = rng.standard_normal((8, 8, 3)).astype(np.float32)
+    prepared = cnn.prepare_cnn_phantom(params, layers, batch=2, block=BLK)
+    y = cnn.cnn_forward_phantom(
+        params, prepared, jnp.asarray(imgs), layers,
+        slot_mask=jnp.asarray([1.0, 0.0]), interpret=True,
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y)[1], np.asarray(params[layers[-1].name]["b"])
+    )
+    # And the live row is untouched by the masking.
+    ref = cnn.cnn_forward(params, jnp.asarray(imgs[:1]), layers)
+    np.testing.assert_allclose(np.asarray(y)[0], np.asarray(ref)[0], atol=1e-4)
+
+
+def test_serve_rejects_wrong_shape():
+    rng = np.random.default_rng(3)
+    layers, params = _toy_net(rng)
+    eng = CnnServeEngine(params, layers, batch_size=1, block=BLK, interpret=True)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((4, 4, 3), np.float32))

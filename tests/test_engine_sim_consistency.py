@@ -1,0 +1,76 @@
+"""Engine ↔ simulator consistency: the functional engine's effectual-MAC
+count must equal the mask-level count the cycle simulator schedules for the
+same masks (paper §5.1 — "only this information is needed to efficiently
+represent the MAC operations needed per layer").  Guards the cycle model
+against drifting from real execution: both sides are driven from one seeded
+layer, with no sampling, so the counts must agree exactly."""
+import numpy as np
+
+from repro.core import dataflow as df, engine
+
+
+def _mask_level_macs(a_mask, w_vec, kh, kw, stride):
+    """Ground truth: Σ over output positions of |window ∧ weight| (VALID)."""
+    windows = df.im2col_mask(a_mask, kh, kw, stride, pad="valid")
+    return int((windows & w_vec[None, :]).sum())
+
+
+def test_engine_valid_macs_equals_mask_level_count():
+    """Single-channel conv: engine.valid_macs == im2col-mask popcount, for
+    unit and non-unit strides (goal G3 both ways)."""
+    rng = np.random.default_rng(42)
+    act = rng.standard_normal((9, 9)) * (rng.random((9, 9)) < 0.4)
+    flt = rng.standard_normal((3, 3)) * (rng.random((3, 3)) < 0.6)
+    for stride in ((1, 1), (2, 2)):
+        res = engine.phantom_conv2d(act, flt, stride=stride)
+        expect = _mask_level_macs(act != 0, (flt != 0).reshape(-1), 3, 3, stride)
+        assert res.stats.valid_macs == expect
+        # The §3.8 output mask covers every nonzero output.
+        assert np.all(res.out_mask[res.outputs != 0])
+
+
+def test_engine_valid_macs_equals_simulator_layer_work():
+    """Depthwise layer, full sampling: Σ per-channel engine valid_macs ==
+    the simulator's scheduled valid_macs for identical masks — the cycle
+    model never times work the functional engine would not execute."""
+    rng = np.random.default_rng(7)
+    c, h = 4, 9
+    spec = df.ConvSpec("dw", c, c, h, h, 3, 3, (1, 1), depthwise=True, pad="valid")
+    act = rng.standard_normal((h, h, c)) * (rng.random((h, h, c)) < 0.5)
+    flt = rng.standard_normal((3, 3, c)) * (rng.random((3, 3, c)) < 0.7)
+
+    work = df.layer_work(spec, flt != 0, act != 0, df.Phantom2DConfig(), df.FULL)
+    sim_macs = sum(cw.valid_macs for rows in work.jobs for cw in rows)
+    assert all(cw.scale == 1.0 for rows in work.jobs for cw in rows)
+
+    eng_macs = sum(
+        engine.phantom_conv2d(act[:, :, ch], flt[:, :, ch]).stats.valid_macs
+        for ch in range(c)
+    )
+    assert eng_macs == sim_macs
+
+    # And both equal the raw mask-level ground truth.
+    expect = sum(
+        _mask_level_macs(act[:, :, ch] != 0, (flt[:, :, ch] != 0).reshape(-1), 3, 3, (1, 1))
+        for ch in range(c)
+    )
+    assert eng_macs == expect
+
+
+def test_engine_valid_macs_equals_simulator_regular_conv():
+    """Regular conv (1 input channel, several filters): per-filter engine
+    runs vs the simulator's filter-broadcast decomposition."""
+    rng = np.random.default_rng(11)
+    h, cout = 8, 3
+    spec = df.ConvSpec("conv", 1, cout, h, h, 3, 3, (1, 1), pad="valid")
+    act = rng.standard_normal((h, h, 1)) * (rng.random((h, h, 1)) < 0.5)
+    flt = rng.standard_normal((3, 3, 1, cout)) * (rng.random((3, 3, 1, cout)) < 0.6)
+
+    work = df.layer_work(spec, flt != 0, act != 0, df.Phantom2DConfig(), df.FULL)
+    sim_macs = sum(cw.valid_macs for rows in work.jobs for cw in rows)
+
+    eng_macs = sum(
+        engine.phantom_conv2d(act[:, :, 0], flt[:, :, 0, f]).stats.valid_macs
+        for f in range(cout)
+    )
+    assert eng_macs == sim_macs

@@ -1,8 +1,11 @@
-"""Reference parity for the im2col block-sparse conv path (interpret mode).
+"""Reference parity for both conv lowerings (interpret mode).
 
 Oracle is ``jax.lax.conv_general_dilated`` on the same (pruned) weight —
 kept tiles compute exactly, τ=0 activation gating only skips exact-zero
 tiles, so the dense op is the ground truth (``ref.ref_phantom_conv``).
+Every parity case runs the grid twice: ``mode="direct"`` (implicit im2col,
+patch gather in-kernel) and ``mode="im2col"`` (explicit patch matrix), and
+asserts direct == im2col == lax.conv.
 """
 import zlib
 
@@ -10,12 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.dataflow import ConvSpec, FCSpec
 from repro.kernels import phantom_conv as pc
 from repro.kernels.ref import ref_phantom_conv
 from repro.models import cnn
 
 BLK = (16, 16, 16)
+MODES = ("direct", "im2col")
 
 
 def _sparse(rng, shape, density):
@@ -25,16 +28,23 @@ def _sparse(rng, shape, density):
     return a
 
 
-def _conv_case(rng, *, b=1, h=7, w=7, cin=8, cout=16, kh=3, kw=3,
-               stride=(1, 1), padding="SAME", groups=1, w_density=1.0,
-               a_density=1.0, blk=BLK):
+def _conv_data(rng, *, b=1, h=7, w=7, cin=8, cout=16, kh=3, kw=3,
+               groups=1, w_density=1.0, a_density=1.0):
     wt = _sparse(rng, (kh, kw, cin // groups, cout), w_density)
     x = _sparse(rng, (b, h, w, cin), a_density)
+    return jnp.asarray(x), jnp.asarray(wt)
+
+
+def _conv_case(rng, *, b=1, h=7, w=7, cin=8, cout=16, kh=3, kw=3,
+               stride=(1, 1), padding="SAME", groups=1, w_density=1.0,
+               a_density=1.0, blk=BLK, mode="direct"):
+    x, wt = _conv_data(rng, b=b, h=h, w=w, cin=cin, cout=cout, kh=kh, kw=kw,
+                       groups=groups, w_density=w_density, a_density=a_density)
     pcw = pc.prepare_conv_weight(
-        wt, batch=b, in_hw=(h, w), stride=stride, padding=padding,
-        groups=groups, block=blk,
+        np.asarray(wt), batch=b, in_hw=(h, w), stride=stride, padding=padding,
+        groups=groups, block=blk, mode=mode,
     )
-    return jnp.asarray(x), jnp.asarray(wt), pcw
+    return x, wt, pcw
 
 
 def _assert_parity(x, wt, pcw, tol=1e-4):
@@ -42,83 +52,149 @@ def _assert_parity(x, wt, pcw, tol=1e-4):
     yref = ref_phantom_conv(x, wt, pcw.stride, pcw.padding, pcw.groups)
     assert y.shape == yref.shape
     np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=tol, rtol=1e-3)
+    return y
 
 
-# One case per point of the issue's sweep axes: stride x padding x kernel,
-# plus the weight/activation sparsity grid on the 3x3 s1 SAME base case.
+def _assert_tri_parity(rng, tol=1e-4, b=1, h=7, w=7, stride=(1, 1),
+                       padding="SAME", blk=BLK, **data_kw):
+    """direct == im2col == lax.conv on one sampled case (same data)."""
+    x, wt = _conv_data(rng, b=b, h=h, w=w, **data_kw)
+    ys = {}
+    for mode in MODES:
+        pcw = pc.prepare_conv_weight(
+            np.asarray(wt), batch=b, in_hw=(h, w), stride=stride,
+            padding=padding, groups=data_kw.get("groups", 1), block=blk,
+            mode=mode,
+        )
+        ys[mode] = _assert_parity(x, wt, pcw, tol)
+    np.testing.assert_allclose(
+        np.asarray(ys["direct"]), np.asarray(ys["im2col"]), atol=tol, rtol=1e-3
+    )
+
+
+# The issue's parity grid: stride x padding x kernel x groups at odd H/W,
+# plus the weight/activation density product on the 3x3 s1 SAME base case.
 GEOMS = [
-    (kh, stride, padding)
-    for kh in (1, 3)
+    (kh, stride, padding, grouped)
+    for kh in (1, 3, 5)
     for stride in ((1, 1), (2, 2))
     for padding in ("SAME", "VALID")
+    for grouped in (False, True)
 ]
 
 
-@pytest.mark.parametrize("kh,stride,padding", GEOMS, ids=str)
-def test_conv_geometry_parity(kh, stride, padding):
-    rng = np.random.default_rng(zlib.crc32(repr((kh, stride, padding)).encode()))
-    x, wt, pcw = _conv_case(
-        rng, kh=kh, kw=kh, stride=stride, padding=padding,
-        w_density=0.5, a_density=0.5,
+@pytest.mark.parametrize("kh,stride,padding,grouped", GEOMS, ids=str)
+def test_conv_geometry_parity(kh, stride, padding, grouped):
+    seed = zlib.crc32(repr((kh, stride, padding, grouped)).encode())
+    rng = np.random.default_rng(seed)
+    cin = 8
+    _assert_tri_parity(
+        rng, h=9, w=9, cin=cin, cout=16, kh=kh, kw=kh, stride=stride,
+        padding=padding, groups=cin if grouped else 1,
+        w_density=0.5, a_density=0.5, blk=(8, 8, 8),
     )
-    _assert_parity(x, wt, pcw)
 
 
-@pytest.mark.parametrize("w_density", [1.0, 0.5, 0.1], ids=lambda d: f"wd{d}")
-@pytest.mark.parametrize("a_density", [1.0, 0.5, 0.1], ids=lambda d: f"ad{d}")
+DENSITIES = [0.0, 0.1, 0.5, 1.0]
+
+
+@pytest.mark.parametrize("w_density", DENSITIES, ids=lambda d: f"wd{d}")
+@pytest.mark.parametrize("a_density", DENSITIES, ids=lambda d: f"ad{d}")
 def test_conv_sparsity_parity(w_density, a_density):
     rng = np.random.default_rng(7)
-    x, wt, pcw = _conv_case(rng, w_density=w_density, a_density=a_density)
-    _assert_parity(x, wt, pcw)
+    _assert_tri_parity(rng, w_density=w_density, a_density=a_density)
 
 
-def test_conv_depthwise_and_grouped():
-    rng = np.random.default_rng(3)
-    for groups, cin, cout, stride in ((32, 32, 32, (2, 2)), (4, 8, 16, (1, 1))):
-        x, wt, pcw = _conv_case(
-            rng, cin=cin, cout=cout, groups=groups, stride=stride, w_density=0.6,
+def test_direct_equals_im2col_bit_exactly():
+    """Small-integer data, Cin a multiple of bk: both paths tile K into the
+    identical tap-aligned blocks and accumulate in the identical queue order,
+    and fp32 arithmetic on small integers is exact — so direct, im2col, and
+    ``lax.conv`` must agree bit for bit."""
+    rng = np.random.default_rng(29)
+    wt = rng.integers(-3, 4, (3, 3, 8, 16)).astype(np.float32)
+    x = rng.integers(-3, 4, (2, 9, 9, 8)).astype(np.float32)
+    wt[0, 0, 0, :] = 1.0  # no accidental all-zero k-tile rows
+    ys = []
+    for mode in MODES:
+        pcw = pc.prepare_conv_weight(
+            wt, batch=2, in_hw=(9, 9), block=(8, 8, 8), mode=mode
         )
-        _assert_parity(x, wt, pcw)
-        if groups == cin:  # depthwise block-diagonal weight compacts away
-            assert pcw.density() < 1.0
+        ys.append(np.asarray(pc.phantom_conv_call(jnp.asarray(x), pcw, interpret=True)))
+    yref = np.asarray(ref_phantom_conv(jnp.asarray(x), jnp.asarray(wt), (1, 1), "SAME"))
+    np.testing.assert_array_equal(ys[0], ys[1])
+    np.testing.assert_array_equal(ys[0], yref)
+
+
+def test_direct_materializes_no_patch_matrix():
+    """The direct plan's runtime activation footprint is the phase-decomposed
+    padded input — a constant-factor copy — never the kh·kw× patch matrix."""
+    rng = np.random.default_rng(31)
+    for stride in ((1, 1), (2, 2)):
+        _, _, pcw = _conv_case(rng, h=16, w=16, cin=16, cout=16, stride=stride,
+                               w_density=0.5, blk=(16, 16, 16))
+        ph, b, hq, wq, cp = pcw.plan.phase_shape
+        oh, ow = pcw.out_hw
+        sh, sw = pcw.stride
+        h, w = pcw.in_hw
+        _, _, pads = pc.conv_geometry(h, w, pcw.kh, pcw.kw, stride, pcw.padding)
+        hp, wp = h + sum(pads[0]), w + sum(pads[1])
+        patch_elems = pcw.batch * oh * ow * pcw.kh * pcw.kw * cp
+        phase_elems = ph * b * hq * wq * cp
+        # Phase array ≈ padded input (up to per-phase rounding), never the
+        # kh·kw/(sh·sw)×-redundant patch matrix.
+        assert phase_elems <= pcw.batch * (hp + sh) * (wp + sw) * cp
+        assert phase_elems < patch_elems
+        # Stride-1: the phase array IS the padded input, shape for shape.
+        if stride == (1, 1):
+            assert (ph, hq, wq) == (1, hp, wp)
 
 
 def test_vgg16_conv_layer_at_70pct_weight_sparsity():
-    """Acceptance: VGG16-style 3x3 stride-1 conv (conv4: 128→128) ≤1e-4."""
+    """Acceptance: VGG16-style 3x3 stride-1 conv (conv4: 128→128) ≤1e-4,
+    both lowerings."""
     rng = np.random.default_rng(11)
-    x, wt, pcw = _conv_case(
+    _assert_tri_parity(
         rng, h=8, w=8, cin=128, cout=128, stride=(1, 1), w_density=0.3,
-        a_density=0.4, blk=(32, 32, 32),
+        a_density=0.4, blk=(32, 32, 32), tol=1e-4,
     )
-    _assert_parity(x, wt, pcw, tol=1e-4)
 
 
 def test_mobilenet_stride2_conv_at_70pct_weight_sparsity():
     """Acceptance: MobileNet-style stride-2 convs (conv1 3→32 and a
-    depthwise s2 layer) ≤1e-4."""
+    depthwise s2 layer) ≤1e-4, both lowerings."""
     rng = np.random.default_rng(13)
-    x, wt, pcw = _conv_case(
+    _assert_tri_parity(
         rng, h=16, w=16, cin=3, cout=32, stride=(2, 2), w_density=0.3,
-        a_density=0.99, blk=(32, 32, 32),
+        a_density=0.99, blk=(32, 32, 32), tol=1e-4,
     )
-    _assert_parity(x, wt, pcw, tol=1e-4)
-    x, wt, pcw = _conv_case(
+    _assert_tri_parity(
         rng, h=8, w=8, cin=64, cout=64, groups=64, stride=(2, 2),
-        w_density=0.3, a_density=0.4, blk=(32, 32, 32),
+        w_density=0.3, a_density=0.4, blk=(32, 32, 32), tol=1e-4,
     )
-    _assert_parity(x, wt, pcw, tol=1e-4)
 
 
-def test_conv_act_call_fused_relu_and_output_mask():
+def test_depthwise_weight_compacts():
+    """Depthwise block-diagonal weight compacts away in both lowerings."""
+    rng = np.random.default_rng(3)
+    for mode in MODES:
+        _, _, pcw = _conv_case(
+            rng, cin=32, cout=32, groups=32, stride=(2, 2), w_density=0.6,
+            mode=mode,
+        )
+        assert pcw.density() < 1.0
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_conv_act_call_fused_relu_and_output_mask(mode):
     """Fused ``relu(conv(x))`` + §3.8 output tile mask vs the unfused path."""
     from repro.kernels.ref import ref_activation_block_mask
 
     rng = np.random.default_rng(23)
-    x, wt, pcw = _conv_case(rng, w_density=0.5, a_density=0.5)
+    x, wt, pcw = _conv_case(rng, w_density=0.5, a_density=0.5, mode=mode)
     y, ymask = pc.phantom_conv_act_call(x, pcw, activation="relu", interpret=True)
     yref = jnp.maximum(ref_phantom_conv(x, wt, pcw.stride, pcw.padding), 0.0)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yref), atol=1e-4, rtol=1e-3)
-    bm, _, bn = pcw.pw.block
+    bm, bn = pcw.mask_block
     y2 = np.zeros((ymask.shape[0] * bm, ymask.shape[1] * bn), np.float32)
     flat = np.asarray(yref).reshape(-1, pcw.out_ch)
     y2[: flat.shape[0], : flat.shape[1]] = flat
@@ -126,11 +202,34 @@ def test_conv_act_call_fused_relu_and_output_mask():
     assert (np.asarray(ymask).astype(bool) == mref).all()
 
 
-def test_conv_mask_flow_matches_value_derived_bits():
+def test_output_mask_identical_across_modes():
+    """§3.8: the direct path's output-encoding tile mask equals the im2col
+    path's bit for bit (integer data keeps the arithmetic exact, so even
+    would-be rounding ties are ruled out)."""
+    rng = np.random.default_rng(41)
+    wt = rng.integers(-2, 3, (3, 3, 8, 16)).astype(np.float32)
+    wt *= rng.random(wt.shape) < 0.4
+    x = (rng.integers(-2, 3, (2, 9, 9, 8)) * (rng.random((2, 9, 9, 8)) < 0.4)).astype(np.float32)
+    masks, ys = [], []
+    for mode in MODES:
+        pcw = pc.prepare_conv_weight(
+            wt, batch=2, in_hw=(9, 9), block=(8, 8, 8), mode=mode
+        )
+        y, m = pc.phantom_conv_act_call(
+            jnp.asarray(x), pcw, activation="relu", interpret=True
+        )
+        ys.append(np.asarray(y))
+        masks.append(np.asarray(m))
+    np.testing.assert_array_equal(ys[0], ys[1])
+    np.testing.assert_array_equal(masks[0], masks[1])
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_conv_mask_flow_matches_value_derived_bits(mode):
     """§3.8 flow: bits from the producer's element mask == bits from values,
     and the gated output is identical."""
     rng = np.random.default_rng(5)
-    x, wt, pcw = _conv_case(rng, w_density=0.5, a_density=0.3)
+    x, wt, pcw = _conv_case(rng, w_density=0.5, a_density=0.3, mode=mode)
     y_values = pc.phantom_conv_call(x, pcw, interpret=True)
     y_mask = pc.phantom_conv_call(x, pcw, x_mask=(x != 0), interpret=True)
     np.testing.assert_array_equal(np.asarray(y_values), np.asarray(y_mask))
@@ -146,30 +245,19 @@ def _toy_params(rng, spec):
     return params
 
 
-def test_cnn_phantom_forward_toy_net():
+@pytest.mark.parametrize("conv_mode", MODES)
+def test_cnn_phantom_forward_toy_net(conv_mode):
     """Tier-1 end-to-end: conv → depthwise s2 → pointwise → FC through the
     phantom path matches the dense forward, masks flowing between layers."""
+    from conftest import toy_cnn
+
     rng = np.random.default_rng(17)
-    layers = [
-        ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)),
-        ConvSpec("c2-dw", 16, 16, 8, 8, 3, 3, (2, 2), depthwise=True),
-        ConvSpec("c2-pw", 16, 32, 4, 4, 1, 1, (1, 1)),
-        FCSpec("fc", 32, 10, pool="gap"),
-    ]
-    params = {}
-    for l in layers:
-        if isinstance(l, ConvSpec):
-            wshape = (l.kh, l.kw, 1 if l.depthwise else l.in_ch, l.out_ch)
-            bshape = (l.out_ch,)
-        else:
-            wshape, bshape = (l.in_dim, l.out_dim), (l.out_dim,)
-        params[l.name] = {
-            "w": jnp.asarray(_sparse(rng, wshape, 0.4) * 0.1),
-            "b": jnp.asarray(_sparse(rng, bshape, 1.0) * 0.1),
-        }
+    layers, params = toy_cnn(rng)
     x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
     y_dense = cnn.cnn_forward(params, x, layers)
-    prepared = cnn.prepare_cnn_phantom(params, layers, batch=2, block=BLK)
+    prepared = cnn.prepare_cnn_phantom(
+        params, layers, batch=2, block=BLK, conv_mode=conv_mode
+    )
     y_ph = cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
     np.testing.assert_allclose(
         np.asarray(y_ph), np.asarray(y_dense), atol=1e-4, rtol=1e-3
@@ -177,8 +265,9 @@ def test_cnn_phantom_forward_toy_net():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("conv_mode", MODES)
 @pytest.mark.parametrize("name,hw", [("vgg16", 16), ("mobilenet", 32)])
-def test_cnn_phantom_forward_full_network(name, hw):
+def test_cnn_phantom_forward_full_network(name, hw, conv_mode):
     """Whole-network parity (all 16 VGG16 / 28 MobileNet layers) at reduced
     resolution — every conv and FC goes through the Phantom core."""
     rng = np.random.default_rng(0)
@@ -186,7 +275,9 @@ def test_cnn_phantom_forward_full_network(name, hw):
     params = _toy_params(rng, spec)
     x = jnp.asarray(rng.standard_normal((1, hw, hw, 3)).astype(np.float32))
     y_dense = cnn.cnn_forward(params, x, layers)
-    prepared = cnn.prepare_cnn_phantom(params, layers, batch=1, block=(32, 32, 32))
+    prepared = cnn.prepare_cnn_phantom(
+        params, layers, batch=1, block=(32, 32, 32), conv_mode=conv_mode
+    )
     y_ph = cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
     scale = max(1.0, float(jnp.abs(y_dense).max()))
     np.testing.assert_allclose(

@@ -1,6 +1,7 @@
-"""Property tests for the conv work-queue and the dense-reproduction
+"""Property tests for the conv work-queues and the dense-reproduction
 guarantee (paper §3: no zero-weight work is ever scheduled; sparsity
-machinery is semantics-free when nothing is sparse)."""
+machinery is semantics-free when nothing is sparse), for both the explicit
+im2col lowering and the direct (implicit-im2col) kernel."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -37,17 +38,19 @@ def test_conv_work_queue_never_emits_zero_weight_tile(cfg):
     rng = np.random.default_rng(seed)
     wt = rng.standard_normal((kh, kh, cin, cout)).astype(np.float32)
     wt *= rng.random(wt.shape) < density
-    pcw = pc.prepare_conv_weight(
-        wt, batch=1, in_hw=(h, h), stride=stride, padding=padding, block=(8, 8, 8)
-    )
-    pw = pcw.pw
-    packed = np.asarray(pw.packed)
-    valid = pw.valid.astype(bool)
-    for step in np.flatnonzero(valid):
-        assert packed[pw.wq[step]].any(), "queue step references a zero weight tile"
-    # And conversely the queue covers exactly the kept tiles per output col:
-    kept = int(pw.w_bmask.sum()) * pw.grid_tiles[0]
-    assert int(valid.sum()) == kept
+    for mode in ("im2col", "direct"):
+        pcw = pc.prepare_conv_weight(
+            wt, batch=1, in_hw=(h, h), stride=stride, padding=padding,
+            block=(8, 8, 8), mode=mode,
+        )
+        pw = pcw.pw if mode == "im2col" else pcw.plan
+        packed = np.asarray(pw.packed)
+        valid = pw.valid.astype(bool)
+        for step in np.flatnonzero(valid):
+            assert packed[pw.wq[step]].any(), "queue step references a zero weight tile"
+        # And conversely the queue covers exactly the kept tiles per output col:
+        kept = int(pw.w_bmask.sum()) * pw.grid_tiles[0]
+        assert int(valid.sum()) == kept
 
 
 @given(
@@ -68,9 +71,66 @@ def test_dense_conv_reproduces_dense_op_bit_exactly(kh, stride, padding, h, seed
     x = rng.integers(-3, 4, (1, h, h, cin)).astype(np.float32)
     wt[wt == 0] = 1.0  # dense weight: no accidental zero tiles
     x[x == 0] = 1.0
-    pcw = pc.prepare_conv_weight(
-        wt, batch=1, in_hw=(h, h), stride=stride, padding=padding, block=(8, 8, 8)
-    )
-    y = pc.phantom_conv_call(jnp.asarray(x), pcw, interpret=True)
+    for mode in ("im2col", "direct"):
+        pcw = pc.prepare_conv_weight(
+            wt, batch=1, in_hw=(h, h), stride=stride, padding=padding,
+            block=(8, 8, 8), mode=mode,
+        )
+        y = pc.phantom_conv_call(jnp.asarray(x), pcw, interpret=True)
+        yref = ref_phantom_conv(jnp.asarray(x), jnp.asarray(wt), stride, padding)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(yref))
+
+
+@given(conv_config())
+@settings(max_examples=25, deadline=None)
+def test_direct_never_diverges_from_reference(cfg):
+    """Random geometry/density: the direct (implicit-im2col) kernel always
+    matches the dense reference and the explicit im2col lowering."""
+    kh, stride, padding, h, cin, cout, density, seed = cfg
+    rng = np.random.default_rng(seed)
+    wt = rng.standard_normal((kh, kh, cin, cout)).astype(np.float32)
+    wt *= rng.random(wt.shape) < density
+    x = rng.standard_normal((1, h, h, cin)).astype(np.float32)
+    x *= rng.random(x.shape) < density
     yref = ref_phantom_conv(jnp.asarray(x), jnp.asarray(wt), stride, padding)
-    np.testing.assert_array_equal(np.asarray(y), np.asarray(yref))
+    ys = {}
+    for mode in ("direct", "im2col"):
+        pcw = pc.prepare_conv_weight(
+            wt, batch=1, in_hw=(h, h), stride=stride, padding=padding,
+            block=(8, 8, 8), mode=mode,
+        )
+        ys[mode] = np.asarray(pc.phantom_conv_call(jnp.asarray(x), pcw, interpret=True))
+        np.testing.assert_allclose(ys[mode], np.asarray(yref), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(ys["direct"], ys["im2col"], atol=1e-5, rtol=1e-4)
+
+
+@given(
+    st.sampled_from([1, 3]),
+    st.sampled_from([(1, 1), (2, 2)]),
+    st.sampled_from(["SAME", "VALID"]),
+    st.integers(3, 8),
+    st.floats(0.1, 1.0),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_output_mask_identical_across_modes(kh, stride, padding, h, density, seed):
+    """§3.8: the output-encoding tile mask emitted by the direct path equals
+    the im2col path's bit for bit.  Small-integer data keeps fp32 arithmetic
+    exact, so differing accumulation orders cannot flip a zero/nonzero bit."""
+    rng = np.random.default_rng(seed)
+    cin, cout = 8, 16
+    wt = rng.integers(-2, 3, (kh, kh, cin, cout)).astype(np.float32)
+    wt *= rng.random(wt.shape) < density
+    x = rng.integers(-2, 3, (1, h, h, cin)).astype(np.float32)
+    x *= rng.random(x.shape) < density
+    masks = []
+    for mode in ("direct", "im2col"):
+        pcw = pc.prepare_conv_weight(
+            wt, batch=1, in_hw=(h, h), stride=stride, padding=padding,
+            block=(8, 8, 8), mode=mode,
+        )
+        _, m = pc.phantom_conv_act_call(
+            jnp.asarray(x), pcw, activation="relu", interpret=True
+        )
+        masks.append(np.asarray(m))
+    np.testing.assert_array_equal(masks[0], masks[1])
