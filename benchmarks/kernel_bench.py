@@ -163,6 +163,57 @@ def write_conv_trajectory(result, path="BENCH_conv.json"):
     return hist[-1]
 
 
+def program_rows(rng):
+    """Program API (DESIGN.md §8): compile once per batch size, then read the
+    structural stats surface — steps vs dense, weight-effectual MACs — that
+    the engine↔simulator contract (§5) is checked against.  No forward runs;
+    this is the weight-load-time cost/compaction picture."""
+    import phantom
+    from repro.core.dataflow import ConvSpec, FCSpec
+
+    layers = [
+        ConvSpec("c1", 3, 32, 28, 28),
+        ConvSpec("c2", 32, 64, 28, 28),
+        FCSpec("fc", 64, 10, pool="gap"),
+    ]
+    blk = (32, 32, 32)
+    params = {}
+    for l in layers:
+        shp = (
+            (l.kh, l.kw, l.in_ch, l.out_ch)
+            if isinstance(l, ConvSpec)
+            else (l.in_dim, l.out_dim)
+        )
+        w = rng.standard_normal(shp).astype(np.float32)
+        w2 = w.reshape(-1, shp[-1])
+        if w2.shape[0] >= blk[1]:  # don't prune sub-tile weights to nothing
+            w2 *= sparsity.block_prune(w2, 0.3, blk[1:])
+        params[l.name] = {
+            "w": jnp.asarray(w2.reshape(shp)),
+            "b": jnp.asarray(np.zeros(shp[-1], np.float32)),
+        }
+    cfg = phantom.PhantomConfig(enabled=True, block=blk)
+    t0 = time.perf_counter()
+    prog = phantom.compile(layers, params, cfg, batch=(1, 8))
+    t_compile = (time.perf_counter() - t0) * 1e6
+    rows = [
+        (
+            "program/compile", f"{t_compile:.0f}",
+            f"layers={len(prog.nodes)};batches={list(prog.batch_sizes)};"
+            f"lowerings={prog.lowerings}",
+        )
+    ]
+    for name, s in prog.stats(8).items():
+        rows.append(
+            (
+                f"program/{name}", "-",
+                f"steps={s['steps']};dense_steps={s['dense_steps']};"
+                f"valid_mac_frac={s['valid_macs'] / s['dense_macs']:.3f}",
+            )
+        )
+    return rows
+
+
 def run():
     rows = []
     rng = np.random.default_rng(0)
@@ -204,6 +255,7 @@ def run():
     rows += _conv_rows(rng)
     mode_rows, mode_result = conv_mode_rows(rng)
     rows += mode_rows
+    rows += program_rows(rng)
     return emit(rows), mode_result
 
 

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import phantom
 from repro.core import dataflow as df, simulator, sparsity
 from repro.models.cnn import cnn_forward, cnn_spec
 from repro.models.common import init_params
@@ -59,8 +60,8 @@ print(f"net: HP {simulator.network_summary(res, 'hp'):.2f}x, "
 # --- Batched serving on the Phantom core itself ----------------------------
 # A small head of the network (first conv block + classifier) runs real
 # multi-image requests through the direct implicit-im2col kernel: one
-# prepared program, fixed batch slots, short batches padded with zero
-# images whose tiles are gated off in-kernel.
+# compiled PhantomProgram, fixed batch slots, short batches padded with
+# zero images whose tiles are gated off in-kernel.
 head = [df.ConvSpec("conv1", 3, 16, 16, 16), df.ConvSpec("conv2", 16, 16, 16, 16),
         df.FCSpec("fc", 16, 10, pool="gap")]
 hp_rng = np.random.default_rng(2)
@@ -71,11 +72,14 @@ for l in head:
     w *= sparsity.magnitude_prune(w, DENSITY)
     hparams[l.name] = {"w": jnp.asarray(w),
                        "b": jnp.asarray(np.zeros(shp[-1], np.float32))}
-eng = CnnServeEngine(hparams, head, batch_size=2, block=(16, 16, 16))
+prog = phantom.compile(
+    head, hparams, phantom.PhantomConfig(enabled=True, block=(16, 16, 16)), batch=2)
+eng = CnnServeEngine(program=prog, batch_size=2)
 reqs = [eng.submit(hp_rng.standard_normal((16, 16, 3)).astype(np.float32))
         for _ in range(5)]
 eng.run()
 ref = cnn_forward(hparams, jnp.asarray(np.stack([r.image for r in reqs])), head)
 err = max(float(np.abs(r.logits - np.asarray(ref)[i]).max()) for i, r in enumerate(reqs))
 print(f"serve: {eng.images_served} requests / {eng.batches_run} batches "
-      f"(padded {eng.padded_slots}), conv_mode=direct, max|err| vs dense {err:.1e}")
+      f"(padded {eng.padded_slots}), conv_mode={prog.cfg.conv_mode}, "
+      f"{prog.lowerings} lowering, max|err| vs dense {err:.1e}")

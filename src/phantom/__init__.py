@@ -1,0 +1,26 @@
+"""``phantom`` — the public face of the Phantom program API.
+
+    import phantom
+    prog = phantom.compile(layers, params, phantom.PhantomConfig(enabled=True), batch=8)
+    logits = prog(x)
+
+Thin alias over :mod:`repro.program` so user code does not spell the repro
+package layout; see DESIGN.md §8.
+"""
+from repro.program import (  # noqa: F401
+    SERVE_DEFAULT,
+    LayerKind,
+    PhantomConfig,
+    PhantomProgram,
+    compile,
+    register_layer_kind,
+)
+
+__all__ = [
+    "PhantomConfig",
+    "PhantomProgram",
+    "compile",
+    "SERVE_DEFAULT",
+    "LayerKind",
+    "register_layer_kind",
+]

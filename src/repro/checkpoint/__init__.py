@@ -108,16 +108,26 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, tree_like, step: int | None = None, shardings=None):
-        """Restore into the structure of ``tree_like`` (params or abstract
-        tree).  ``shardings``: matching pytree of Shardings for resharded
-        placement; None → host arrays."""
+    def restore_flat(self, step: int | None = None) -> tuple[dict, dict]:
+        """Raw restore: ``(arrays, extra)`` — the flat ``{key: np.ndarray}``
+        payload dict plus the manifest's ``extra`` metadata, with no target
+        tree required.  Used by :meth:`repro.program.PhantomProgram.load`,
+        whose tree structure lives in the metadata itself."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = os.path.join(self.dir, f"step_{step:09d}")
         with np.load(os.path.join(path, "arrays.npz")) as z:
-            data = {k: z[k] for k in z.files}
+            arrays = {k: z[k] for k in z.files}
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return arrays, manifest.get("extra", {})
+
+    def restore(self, tree_like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``tree_like`` (params or abstract
+        tree).  ``shardings``: matching pytree of Shardings for resharded
+        placement; None → host arrays."""
+        data, _ = self.restore_flat(step)
         flat_keys = list(_flatten(tree_like).keys())
         missing = [k for k in flat_keys if k not in data]
         if missing:

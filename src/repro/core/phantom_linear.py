@@ -32,7 +32,15 @@ __all__ = ["PhantomConfig", "phantom_linear", "prune_params", "PHANTOM_DISABLED"
 
 @dataclasses.dataclass(frozen=True)
 class PhantomConfig:
-    """Serving/training knobs for the Phantom technique (DESIGN.md §4)."""
+    """Serving/training knobs for the Phantom technique (DESIGN.md §4).
+
+    This is the *only* knob surface for weight-load-time lowering: the
+    ``block`` / ``interleave`` / ``conv_mode`` / ``dtype`` kwargs that used
+    to be duplicated across ``ops.prepare_weight``,
+    ``phantom_conv.prepare_conv_weight`` and ``prepare_cnn_phantom`` all
+    live here and flow through :func:`repro.program.compile`
+    (DESIGN.md §8).
+    """
 
     enabled: bool = False
     block: tuple[int, int, int] = (256, 256, 256)  # (bm, bk, bn)
@@ -41,6 +49,11 @@ class PhantomConfig:
     interleave: bool = True  # intra-core-style queue rotation
     balance: str = "full"  # none | intra | inter | full
     mode: str = "auto"  # dense | masked | kernel | auto
+    conv_mode: str = "direct"  # direct (implicit im2col) | im2col (oracle)
+    dtype: str = "float32"  # packed-payload dtype (string: keeps cfg hashable)
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
 
 
 PHANTOM_DISABLED = PhantomConfig(enabled=False)

@@ -97,8 +97,16 @@ def prepare_weight(
     block: tuple[int, int, int] = (256, 256, 256),
     interleave: bool = True,
     dtype=jnp.float32,
+    config=None,
 ) -> PhantomWeight:
-    """Pack a (pruned) dense weight [K, N] for activations with ``m`` rows."""
+    """Pack a (pruned) dense weight [K, N] for activations with ``m`` rows.
+
+    ``config`` (a :class:`repro.core.phantom_linear.PhantomConfig`) is the
+    preferred knob surface and overrides ``block``/``interleave``/``dtype``
+    — the program API (DESIGN.md §8) passes it through unchanged.
+    """
+    if config is not None:
+        block, interleave, dtype = config.block, config.interleave, config.jnp_dtype()
     w = np.asarray(w)
     k, n = w.shape
     bm, bk, bn = block

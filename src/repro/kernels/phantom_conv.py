@@ -285,6 +285,7 @@ def prepare_conv_weight(
     interleave: bool = True,
     mode: str = "direct",
     dtype=jnp.float32,
+    config=None,
 ) -> PhantomConvWeight:
     """Lower a (pruned) conv weight to a Phantom core artifact.
 
@@ -293,7 +294,15 @@ def prepare_conv_weight(
     explicit spmm artifact over the ``batch · oh · ow``-row patch matrix.
     Either way, zero weight tiles (pruned blocks *and* the structural zeros
     of grouped convs) never enter the work queue.
+
+    ``config`` (a :class:`repro.core.phantom_linear.PhantomConfig`) is the
+    preferred knob surface and overrides
+    ``block``/``interleave``/``mode``/``dtype`` — the program API
+    (DESIGN.md §8) passes it through unchanged.
     """
+    if config is not None:
+        block, interleave = config.block, config.interleave
+        mode, dtype = config.conv_mode, config.jnp_dtype()
     if mode not in ("direct", "im2col"):
         raise ValueError(f"mode must be 'direct' or 'im2col', got {mode!r}")
     w = np.asarray(w)

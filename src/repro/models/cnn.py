@@ -8,23 +8,24 @@ Two execution paths share one parameter pytree:
 
 * ``cnn_forward`` — dense XLA (``lax.conv_general_dilated`` + matmul), the
   numerical oracle;
-* ``prepare_cnn_phantom`` + ``cnn_forward_phantom`` — every conv *and* FC
-  layer runs on the Phantom block-sparse core: convs lower through the
-  direct implicit-im2col path by default (:mod:`repro.kernels.phantom_conv`,
-  any stride / depthwise; ``conv_mode="im2col"`` falls back to the explicit
-  patch-matrix path), FCs through :func:`repro.kernels.ops.phantom_matmul`,
-  and each layer's §3.8 output-encoding element mask flows to the next
-  layer's activation tile bits instead of re-inspecting values.
+* ``phantom.compile(layers, params, cfg, batch=...)`` — every conv *and*
+  FC layer runs on the Phantom block-sparse core through one
+  :class:`repro.program.PhantomProgram` (direct implicit-im2col convs by
+  default, §3.8 masks flowing between layers, per-batch plan cache,
+  save/load).  ``prepare_cnn_phantom`` + ``cnn_forward_phantom`` below are
+  the pre-program entry points, kept for one release as deprecated shims
+  that delegate to the program machinery (bit-for-bit at ``Cin % bk == 0``).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro import program as program_mod
 from repro.core import netlib
 from repro.core.dataflow import ConvSpec
-from repro.kernels import ops, phantom_conv
+from repro.core.phantom_linear import PhantomConfig
+from repro.program.plans import _maxpool2  # one pooling primitive, one place
 from .common import ParamSpec
 
 __all__ = [
@@ -68,12 +69,6 @@ def cnn_spec(name: str, input_hw: int = 224):
     return spec, layers
 
 
-def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
-    )
-
-
 def cnn_forward(params, x: jnp.ndarray, layers):
     """x: [B, H, W, 3] → logits.  ReLU after every layer (the paper's source
     of dynamic activation sparsity, §1)."""
@@ -104,7 +99,10 @@ def cnn_forward(params, x: jnp.ndarray, layers):
                     x = x.reshape(x.shape[0], -1)
             p = params[l.name]
             x = x @ p["w"] + p["b"]
-            if l.name != list(params)[-1]:
+            # Last layer by *position in the layer list* — matching the
+            # phantom path; keying off dict order broke whenever ``params``
+            # carried extra keys or was built in a different order.
+            if l.name != layers[-1].name:
                 x = jax.nn.relu(x)
     return x
 
@@ -119,35 +117,25 @@ def prepare_cnn_phantom(
     conv_mode: str = "direct",
     dtype=jnp.float32,
 ):
-    """Weight-load-time lowering of every conv/FC layer to the Phantom core.
+    """DEPRECATED — use ``phantom.compile(layers, params, cfg, batch=...)``.
 
+    Weight-load-time lowering of every conv/FC layer to the Phantom core.
     Returns ``{layer name: PhantomConvWeight | PhantomWeight}`` for the given
-    ``batch`` (the work queue's M-tile count is shape-specialised).  Prune
-    the weights in ``params`` first; zero tiles never enter the queues.
-    Convs use the direct implicit-im2col kernel by default;
-    ``conv_mode="im2col"`` selects the explicit patch-matrix fallback.
+    ``batch``.  Delegates to :func:`repro.program.compile`: the returned
+    dict is the program's own batch plan, so outputs are bit-for-bit
+    identical to running the program.
     """
-    prepared = {}
-    for l in layers:
-        w = np.asarray(params[l.name]["w"])
-        if isinstance(l, ConvSpec):
-            prepared[l.name] = phantom_conv.prepare_conv_weight(
-                w,
-                batch=batch,
-                in_hw=(l.in_h, l.in_w),
-                stride=l.stride,
-                padding=l.pad,
-                groups=l.in_ch if l.depthwise else 1,
-                block=block,
-                interleave=interleave,
-                mode=conv_mode,
-                dtype=dtype,
-            )
-        else:
-            prepared[l.name] = ops.prepare_weight(
-                w, m=batch, block=block, interleave=interleave, dtype=dtype
-            )
-    return prepared
+    program_mod.warn_deprecated(
+        "repro.models.cnn.prepare_cnn_phantom", "phantom.compile"
+    )
+    cfg = PhantomConfig(
+        enabled=True,
+        block=tuple(block),
+        interleave=interleave,
+        conv_mode=conv_mode,
+        dtype=jnp.dtype(dtype).name,
+    )
+    return program_mod.compile(layers, params, cfg, batch=batch).at_batch(batch)
 
 
 def cnn_forward_phantom(
@@ -160,91 +148,25 @@ def cnn_forward_phantom(
     slot_mask: jnp.ndarray | None = None,
     interpret: bool | None = None,
 ):
-    """``cnn_forward`` semantics with every conv/FC on the Phantom core.
+    """DEPRECATED — compile once with ``phantom.compile`` and call the
+    program instead.
 
-    The §3.8 element mask of each layer's (post-ReLU) output flows forward:
-    conv layers unfold it into patch tile bits
-    (:func:`repro.kernels.phantom_conv.conv_patch_tile_bits`), FC layers
-    tile-reduce it (:func:`repro.kernels.ops.element_mask_tile_bits`) — the
-    consuming kernel never re-inspects activation values.  Max-pool keeps
-    the mask exact (post-ReLU values are ≥ 0, so ``maxpool(x) ≠ 0 ⇔
-    any(mask)``); global average pooling mixes channels, so the mask is
-    re-encoded there.
-
-    ``slot_mask`` (float [B], 1 = live, 0 = padded) re-zeroes dead batch
-    slots after every layer's bias+ReLU — without it a zero image turns
-    nonzero at ``relu(0 + b)`` and padded slots do full work from layer 2
-    on.  With it their activations stay exactly zero, so the flowing mask
-    gates every one of their tiles (per output row in the direct conv path;
-    FC tiles gate only where a bm-row tile holds no live sample).  Live
-    rows are unaffected — samples never mix across the batch dim.
+    ``cnn_forward`` semantics with every conv/FC on the Phantom core —
+    §3.8 masks flow between layers, τ is applied at the producer, and
+    ``slot_mask`` gates padded serving slots.  Delegates to the program
+    graph walk (:func:`repro.program.run_prepared`) over the caller's
+    ``prepared`` dict, so it shares every code path with
+    :class:`repro.program.PhantomProgram`.
     """
-    prev_hw = x.shape[1]
-    sm4 = sm2 = None
-    if slot_mask is not None:
-        sm4 = slot_mask[:, None, None, None]
-        sm2 = slot_mask[:, None]
-    mask = None  # producing layer's element mask; None ⇒ derive from values
-    for l in layers:
-        if isinstance(l, ConvSpec):
-            if l.in_h != prev_hw and prev_hw // 2 == l.in_h:
-                x = _maxpool2(x)
-                if mask is not None:
-                    mask = _maxpool2(mask.astype(x.dtype))
-            p = params[l.name]
-            y = phantom_conv.phantom_conv_call(
-                x,
-                prepared[l.name],
-                x_mask=mask,
-                # τ was applied when the producer emitted `mask`; only the
-                # first layer (no mask yet) thresholds raw values.
-                act_threshold=0.0 if mask is not None else act_threshold,
-                interpret=interpret,
-            )
-            x = jax.nn.relu(y + p["b"])
-            if sm4 is not None:
-                x = x * sm4
-            # §3.8 output encoding: the producer applies the (lossy) τ here;
-            # consumers then gate on the mask's exact zeros.
-            mask = (x > act_threshold).astype(x.dtype)
-            prev_hw = x.shape[1]
-        else:
-            if x.ndim == 4:
-                if l.pool == "gap":
-                    # Averaging mixes channels — re-encode the mask.
-                    x = x.mean(axis=(1, 2))
-                    mask = (x != 0).astype(x.dtype)
-                else:
-                    if l.pool == "pool5" and x.shape[1] > 1:
-                        x = _maxpool2(x)
-                        if mask is not None:
-                            mask = _maxpool2(mask.astype(x.dtype))
-                    x = x.reshape(x.shape[0], -1)
-                    if mask is not None:
-                        mask = mask.reshape(mask.shape[0], -1)
-            pw = prepared[l.name]
-            bm, bk, _ = pw.block
-            bits = (
-                None
-                if mask is None
-                else ops.element_mask_tile_bits(mask, (bm, bk))
-            )
-            p = params[l.name]
-            y = (
-                ops.phantom_matmul(
-                    x,
-                    pw,
-                    act_bits=bits,
-                    act_threshold=act_threshold,
-                    interpret=interpret,
-                )
-                + p["b"]
-            )
-            if l.name != layers[-1].name:
-                x = jax.nn.relu(y)
-                if sm2 is not None:
-                    x = x * sm2
-                mask = (x > act_threshold).astype(x.dtype)
-            else:
-                x = y
-    return x
+    program_mod.warn_deprecated(
+        "repro.models.cnn.cnn_forward_phantom", "phantom.compile"
+    )
+    return program_mod.run_prepared(
+        program_mod.build_nodes(layers),
+        params,
+        prepared,
+        x,
+        act_threshold=act_threshold,
+        slot_mask=slot_mask,
+        interpret=interpret,
+    )

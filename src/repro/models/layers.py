@@ -1,10 +1,20 @@
-"""Shared layers: RMSNorm, embeddings, (Phantom-aware) linears, gated MLP."""
+"""Shared layers: RMSNorm, embeddings, (Phantom-aware) linears, gated MLP.
+
+Also home of :class:`FFNSpec` — the gated-FFN layer kind for the Phantom
+program API.  Its whole integration is the single
+:func:`repro.program.register_layer_kind` call at the bottom of this
+module: no forward loop anywhere had to learn about FFNs (DESIGN.md §8).
+"""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.phantom_linear import PhantomConfig, phantom_linear
+from repro.program.registry import register_layer_kind
 from .common import ModelConfig, ParamSpec, dense_spec, shard_act
 
 __all__ = [
@@ -18,6 +28,7 @@ __all__ = [
     "mlp_spec",
     "mlp",
     "ACT",
+    "FFNSpec",
 ]
 
 ACT = {
@@ -100,3 +111,71 @@ def mlp(p, x, cfg: ModelConfig):
     h = ACT[cfg.act](linear(p["gate"], x, cfg, ph)) * linear(p["up"], x, cfg, ph)
     h = shard_act(h, ("batch", "seq", "mlp"))
     return linear(p["down"], h, cfg, ph)
+
+
+# -- the gated FFN as a Phantom-program layer kind ---------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FFNSpec:
+    """A gated FFN (``down(act(x @ gate) * (x @ up))``) as a program-layer
+    spec: ``params[name] = {"wg", "wu", "wd", "b"}``.  All three matmuls are
+    Phantom-eligible (DESIGN.md §6); the gate/up pair shares the incoming
+    §3.8 tile bits, the down projection gates on ``h``'s exact zeros."""
+
+    name: str
+    in_dim: int
+    d_ff: int
+    out_dim: int
+    act: str = "relu"
+
+    @property
+    def macs(self) -> int:
+        return self.in_dim * self.d_ff * 2 + self.d_ff * self.out_dim
+
+
+class FFNKind:
+    """Program-layer kind for :class:`FFNSpec` — the one-registration proof
+    that new Phantom-eligible layer families need no forward-loop edits."""
+
+    name = "ffn"
+    _WEIGHTS = ("wg", "wu", "wd")
+
+    def prepare(self, spec: FFNSpec, params, batch: int, cfg):
+        from repro.kernels import ops  # local: kernels are optional at import
+
+        plan = {
+            k: ops.prepare_weight(np.asarray(params[k]), m=batch, config=cfg)
+            for k in self._WEIGHTS
+        }
+        plan["act"] = spec.act
+        return plan
+
+    def apply(self, x, plan, params, *, mask, act_threshold, interpret):
+        from repro.kernels import ops
+
+        bm, bk, _ = plan["wg"].block
+        bits = None if mask is None else ops.element_mask_tile_bits(mask, (bm, bk))
+        mm = lambda v, pw, b: ops.phantom_matmul(  # noqa: E731
+            v, pw, act_bits=b, act_threshold=act_threshold, interpret=interpret
+        )
+        h = ACT[plan["act"]](mm(x, plan["wg"], bits)) * mm(x, plan["wu"], bits)
+        return mm(h, plan["wd"], None) + params["b"]
+
+    def mask_out(self, x, act_threshold):
+        return (x > act_threshold).astype(x.dtype)
+
+    def stats(self, plan, spec: FFNSpec, batch: int) -> dict:
+        pws = [plan[k] for k in self._WEIGHTS]
+        return {
+            "kind": self.name,
+            "steps": sum(pw.steps for pw in pws),
+            "dense_steps": sum(int(np.prod(pw.grid_tiles)) for pw in pws),
+            "density": float(np.mean([pw.density() for pw in pws])),
+            "valid_macs": batch
+            * sum(int(np.count_nonzero(np.asarray(pw.packed))) for pw in pws),
+            "dense_macs": batch * spec.macs,
+        }
+
+
+register_layer_kind(FFNSpec, FFNKind())

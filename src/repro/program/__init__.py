@@ -1,0 +1,62 @@
+"""The program API: compile a network once, run/save/serve it anywhere.
+
+``repro.program`` (aliased as the top-level ``phantom`` package) is the
+single entry point to the Phantom core:
+
+    import phantom
+    prog = phantom.compile(layers, params, cfg, batch=8)
+    logits = prog(x)                    # any pre-lowered batch size
+    prog.save("ckpt/prog"); prog2 = phantom.PhantomProgram.load("ckpt/prog")
+
+See DESIGN.md §8 for the compile/apply/save contract and the
+:class:`~repro.program.registry.LayerKind` protocol that makes new layer
+kinds a single registration.
+
+Exports resolve lazily (PEP 562) so importing :mod:`repro.program.registry`
+alone — e.g. from :mod:`repro.models.layers` to register a layer kind —
+does not pull the Pallas kernel modules in; they load on first use of the
+compile/run machinery (the built-in conv/FC kinds register when
+:mod:`repro.program.plans` loads, which every such path imports).
+"""
+from repro.core.phantom_linear import PhantomConfig
+
+__all__ = [
+    "PhantomConfig",
+    "PhantomProgram",
+    "compile",
+    "SERVE_DEFAULT",
+    "LayerKind",
+    "LayerNode",
+    "register_layer_kind",
+    "kind_for",
+    "build_nodes",
+    "run_prepared",
+    "warn_deprecated",
+    "reset_deprecation_warnings",
+]
+
+_LAZY = {
+    "PhantomProgram": "program",
+    "compile": "program",
+    "SERVE_DEFAULT": "program",
+    "warn_deprecated": "program",
+    "reset_deprecation_warnings": "program",
+    "LayerKind": "registry",
+    "register_layer_kind": "registry",
+    "kind_for": "registry",
+    "LayerNode": "plans",
+    "build_nodes": "plans",
+    "run_prepared": "plans",
+}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(f".{_LAZY[name]}", __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

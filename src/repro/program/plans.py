@@ -1,0 +1,288 @@
+"""Built-in layer kinds (conv, FC) and the generic graph walk.
+
+This is the code that replaced the hand-written conv-vs-FC branching in
+``models/cnn.cnn_forward_phantom`` and its second, divergent copy in
+``serve/cnn.py``: dispatch is a registry lookup, §3.8 mask threading and
+τ-at-producer semantics live in exactly one place (:func:`run_prepared`),
+and the inter-layer pooling/flatten/GAP plumbing is *declarative* — each
+:class:`LayerNode` carries the glue ops the compile-time shape walk
+(:func:`build_nodes`) decided it needs, so the runtime walk never inspects
+shapes or spec fields.
+
+Glue ops (all mask-preserving, DESIGN.md §4):
+
+* ``maxpool2`` — 2×2 max-pool; max-pool keeps element masks exact because
+  post-ReLU values are ≥ 0 (``maxpool(x) > τ ⇔ any(window > τ)``);
+* ``flatten`` — ``[B, h, w, C] → [B, h·w·C]`` on values and mask alike;
+* ``gap``     — global average pool; averaging mixes channels, so the mask
+  is *re-encoded* from the pooled values — with the producer's τ, the same
+  rule every other producer uses (the old forward used ``x != 0`` here,
+  which silently dropped τ at exactly one point in the network).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataflow import ConvSpec, FCSpec
+from repro.kernels import ops, phantom_conv
+
+from .registry import kind_for, register_layer_kind
+
+__all__ = [
+    "LayerNode",
+    "build_nodes",
+    "run_prepared",
+    "ConvKind",
+    "FCKind",
+    "GLUE",
+]
+
+
+def _maxpool2(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+# -- declarative inter-layer glue -------------------------------------------
+# Each op: (x, mask, tau) -> (x, mask).  mask is the producing layer's
+# element mask (float 0/1, same layout as x) or None before the first layer.
+
+
+def _glue_maxpool2(x, mask, tau):
+    x = _maxpool2(x)
+    if mask is not None:
+        mask = _maxpool2(mask.astype(x.dtype))
+    return x, mask
+
+
+def _glue_flatten(x, mask, tau):
+    x = x.reshape(x.shape[0], -1)
+    if mask is not None:
+        mask = mask.reshape(mask.shape[0], -1)
+    return x, mask
+
+
+def _glue_gap(x, mask, tau):
+    x = x.mean(axis=(1, 2))
+    # Re-encode with the producer's τ — averaging mixes channels, so the
+    # incoming mask no longer describes x (satellite fix: was ``x != 0``).
+    return x, (x > tau).astype(x.dtype)
+
+
+GLUE = {"maxpool2": _glue_maxpool2, "flatten": _glue_flatten, "gap": _glue_gap}
+
+
+# -- built-in kinds ----------------------------------------------------------
+
+
+class ConvKind:
+    """Conv2D through either Phantom lowering (direct default, DESIGN.md §3)."""
+
+    name = "conv"
+
+    def prepare(self, spec: ConvSpec, params, batch: int, cfg):
+        return phantom_conv.prepare_conv_weight(
+            np.asarray(params["w"]),
+            batch=batch,
+            in_hw=(spec.in_h, spec.in_w),
+            stride=spec.stride,
+            padding=spec.pad,
+            groups=spec.in_ch if spec.depthwise else 1,
+            config=cfg,
+        )
+
+    def apply(self, x, plan, params, *, mask, act_threshold, interpret):
+        y = phantom_conv.phantom_conv_call(
+            x,
+            plan,
+            x_mask=mask,
+            act_threshold=act_threshold,
+            interpret=interpret,
+        )
+        return y + params["b"]
+
+    def mask_out(self, x, act_threshold):
+        return (x > act_threshold).astype(x.dtype)
+
+    def stats(self, plan, spec: ConvSpec, batch: int) -> dict:
+        art = plan.pw if plan.pw is not None else plan.plan
+        mt, kt, nt = art.grid_tiles
+        oh, ow = plan.out_hw
+        w_nnz = int(np.count_nonzero(np.asarray(art.packed)))
+        return {
+            "kind": self.name,
+            "mode": plan.mode,
+            "steps": plan.steps,
+            "dense_steps": mt * kt * nt,
+            "density": plan.density(),
+            # Weight-effectual MACs at dense activations: M output positions
+            # × nonzero weights.  The simulator's layer_work counts the same
+            # quantity per-mask (DESIGN.md §5); dynamic activation gating is
+            # a runtime subtraction on top.
+            "valid_macs": batch * oh * ow * w_nnz,
+            "dense_macs": batch * spec.macs,
+        }
+
+
+class FCKind:
+    """Fully-connected layer through the two-sided block-sparse matmul."""
+
+    name = "fc"
+
+    def prepare(self, spec: FCSpec, params, batch: int, cfg):
+        return ops.prepare_weight(np.asarray(params["w"]), m=batch, config=cfg)
+
+    def apply(self, x, plan, params, *, mask, act_threshold, interpret):
+        bm, bk, _ = plan.block
+        bits = None if mask is None else ops.element_mask_tile_bits(mask, (bm, bk))
+        y = ops.phantom_matmul(
+            x,
+            plan,
+            act_bits=bits,
+            act_threshold=act_threshold,
+            interpret=interpret,
+        )
+        return y + params["b"]
+
+    def mask_out(self, x, act_threshold):
+        return (x > act_threshold).astype(x.dtype)
+
+    def stats(self, plan, spec: FCSpec, batch: int) -> dict:
+        mt, kt, nt = plan.grid_tiles
+        w_nnz = int(np.count_nonzero(np.asarray(plan.packed)))
+        return {
+            "kind": self.name,
+            "steps": plan.steps,
+            "dense_steps": mt * kt * nt,
+            "density": plan.density(),
+            "valid_macs": batch * w_nnz,
+            "dense_macs": batch * spec.macs,
+        }
+
+
+register_layer_kind(ConvSpec, ConvKind())
+register_layer_kind(FCSpec, FCKind())
+
+
+# -- compile-time graph construction ----------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNode:
+    """One compiled layer: spec + the declarative glue before it (the kind
+    is resolved from ``spec``'s type via the registry at use sites).
+
+    ``activation`` is the epilogue the walk applies after ``kind.apply``
+    (the last layer's logits stay linear — decided here, at compile time,
+    by position in ``layers``, never by dict order).
+    """
+
+    name: str
+    spec: Any
+    pre: tuple[str, ...]
+    activation: str  # "relu" | "none"
+
+
+def build_nodes(layers) -> tuple[LayerNode, ...]:
+    """Shape-walk the layer list once and emit the node sequence.
+
+    All glue decisions (inter-conv max-pool, pool5, GAP, flatten) are made
+    here from static spec geometry, so :func:`run_prepared` is a pure
+    dispatch loop.  Raises at compile time on geometry the old forwards
+    would only have crashed on at trace time.
+    """
+    if not layers:
+        raise ValueError("cannot compile an empty layer list")
+    nodes = []
+    spatial = isinstance(layers[0], ConvSpec)
+    hw = layers[0].in_h if spatial else None
+    last = len(layers) - 1
+    for i, spec in enumerate(layers):
+        kind_for(spec)  # raises early for unregistered spec types
+        pre: list[str] = []
+        if isinstance(spec, ConvSpec):
+            if not spatial:
+                raise ValueError(f"conv layer {spec.name!r} after a flattening layer")
+            if spec.in_h != hw:
+                if hw // 2 == spec.in_h:
+                    pre.append("maxpool2")
+                    hw //= 2
+                else:
+                    raise ValueError(
+                        f"layer {spec.name!r} expects H={spec.in_h}, got H={hw} "
+                        f"(only 2x max-pool bridging is supported)"
+                    )
+            hw = spec.out_hw[0]
+            activation = "relu"
+        else:
+            if spatial:
+                pool = getattr(spec, "pool", "flatten")
+                if pool == "gap":
+                    pre.append("gap")
+                else:
+                    if pool == "pool5" and hw > 1:
+                        pre.append("maxpool2")
+                    pre.append("flatten")
+                spatial = False
+            activation = "relu" if i < last else "none"
+        nodes.append(
+            LayerNode(
+                name=spec.name,
+                spec=spec,
+                pre=tuple(pre),
+                activation=activation,
+            )
+        )
+    return tuple(nodes)
+
+
+# -- the generic runtime walk ------------------------------------------------
+
+
+def run_prepared(
+    nodes: tuple[LayerNode, ...],
+    params,
+    prepared: dict,
+    x: jnp.ndarray,
+    *,
+    act_threshold: float = 0.0,
+    slot_mask: jnp.ndarray | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Run a compiled node sequence over prepared artifacts.
+
+    §3.8 semantics in one place: the *producer* applies the (lossy) τ when
+    it emits its element mask; consumers gate on that mask's exact zeros,
+    so only the first layer (no mask yet) thresholds raw values.
+    ``slot_mask`` (float [B], 1 = live) re-zeroes padded batch slots after
+    every activation so their flowing masks keep gating their tiles
+    (DESIGN.md §4) — without it, ``relu(0 + b)`` lights dead slots up from
+    layer 2 on.
+    """
+    mask = None
+    for node in nodes:
+        for g in node.pre:
+            x, mask = GLUE[g](x, mask, act_threshold)
+        kind = kind_for(node.spec)
+        y = kind.apply(
+            x,
+            prepared[node.name],
+            params[node.name],
+            mask=mask,
+            act_threshold=0.0 if mask is not None else act_threshold,
+            interpret=interpret,
+        )
+        if node.activation == "relu":
+            x = jax.nn.relu(y)
+            if slot_mask is not None:
+                x = x * slot_mask.reshape((-1,) + (1,) * (x.ndim - 1))
+            mask = kind.mask_out(x, act_threshold)
+        else:
+            x = y
+    return x

@@ -1,0 +1,247 @@
+"""``phantom.compile`` → :class:`PhantomProgram`: the compile-once artifact.
+
+The paper's value is a *weight-load-time* transformation (mask+payload
+compaction, queue scheduling, the §3.8 output-encoding flow) reused for
+every inference.  ``PhantomProgram`` is that transformation reified as one
+object (DESIGN.md §8):
+
+* **per-batch-size plan cache** — Phantom artifacts bake the M-tile count
+  into the work queue (DESIGN.md §4), so plans are shape-specialised;
+  :meth:`at_batch` lowers a batch size at most once and the
+  :attr:`lowerings` counter proves it;
+* **save / load** — packed payloads + queues + config go through the atomic
+  :mod:`repro.checkpoint` writer, so lowering happens once per fleet, not
+  once per process: a loaded program serves immediately (``lowerings == 0``);
+* **stats** — per-layer steps / density / valid_macs for the
+  engine↔simulator consistency contract (DESIGN.md §5).
+
+Layer execution is delegated to the :mod:`repro.program.registry` kinds;
+the forward is the generic walk in :mod:`repro.program.plans`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, _flatten as _flatten_params
+from repro.core.phantom_linear import PhantomConfig
+
+from . import serialize
+from .plans import build_nodes, run_prepared
+from .registry import kind_for, spec_class
+
+__all__ = ["PhantomProgram", "compile", "warn_deprecated", "reset_deprecation_warnings"]
+
+#: Default knobs for ``compile`` when no config is given: the serving
+#: defaults the old ``prepare_cnn_phantom`` hardcoded (128-tiles, direct
+#: conv, fp32, exact-zero skipping).
+SERVE_DEFAULT = PhantomConfig(enabled=True, block=(128, 128, 128))
+
+_FORMAT_VERSION = 1
+
+
+class PhantomProgram:
+    """A network compiled onto the Phantom core, for any batch size.
+
+    Built by :func:`compile`; callable: ``program(x)`` runs the batch
+    ``x.shape[0]`` plan (lowering it on first use), with §3.8 masks flowing
+    between layers and the τ-at-producer rule applied uniformly.
+    """
+
+    def __init__(self, layers, params, cfg: PhantomConfig | None = None):
+        self.layers = list(layers)
+        self.cfg = cfg or SERVE_DEFAULT
+        self.params = params
+        self.nodes = build_nodes(self.layers)
+        self._plans: dict[int, dict] = {}  # batch -> {layer name: plan}
+        #: number of weight-load-time lowerings actually performed by this
+        #: object (cache hits and checkpoint loads do not count).
+        self.lowerings = 0
+
+    # -- plan cache ----------------------------------------------------------
+    def at_batch(self, batch: int) -> dict:
+        """The prepared ``{layer name: plan}`` dict for ``batch`` rows.
+
+        Lowers on first use, then serves from the cache — the "queue bakes
+        in the M-tile count" shape specialisation never leaks to callers.
+        """
+        batch = int(batch)
+        if batch <= 0:
+            raise ValueError(f"batch must be positive, got {batch}")
+        if batch not in self._plans:
+            self._plans[batch] = {
+                node.name: kind_for(node.spec).prepare(
+                    node.spec, self.params[node.name], batch, self.cfg
+                )
+                for node in self.nodes
+            }
+            self.lowerings += 1
+        return self._plans[batch]
+
+    @property
+    def batch_sizes(self) -> tuple[int, ...]:
+        return tuple(sorted(self._plans))
+
+    # -- execution -----------------------------------------------------------
+    def __call__(
+        self,
+        x: jnp.ndarray,
+        *,
+        slot_mask: jnp.ndarray | None = None,
+        act_threshold: float | None = None,
+        interpret: bool | None = None,
+    ) -> jnp.ndarray:
+        """Run the network on ``x`` (batch inferred from ``x.shape[0]``).
+
+        ``act_threshold`` defaults to ``cfg.act_threshold``; ``slot_mask``
+        (float [B], 1 = live) gates padded serving slots (DESIGN.md §4).
+        """
+        prepared = self.at_batch(x.shape[0])
+        tau = self.cfg.act_threshold if act_threshold is None else act_threshold
+        return run_prepared(
+            self.nodes,
+            self.params,
+            prepared,
+            x,
+            act_threshold=tau,
+            slot_mask=slot_mask,
+            interpret=interpret,
+        )
+
+    # -- introspection -------------------------------------------------------
+    def stats(self, batch: int | None = None) -> dict:
+        """Per-layer ``{name: {steps, density, valid_macs, ...}}``.
+
+        ``batch=None`` reads the single cached batch size (error if zero or
+        several are cached — pass one explicitly then).  Never lowers.
+        """
+        if batch is None:
+            if len(self._plans) != 1:
+                raise ValueError(
+                    f"program has {len(self._plans)} cached batch sizes "
+                    f"{self.batch_sizes}; pass stats(batch=...)"
+                )
+            batch = next(iter(self._plans))
+        if batch not in self._plans:
+            raise KeyError(f"batch {batch} not lowered; cached: {self.batch_sizes}")
+        prepared = self._plans[batch]
+        return {
+            node.name: kind_for(node.spec).stats(prepared[node.name], node.spec, batch)
+            for node in self.nodes
+        }
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Persist config + params + every cached plan (packed payloads,
+        queues, masks) atomically under ``path``.  Returns ``path``."""
+        arrays: dict[str, np.ndarray] = {}
+        plan_meta: dict[str, dict] = {}
+        memo: dict = {}  # dedupe batch-invariant payloads across batch plans
+        for b, prepared in self._plans.items():
+            plan_meta[str(b)] = {
+                name: serialize.pack(plan, f"plans/{b}/{name}", arrays, memo)
+                for name, plan in prepared.items()
+            }
+        params_meta = {
+            key: serialize.pack(np.asarray(leaf), f"params/{key}", arrays, memo)
+            for key, leaf in _flatten_params(self.params).items()
+        }
+        meta = {
+            "format": _FORMAT_VERSION,
+            "cfg": dataclasses.asdict(self.cfg),
+            "layers": [
+                {"type": type(l).__name__, "fields": dataclasses.asdict(l)}
+                for l in self.layers
+            ],
+            "plans": plan_meta,
+            "params": params_meta,
+        }
+        CheckpointManager(path, keep=1).save(0, arrays, extra=meta)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PhantomProgram":
+        """Rebuild a saved program in a fresh process — no re-lowering: the
+        plan cache is restored verbatim and :attr:`lowerings` stays 0."""
+        arrays, meta = CheckpointManager(path).restore_flat()
+        if meta.get("format") != _FORMAT_VERSION:
+            raise ValueError(f"unsupported program format: {meta.get('format')!r}")
+        cfg_d = dict(meta["cfg"])
+        cfg_d["block"] = tuple(cfg_d["block"])
+        cfg = PhantomConfig(**cfg_d)
+        layers = [
+            _build_spec(spec_class(entry["type"]), entry["fields"])
+            for entry in meta["layers"]
+        ]
+        params: dict = {}
+        for key, node in meta["params"].items():
+            tree = params
+            parts = key.split("/")
+            for p in parts[:-1]:
+                tree = tree.setdefault(p, {})
+            tree[parts[-1]] = jnp.asarray(serialize.unpack(node, arrays))
+        prog = cls(layers, params, cfg)
+        for b_str, per_layer in meta["plans"].items():
+            prog._plans[int(b_str)] = {
+                name: serialize.unpack(node, arrays) for name, node in per_layer.items()
+            }
+        prog.lowerings = 0
+        return prog
+
+
+def _build_spec(cls, fields: dict):
+    kw = {
+        k: tuple(v) if isinstance(v, list) else v
+        for k, v in fields.items()
+    }
+    return cls(**kw)
+
+
+def compile(
+    layers,
+    params,
+    cfg: PhantomConfig | None = None,
+    *,
+    batch: int | tuple[int, ...] = 1,
+) -> PhantomProgram:
+    """Compile a network onto the Phantom core: one weight-load-time pass
+    per batch size, reused for every inference.
+
+    ``layers``: spec list (:class:`~repro.core.dataflow.ConvSpec` /
+    :class:`~repro.core.dataflow.FCSpec` / any registered spec type);
+    ``params``: ``{layer name: {"w": ..., "b": ...}}`` pytree (prune first —
+    zero tiles never enter the queues); ``cfg``: the one knob surface
+    (:class:`~repro.core.phantom_linear.PhantomConfig`), defaulting to
+    :data:`SERVE_DEFAULT`; ``batch``: size(s) to pre-lower (more are lowered
+    lazily by :meth:`PhantomProgram.at_batch`).
+    """
+    prog = PhantomProgram(layers, params, cfg)
+    for b in (batch,) if isinstance(batch, int) else tuple(batch):
+        prog.at_batch(b)
+    return prog
+
+
+# -- deprecation plumbing for the pre-program entry points -------------------
+
+_WARNED: set[str] = set()
+
+
+def warn_deprecated(name: str, instead: str):
+    """Emit a :class:`DeprecationWarning` for ``name`` exactly once per
+    process (deterministic, independent of the warnings-filter registry)."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {instead} (see DESIGN.md §8)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset_deprecation_warnings():
+    """Testing hook: re-arm the once-per-process deprecation warnings."""
+    _WARNED.clear()

@@ -1,0 +1,91 @@
+"""Layer-kind registry: the extension point of the program API (DESIGN.md §8).
+
+A *layer kind* teaches :class:`repro.program.PhantomProgram` how to run one
+spec type on the Phantom core.  The protocol is deliberately small — four
+methods, all shape-static — so adding a new Phantom-eligible layer family
+(e.g. the FFN path in :mod:`repro.models.layers`) is one
+:func:`register_layer_kind` call, not an edit to the forward loops:
+
+* ``prepare(spec, params, batch, cfg) -> plan`` — weight-load-time lowering
+  (pack payloads, build queues) for a fixed batch size;
+* ``apply(x, plan, params, *, mask, act_threshold, interpret) -> y`` — the
+  runtime call (bias included, activation NOT included: the program's graph
+  walk owns the epilogue so the last-layer rule lives in one place);
+* ``mask_out(x, act_threshold) -> mask`` — the §3.8 output encoding the
+  *producer* emits once for downstream consumers (τ applied here, at the
+  producer — the rule every kind shares, including the GAP re-encode glue);
+* ``stats(plan, spec, batch) -> dict`` — steps / density / valid_macs for
+  the engine↔simulator consistency contract (DESIGN.md §5).
+
+Registration is keyed by the spec *type* (e.g.
+:class:`repro.core.dataflow.ConvSpec`); the class-name index lets
+:meth:`PhantomProgram.load` reconstruct specs in a fresh process.  Spec
+types must be **dataclasses of JSON-able fields** — that is what
+``PhantomProgram.save``/``load`` (de)serialize them through.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Protocol, runtime_checkable
+
+__all__ = ["LayerKind", "register_layer_kind", "kind_for", "spec_class"]
+
+
+@runtime_checkable
+class LayerKind(Protocol):
+    """Protocol every registered layer kind implements."""
+
+    name: str
+
+    def prepare(self, spec, params, batch: int, cfg) -> Any: ...
+
+    def apply(self, x, plan, params, *, mask, act_threshold: float, interpret): ...
+
+    def mask_out(self, x, act_threshold: float): ...
+
+    def stats(self, plan, spec, batch: int) -> dict: ...
+
+
+_KINDS: dict[type, LayerKind] = {}  # spec type -> kind
+_SPEC_BY_NAME: dict[str, type] = {}  # spec class name -> spec type (for load)
+
+
+def register_layer_kind(spec_cls: type, kind: LayerKind) -> LayerKind:
+    """Register ``kind`` as the executor for layers of type ``spec_cls``.
+
+    Returns ``kind`` so it can be used as a decorator helper.  Re-registering
+    a spec type replaces the previous kind (last one wins — lets tests swap
+    instrumented kinds in).
+    """
+    if not dataclasses.is_dataclass(spec_cls):
+        raise TypeError(
+            f"{spec_cls.__name__} must be a dataclass: PhantomProgram.save "
+            f"serializes specs via dataclasses.asdict"
+        )
+    _KINDS[spec_cls] = kind
+    _SPEC_BY_NAME[spec_cls.__name__] = spec_cls
+    return kind
+
+
+def kind_for(spec) -> LayerKind:
+    """The registered kind for ``spec``'s type (exact type match first, then
+    MRO walk so spec subclasses inherit their base's kind)."""
+    for cls in type(spec).__mro__:
+        if cls in _KINDS:
+            return _KINDS[cls]
+    raise KeyError(
+        f"no layer kind registered for {type(spec).__name__}; "
+        f"register one with repro.program.register_layer_kind"
+    )
+
+
+def spec_class(name: str) -> type:
+    """Spec type by class name (used by :meth:`PhantomProgram.load`); the
+    defining module must have been imported so its registration ran."""
+    try:
+        return _SPEC_BY_NAME[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown layer spec {name!r}: import the module that registers "
+            f"it before PhantomProgram.load"
+        ) from None

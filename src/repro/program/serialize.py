@@ -1,0 +1,122 @@
+"""Plan-artifact (de)serialization for :meth:`PhantomProgram.save` / ``load``.
+
+Plans are plain dataclasses of arrays + static metadata (``PhantomWeight``,
+``PhantomConvWeight``, ``DirectConvPlan``) — or dicts of them (the FFN kind).
+``pack`` walks that structure generically: arrays land in a flat
+``{path: np.ndarray}`` dict (stored through the atomic
+:mod:`repro.checkpoint` writer), everything else lands in a JSON-able
+metadata tree that mirrors the structure, so ``unpack`` can rebuild the
+exact dataclasses in a fresh process without re-running weight-load-time
+lowering.
+
+Dataclass types referenced from metadata must be registered here
+(``register_plan_class``); the built-ins are pre-registered.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["pack", "unpack", "register_plan_class"]
+
+_PLAN_CLASSES: dict[str, type] = {}
+
+
+def register_plan_class(cls: type) -> type:
+    _PLAN_CLASSES[cls.__name__] = cls
+    return cls
+
+
+def _register_builtins():
+    from repro.kernels.ops import PhantomWeight
+    from repro.kernels.phantom_conv import DirectConvPlan, PhantomConvWeight
+
+    for cls in (PhantomWeight, PhantomConvWeight, DirectConvPlan):
+        register_plan_class(cls)
+
+
+def pack(obj, path: str, arrays: dict, memo: dict | None = None) -> dict:
+    """Serialize ``obj``: arrays appended to ``arrays`` under ``path``-rooted
+    keys, returns the JSON-able metadata node describing ``obj``.
+
+    ``memo`` (content digest → stored path) deduplicates identical arrays
+    across calls sharing it — batch-invariant payloads (packed weights,
+    weight masks) are stored once even when several batch-size plans
+    reference them.
+    """
+    if obj is None:
+        return {"t": "none"}
+    if isinstance(obj, jax.Array) or isinstance(obj, np.ndarray):
+        d = np.asarray(obj)
+        node = {"t": "arr", "path": path, "jnp": isinstance(obj, jax.Array)}
+        if d.dtype.kind not in "?biufc":
+            # Extension dtypes (bfloat16 & friends) silently degrade to raw
+            # void in npz — store a byte view + the dtype/shape to rebuild.
+            node["dtype"] = str(d.dtype)
+            node["shape"] = list(d.shape)
+            d = np.ascontiguousarray(d).view(np.uint8)
+        if memo is not None:
+            key = (hashlib.sha256(np.ascontiguousarray(d).tobytes()).hexdigest(),
+                   str(d.dtype), d.shape)
+            if key in memo:
+                node["path"] = memo[key]
+                return node
+            memo[key] = path
+        arrays[path] = d
+        return node
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        cls_name = type(obj).__name__
+        if cls_name not in _PLAN_CLASSES:
+            _register_builtins()
+        if cls_name not in _PLAN_CLASSES:
+            raise TypeError(
+                f"cannot serialize plan dataclass {cls_name}: register it "
+                f"with repro.program.serialize.register_plan_class"
+            )
+        fields = {
+            f.name: pack(getattr(obj, f.name), f"{path}/{f.name}", arrays, memo)
+            for f in dataclasses.fields(obj)
+        }
+        return {"t": "dc", "cls": cls_name, "fields": fields}
+    if isinstance(obj, dict):
+        return {
+            "t": "dict",
+            "items": {k: pack(v, f"{path}/{k}", arrays, memo) for k, v in obj.items()},
+        }
+    if isinstance(obj, (tuple, list)):
+        if not all(isinstance(v, (int, float, str, bool)) for v in obj):
+            raise TypeError(f"cannot serialize nested sequence at {path}")
+        return {"t": "tuple", "v": list(obj)}
+    if isinstance(obj, (bool, str)):
+        return {"t": "s", "v": obj}
+    if isinstance(obj, (int, float, np.integer, np.floating)):
+        return {"t": "s", "v": obj.item() if isinstance(obj, np.generic) else obj}
+    raise TypeError(f"cannot serialize {type(obj).__name__} at {path}")
+
+
+def unpack(node: dict, arrays: dict):
+    """Inverse of :func:`pack` over the same ``arrays`` dict."""
+    t = node["t"]
+    if t == "none":
+        return None
+    if t == "arr":
+        a = arrays[node["path"]]
+        if "dtype" in node:  # byte view of an extension dtype (see pack)
+            a = a.view(jnp.dtype(node["dtype"])).reshape(node["shape"])
+        return jnp.asarray(a) if node["jnp"] else a
+    if t == "dc":
+        _register_builtins()
+        cls = _PLAN_CLASSES[node["cls"]]
+        kwargs = {k: unpack(v, arrays) for k, v in node["fields"].items()}
+        return cls(**kwargs)
+    if t == "dict":
+        return {k: unpack(v, arrays) for k, v in node["items"].items()}
+    if t == "tuple":
+        return tuple(node["v"])
+    if t == "s":
+        return node["v"]
+    raise ValueError(f"unknown metadata node type {t!r}")

@@ -1,4 +1,9 @@
-"""Serving engines: token-level LM serving and batched CNN inference."""
+"""Serving engines: token-level LM serving and batched CNN inference.
+
+Both engines take a compiled :class:`repro.program.PhantomProgram` directly
+(``CnnServeEngine(program=...)``, ``ServeEngine(..., program=...)``) so
+weight-load-time lowering happens once per fleet — see DESIGN.md §8.
+"""
 from .cnn import CnnRequest, CnnServeEngine, serve_cnn
 from .engine import ServeEngine, Request
 

@@ -1,24 +1,29 @@
 """Batched CNN serving on the Phantom core: fixed-slot image batching.
 
-The Phantom conv artifacts are shape-specialised at weight-load time (the
-work queue's M-tile count bakes in the batch size), so a serving engine must
-never change the batch dimension between requests.  ``CnnServeEngine`` owns a
-fixed pool of ``batch_size`` slots: incoming images queue up, each engine
-step fills every slot (padding short batches with zero images), and the whole
-prepared network — every conv through the direct implicit-im2col kernel,
-every FC through the block-sparse matmul, §3.8 masks flowing between layers
-— runs as one compiled program whose shapes never vary, so nothing ever
-recompiles after the first step.
+Phantom plans are shape-specialised at weight-load time (the work queue's
+M-tile count bakes in the batch size), so a serving engine must never change
+the batch dimension between requests.  ``CnnServeEngine`` owns a fixed pool
+of ``batch_size`` slots over one :class:`repro.program.PhantomProgram`:
+incoming images queue up, each engine step fills every slot (padding short
+batches with zero images), and the whole compiled program — every conv
+through the direct implicit-im2col kernel, every FC through the block-sparse
+matmul, §3.8 masks flowing between layers — runs with shapes that never
+vary, so nothing recompiles after the first step.
 
 Zero-image padding is correct because samples are independent (conv/FC act
-per-row of the batch), and cheap because dead slots stay gated: the forward
-takes a ``slot_mask`` that re-zeroes padded rows after every bias+ReLU
-(``relu(0 + b)`` would otherwise light them up from layer 2 on), so their
-§3.8 masks gate every padded tile in the direct conv path (m-tiles are
-per-sample rows) and every FC tile whose bm rows hold no live sample
+per-row of the batch), and cheap because dead slots stay gated: the program
+forward takes a ``slot_mask`` that re-zeroes padded rows after every
+bias+ReLU (``relu(0 + b)`` would otherwise light them up from layer 2 on),
+so their §3.8 masks gate every padded tile in the direct conv path (m-tiles
+are per-sample rows) and every FC tile whose bm rows hold no live sample
 (DESIGN.md §4).
 
-``serve_cnn`` is the one-shot convenience wrapper over a list of images.
+Construct from a compiled (possibly :meth:`PhantomProgram.load`-restored)
+program — ``CnnServeEngine(program=prog, batch_size=8)`` — so weight-load
+-time lowering happens once per fleet, not once per process.  The old
+``CnnServeEngine(params, layers, ...)`` form is a deprecated shim that
+compiles a program on the spot.  ``serve_cnn`` is the one-shot convenience
+wrapper over a list of images.
 """
 from __future__ import annotations
 
@@ -30,7 +35,9 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.cnn import cnn_forward_phantom, prepare_cnn_phantom
+from repro import program as program_mod
+from repro.core.dataflow import ConvSpec
+from repro.core.phantom_linear import PhantomConfig
 
 __all__ = ["CnnRequest", "CnnServeEngine", "serve_cnn"]
 
@@ -44,32 +51,56 @@ class CnnRequest:
 
 
 class CnnServeEngine:
-    """Continuous batched inference over a prepared Phantom CNN.
+    """Continuous batched inference over a compiled Phantom program.
 
-    ``params``/``layers`` as in :func:`repro.models.cnn.cnn_forward`; the
-    network is lowered once in the constructor for exactly ``batch_size``
-    slots (``conv_mode`` selects the conv lowering, direct by default).
+    ``CnnServeEngine(program=prog, batch_size=b)`` serves ``prog`` at ``b``
+    slots (lowered on first use unless already in the program's plan cache
+    — e.g. restored by :meth:`PhantomProgram.load`).  The legacy
+    ``CnnServeEngine(params, layers, batch_size=b, ...)`` form compiles a
+    program from the loose pieces and warns ``DeprecationWarning``.
     """
 
     def __init__(
         self,
-        params,
-        layers,
+        params=None,
+        layers=None,
         *,
+        program: "program_mod.PhantomProgram | None" = None,
         batch_size: int,
-        block: tuple[int, int, int] = (128, 128, 128),
-        conv_mode: str = "direct",
-        act_threshold: float = 0.0,
+        block: tuple[int, int, int] | None = None,
+        conv_mode: str | None = None,
+        act_threshold: float | None = None,
         interpret: bool | None = None,
     ):
-        self.params, self.layers = params, layers
+        if program is None:
+            if params is None or layers is None:
+                raise TypeError("pass program=, or the legacy (params, layers) pair")
+            program_mod.warn_deprecated(
+                "CnnServeEngine(params, layers, ...)",
+                "CnnServeEngine(program=phantom.compile(...), batch_size=...)",
+            )
+            cfg = PhantomConfig(
+                enabled=True,
+                block=tuple(block or (128, 128, 128)),
+                conv_mode=conv_mode or "direct",
+                act_threshold=act_threshold or 0.0,
+            )
+            program = program_mod.compile(layers, params, cfg, batch=batch_size)
+        elif params is not None or layers is not None:
+            raise TypeError("pass either program= or (params, layers), not both")
+        elif block is not None or conv_mode is not None:
+            raise TypeError(
+                "block/conv_mode are compile-time knobs: set them on the "
+                "program's PhantomConfig, not on the engine"
+            )
+        self.program = program
         self.b = batch_size
-        self.act_threshold = act_threshold
+        self.act_threshold = act_threshold  # None ⇒ program.cfg.act_threshold
         self.interpret = interpret
-        self.prepared = prepare_cnn_phantom(
-            params, layers, batch_size, block=block, conv_mode=conv_mode
-        )
-        first = layers[0]
+        program.at_batch(batch_size)  # no-op when the plan was saved/restored
+        first = program.layers[0]
+        if not isinstance(first, ConvSpec):
+            raise ValueError("CnnServeEngine expects a conv-first network")
         self.in_shape = (first.in_h, first.in_w, first.in_ch)
         self.queue: deque[CnnRequest] = deque()
         self._rid = itertools.count()
@@ -97,13 +128,10 @@ class CnnServeEngine:
         for s, req in enumerate(reqs):
             x[s] = req.image
             slot[s] = 1.0
-        logits = cnn_forward_phantom(
-            self.params,
-            self.prepared,
+        logits = self.program(
             jnp.asarray(x),
-            self.layers,
-            act_threshold=self.act_threshold,
             slot_mask=jnp.asarray(slot),
+            act_threshold=self.act_threshold,
             interpret=self.interpret,
         )
         logits = np.asarray(logits)
@@ -122,28 +150,67 @@ class CnnServeEngine:
             finished.extend(self.step())
         return finished
 
+    def stats(self) -> dict:
+        """The program's per-layer steps/density/valid_macs at this engine's
+        batch size (DESIGN.md §5)."""
+        return self.program.stats(self.b)
+
+    # Legacy attribute surface (pre-program engines exposed these).
+    @property
+    def params(self):
+        return self.program.params
+
+    @property
+    def layers(self):
+        return self.program.layers
+
+    @property
+    def prepared(self):
+        return self.program.at_batch(self.b)
+
 
 def serve_cnn(
-    params,
-    layers,
-    images,
+    params=None,
+    layers=None,
+    images=None,
     *,
+    program: "program_mod.PhantomProgram | None" = None,
     batch_size: int = 4,
-    block: tuple[int, int, int] = (128, 128, 128),
-    conv_mode: str = "direct",
+    block: tuple[int, int, int] | None = None,
+    conv_mode: str | None = None,
     interpret: bool | None = None,
 ) -> np.ndarray:
     """One-shot batched inference: ``[N, H, W, C]`` images → ``[N, classes]``
     logits through one fixed-shape compiled program (requests beyond
-    ``batch_size`` reuse the jit cache — no recompilation)."""
-    eng = CnnServeEngine(
-        params,
-        layers,
-        batch_size=batch_size,
-        block=block,
-        conv_mode=conv_mode,
-        interpret=interpret,
-    )
+    ``batch_size`` reuse the jit cache — no recompilation).  Prefer
+    ``serve_cnn(images=imgs, program=prog)``; the loose
+    ``(params, layers)`` form compiles a program on the spot."""
+    if images is None:
+        raise TypeError("images is required")
+    if program is not None:
+        if params is not None or layers is not None:
+            raise TypeError("pass either program= or (params, layers), not both")
+        if block is not None or conv_mode is not None:
+            raise TypeError(
+                "block/conv_mode are compile-time knobs: set them on the "
+                "program's PhantomConfig, not on serve_cnn"
+            )
+        eng = CnnServeEngine(program=program, batch_size=batch_size, interpret=interpret)
+    else:
+        program_mod.warn_deprecated(
+            "serve_cnn(params, layers, images)",
+            "serve_cnn(images=..., program=phantom.compile(...))",
+        )
+        cfg = PhantomConfig(
+            enabled=True,
+            block=tuple(block or (128, 128, 128)),
+            conv_mode=conv_mode or "direct",
+        )
+        eng = CnnServeEngine(
+            program=program_mod.compile(layers, params, cfg, batch=batch_size),
+            batch_size=batch_size,
+            interpret=interpret,
+        )
     reqs = [eng.submit(im) for im in images]
     eng.run()
     return np.stack([r.logits for r in reqs])

@@ -10,10 +10,19 @@ per-slot ``index`` vector tracks each slot's fill independently.
 This is where Phantom serves: with ``cfg.phantom.enabled`` the FFN/o-proj
 matmuls route through the masked (or Pallas-kernel) block-sparse path, and
 activation tile masks flow between layers (DESIGN.md §4).
+
+The engine takes a :class:`repro.program.PhantomProgram` directly
+(``ServeEngine(model, params, program=prog, ...)``): models whose
+``decode_step`` accepts a ``program`` keyword receive it and can pull
+prepared kernel-path artifacts from the program's plan cache instead of
+re-lowering per process (DESIGN.md §8); for other models the program is
+held for introspection (``engine.program.stats(...)``).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import inspect
 import itertools
 from collections import deque
 from typing import Optional
@@ -35,17 +44,35 @@ class Request:
     done: bool = False
 
 
+def _accepts_program(fn) -> bool:
+    """Whether a model's ``decode_step`` opts into the program contract.
+
+    Opt-in requires a *named* ``program`` parameter — a bare ``**kwargs``
+    catch-all does not count (it usually forwards elsewhere, and baking
+    ``program=`` into it would crash or silently embed the program's arrays
+    as trace constants in a model that never asked for them).
+    """
+    try:
+        return "program" in inspect.signature(fn).parameters
+    except (TypeError, ValueError):
+        return False
+
+
 class ServeEngine:
-    def __init__(self, model, params, *, batch_size: int, max_len: int):
+    def __init__(self, model, params, *, batch_size: int, max_len: int, program=None):
         self.model, self.params = model, params
         self.b, self.max_len = batch_size, max_len
+        self.program = program
         self.cache = model.init_cache(batch_size, max_len)
         self.index = np.zeros(batch_size, dtype=np.int32)  # per-slot fill
         self.slot_req: list[Optional[Request]] = [None] * batch_size
         self.slot_pending: list[deque] = [deque() for _ in range(batch_size)]
         self.queue: deque[Request] = deque()
         self._rid = itertools.count()
-        self._step = jax.jit(model.decode_step)
+        step_fn = model.decode_step
+        if program is not None and _accepts_program(step_fn):
+            step_fn = functools.partial(step_fn, program=program)
+        self._step = jax.jit(step_fn)
 
     # -- client API ----------------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16, eos_id=None) -> Request:

@@ -264,21 +264,46 @@ def test_cnn_phantom_forward_toy_net(conv_mode):
     )
 
 
+@pytest.mark.parametrize("tau", [0.02, 0.1], ids=lambda t: f"tau{t}")
+def test_cnn_phantom_forward_toy_net_tau_mode_parity(tau):
+    """τ > 0 (the lossy serving knob) applies identically in both conv
+    lowerings AND at the GAP mask re-encode: the direct and im2col programs
+    gate the same tiles, so their outputs agree at grid tolerance even when
+    both diverge from the un-thresholded dense forward."""
+    import phantom
+    from conftest import toy_cnn
+
+    rng = np.random.default_rng(19)
+    layers, params = toy_cnn(rng)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    ys = {}
+    for conv_mode in MODES:
+        cfg = phantom.PhantomConfig(
+            enabled=True, block=BLK, act_threshold=tau, conv_mode=conv_mode
+        )
+        ys[conv_mode] = np.asarray(
+            phantom.compile(layers, params, cfg, batch=2)(x, interpret=True)
+        )
+    np.testing.assert_allclose(ys["direct"], ys["im2col"], atol=1e-4, rtol=1e-3)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("conv_mode", MODES)
 @pytest.mark.parametrize("name,hw", [("vgg16", 16), ("mobilenet", 32)])
 def test_cnn_phantom_forward_full_network(name, hw, conv_mode):
     """Whole-network parity (all 16 VGG16 / 28 MobileNet layers) at reduced
-    resolution — every conv and FC goes through the Phantom core."""
+    resolution — every conv and FC goes through the Phantom core, compiled
+    as one ``phantom.compile`` program."""
+    import phantom
+
     rng = np.random.default_rng(0)
     spec, layers = cnn.cnn_spec(name, input_hw=hw)
     params = _toy_params(rng, spec)
     x = jnp.asarray(rng.standard_normal((1, hw, hw, 3)).astype(np.float32))
     y_dense = cnn.cnn_forward(params, x, layers)
-    prepared = cnn.prepare_cnn_phantom(
-        params, layers, batch=1, block=(32, 32, 32), conv_mode=conv_mode
-    )
-    y_ph = cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
+    cfg = phantom.PhantomConfig(enabled=True, block=(32, 32, 32), conv_mode=conv_mode)
+    prog = phantom.compile(layers, params, cfg, batch=1)
+    y_ph = prog(x, interpret=True)
     scale = max(1.0, float(jnp.abs(y_dense).max()))
     np.testing.assert_allclose(
         np.asarray(y_ph) / scale, np.asarray(y_dense) / scale, atol=2e-6

@@ -1,0 +1,308 @@
+"""The program API: ``phantom.compile`` → :class:`PhantomProgram`.
+
+Covers the DESIGN.md §8 contract: compile-once parity with the dense
+forward, the per-batch-size plan cache (no re-lowering on repeat calls),
+save/load round-trips that are bit-identical with identical ``stats()``
+(in-process and across a fresh interpreter), τ-consistent GAP mask
+re-encoding, padded-slot gating through the program-backed serve engine,
+and single-registration extensibility (the FFN layer kind).
+"""
+import hashlib
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import toy_cnn
+
+import phantom
+from repro.core.dataflow import ConvSpec, FCSpec
+from repro.models import cnn
+
+BLK = (16, 16, 16)
+CFG = phantom.PhantomConfig(enabled=True, block=BLK)
+
+
+def _rand_params(rng, layers, w_density=0.4, bias_scale=0.1):
+    params = {}
+    for l in layers:
+        if isinstance(l, ConvSpec):
+            wshape = (l.kh, l.kw, 1 if l.depthwise else l.in_ch, l.out_ch)
+            bshape = (l.out_ch,)
+        else:
+            wshape, bshape = (l.in_dim, l.out_dim), (l.out_dim,)
+        w = rng.standard_normal(wshape).astype(np.float32) * 0.1
+        w *= rng.random(wshape) < w_density
+        params[l.name] = {
+            "w": jnp.asarray(w),
+            "b": jnp.asarray(
+                rng.standard_normal(bshape).astype(np.float32) * bias_scale
+            ),
+        }
+    return params
+
+
+def _vggish(rng):
+    """VGG16-in-miniature: conv stack with an inter-conv max-pool, then the
+    pool5→flatten FC head and a second (last, linear) FC."""
+    layers = [
+        ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)),
+        ConvSpec("c2", 16, 32, 4, 4, 3, 3, (1, 1)),  # 8→4 via maxpool glue
+        FCSpec("fc1", 2 * 2 * 32, 32, pool="pool5"),
+        FCSpec("fc2", 32, 10),
+    ]
+    return layers, _rand_params(rng, layers)
+
+
+def _mobilenetish(rng):
+    """MobileNet-in-miniature: conv → depthwise s2 → pointwise → GAP FC
+    (the conftest toy net)."""
+    return toy_cnn(rng)
+
+
+NETS = {"vggish": _vggish, "mobilenetish": _mobilenetish}
+
+
+@pytest.mark.parametrize("net", NETS, ids=str)
+def test_program_matches_dense(net):
+    rng = np.random.default_rng(11)
+    layers, params = NETS[net](rng)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    prog = phantom.compile(layers, params, CFG, batch=2)
+    y = prog(x, interpret=True)
+    ref = cnn.cnn_forward(params, x, layers)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4, rtol=1e-3)
+
+
+def test_batch_plan_cache_no_relowering():
+    """at_batch(1/3/8) each match the lax.conv reference; repeat calls are
+    cache hits (same plan object, lowering counter frozen)."""
+    rng = np.random.default_rng(5)
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(layers, params, CFG, batch=(1, 3, 8))
+    assert prog.lowerings == 3 and prog.batch_sizes == (1, 3, 8)
+    for b in (1, 3, 8):
+        x = jnp.asarray(rng.standard_normal((b, 8, 8, 3)).astype(np.float32))
+        y = prog(x, interpret=True)
+        ref = cnn.cnn_forward(params, x, layers)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4, rtol=1e-3)
+    # Repeat calls: cache hit — identical plan dict, no new lowerings.
+    before = {b: prog.at_batch(b) for b in (1, 3, 8)}
+    assert prog.lowerings == 3
+    for b in (1, 3, 8):
+        assert prog.at_batch(b) is before[b]
+    assert prog.lowerings == 3
+    # stats never lowers and is per-batch.
+    s1, s8 = prog.stats(1), prog.stats(8)
+    assert s8["c1"]["valid_macs"] == 8 * s1["c1"]["valid_macs"]
+    assert prog.lowerings == 3
+
+
+def test_program_engine_padded_slot_gating():
+    """Program-backed CnnServeEngine: padded slots stay gated (slot mask
+    defeats relu(0 + b)) and live rows match the dense forward."""
+    from repro.serve import CnnServeEngine
+
+    rng = np.random.default_rng(31)
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(layers, params, CFG, batch=2)
+    eng = CnnServeEngine(program=prog, batch_size=2, interpret=True)
+    imgs = rng.standard_normal((3, 8, 8, 3)).astype(np.float32)
+    reqs = [eng.submit(im) for im in imgs]
+    eng.run()
+    assert (eng.batches_run, eng.images_served, eng.padded_slots) == (2, 3, 1)
+    ref = np.asarray(cnn.cnn_forward(params, jnp.asarray(imgs), layers))
+    np.testing.assert_allclose(
+        np.stack([r.logits for r in reqs]), ref, atol=1e-4, rtol=1e-3
+    )
+    assert eng.stats()["fc"]["kind"] == "fc"
+    # Direct slot-mask check: a dead slot's logits collapse to the bias.
+    x = np.zeros((2, 8, 8, 3), np.float32)
+    x[0] = imgs[0]
+    y = prog(jnp.asarray(x), slot_mask=jnp.asarray([1.0, 0.0]), interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(y)[1], np.asarray(params[layers[-1].name]["b"])
+    )
+
+
+@pytest.mark.parametrize("net", NETS, ids=str)
+def test_save_load_roundtrip(net, tmp_path):
+    """load(save(p)) is bit-identical: outputs, stats, and the raw packed
+    payloads/queues/masks — with zero re-lowerings.  Two cached batch sizes
+    are saved; the batch-invariant payloads are deduplicated in the npz but
+    must restore identically for both plans."""
+    rng = np.random.default_rng(7)
+    layers, params = NETS[net](rng)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    x3 = jnp.asarray(rng.standard_normal((3, 8, 8, 3)).astype(np.float32))
+    prog = phantom.compile(layers, params, CFG, batch=(2, 3))
+    y = np.asarray(prog(x, interpret=True))
+    y3 = np.asarray(prog(x3, interpret=True))
+
+    prog.save(str(tmp_path / "prog"))
+    q = phantom.PhantomProgram.load(str(tmp_path / "prog"))
+    assert q.lowerings == 0 and q.batch_sizes == (2, 3)
+    np.testing.assert_array_equal(np.asarray(q(x, interpret=True)), y)
+    np.testing.assert_array_equal(np.asarray(q(x3, interpret=True)), y3)
+    assert q.lowerings == 0  # the forwards reused the restored plans
+    assert q.stats(2) == prog.stats(2)
+    # Raw artifact identity: queues, packed payloads, weight masks.
+    for name, plan in prog.at_batch(2).items():
+        loaded = q.at_batch(2)[name]
+        if isinstance(plan, type(loaded)) and hasattr(plan, "pw"):  # conv
+            a = plan.pw if plan.pw is not None else plan.plan
+            b = loaded.pw if loaded.pw is not None else loaded.plan
+        else:
+            a, b = plan, loaded
+        for field in ("packed", "mi", "ni", "wq", "start", "last", "valid", "w_bmask"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(a, field)), np.asarray(getattr(b, field))
+            )
+
+
+def test_save_load_roundtrip_bfloat16(tmp_path):
+    """Extension dtypes survive the npz round-trip (stored as byte views):
+    a bfloat16-packed program — including bfloat16 *param* leaves — reloads
+    with the same dtypes and bit-identical outputs."""
+    rng = np.random.default_rng(29)
+    layers, params = toy_cnn(rng)
+    for p in params.values():
+        p["b"] = p["b"].astype(jnp.bfloat16)
+    cfg = phantom.PhantomConfig(enabled=True, block=BLK, dtype="bfloat16")
+    prog = phantom.compile(layers, params, cfg, batch=1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 3)).astype(np.float32))
+    y = np.asarray(prog(x, interpret=True))
+    prog.save(str(tmp_path / "prog"))
+    q = phantom.PhantomProgram.load(str(tmp_path / "prog"))
+    assert q.at_batch(1)["c1"].plan.packed.dtype == jnp.bfloat16
+    assert q.params["c1"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(q(x, interpret=True)), y)
+
+
+def test_save_load_fresh_process(tmp_path):
+    """A saved program reloaded in a *fresh interpreter* serves batches
+    through CnnServeEngine bit-identically with lowerings == 0 — the
+    weight-load-time transformation ran once per fleet, not per process."""
+    rng = np.random.default_rng(13)
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(layers, params, CFG, batch=2)
+    imgs = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    np.save(tmp_path / "imgs.npy", imgs)
+    ref = np.asarray(
+        prog(jnp.asarray(imgs), slot_mask=jnp.asarray([1.0, 1.0]), interpret=True)
+    )
+    prog.save(str(tmp_path / "prog"))
+
+    script = f"""
+import hashlib, numpy as np
+import phantom
+from repro.serve import CnnServeEngine
+
+prog = phantom.PhantomProgram.load({str(tmp_path / "prog")!r})
+assert prog.lowerings == 0, "load must not re-lower"
+eng = CnnServeEngine(program=prog, batch_size=2, interpret=True)
+assert prog.lowerings == 0, "engine reused the restored batch plan"
+imgs = np.load({str(tmp_path / "imgs.npy")!r})
+reqs = [eng.submit(im) for im in imgs]
+eng.run()
+out = np.stack([r.logits for r in reqs])
+assert prog.lowerings == 0, "serving must not re-lower"
+print("DIGEST", hashlib.sha256(out.tobytes()).hexdigest())
+"""
+    res = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src", "JAX_PLATFORMS": "cpu"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=300,
+    )
+    assert res.returncode == 0, res.stderr
+    digest = res.stdout.strip().split("DIGEST ")[-1]
+    assert digest == hashlib.sha256(ref.tobytes()).hexdigest()
+
+
+def test_gap_mask_applies_tau():
+    """The GAP re-encode uses the producer rule ``x > τ`` (the old forward
+    used ``x != 0`` there): with every pooled activation in (0, τ], the FC
+    consumer sees a fully-gated input and its logits collapse to the bias
+    exactly; the dense forward (no τ) disagrees — τ is genuinely lossy."""
+    rng = np.random.default_rng(3)
+    layers = [ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)), FCSpec("fc", 16, 10, pool="gap")]
+    params = _rand_params(rng, layers, w_density=1.0)
+    # Tiny conv weights ⇒ GAP outputs ≪ τ but nonzero; inputs ~N(0,1) ≫ τ so
+    # the first layer's own value-derived gating stays fully live.
+    params["c1"]["w"] = params["c1"]["w"] * 1e-3
+    params["c1"]["b"] = jnp.zeros_like(params["c1"]["b"])
+    tau = 0.05
+    cfg = phantom.PhantomConfig(enabled=True, block=BLK, act_threshold=tau)
+    x = jnp.asarray(np.abs(rng.standard_normal((1, 8, 8, 3))).astype(np.float32))
+    prog = phantom.compile(layers, params, cfg, batch=1)
+    y = np.asarray(prog(x, interpret=True))
+    np.testing.assert_array_equal(y[0], np.asarray(params["fc"]["b"]))
+    # Sanity: the un-thresholded network does NOT collapse to the bias.
+    dense = np.asarray(cnn.cnn_forward(params, x, layers))
+    assert np.abs(dense[0] - np.asarray(params["fc"]["b"])).max() > 0
+
+
+def test_ffn_spec_is_one_registration():
+    """A net containing the FFN layer kind (registered once in
+    models/layers.py) compiles and matches the dense reference — no forward
+    loop was edited to support it."""
+    from repro.models.layers import ACT, FFNSpec
+
+    rng = np.random.default_rng(23)
+    layers = [FFNSpec("ffn", 24, 32, 16, act="silu"), FCSpec("head", 16, 10)]
+    params = {
+        "ffn": {
+            "wg": jnp.asarray(rng.standard_normal((24, 32)).astype(np.float32) * 0.2),
+            "wu": jnp.asarray(rng.standard_normal((24, 32)).astype(np.float32) * 0.2),
+            "wd": jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32) * 0.2),
+            "b": jnp.asarray(rng.standard_normal((16,)).astype(np.float32) * 0.1),
+        },
+        "head": {
+            "w": jnp.asarray(rng.standard_normal((16, 10)).astype(np.float32) * 0.2),
+            "b": jnp.asarray(np.zeros(10, np.float32)),
+        },
+    }
+    x = jnp.asarray(rng.standard_normal((3, 24)).astype(np.float32))
+    prog = phantom.compile(layers, params, phantom.PhantomConfig(enabled=True, block=(8, 8, 8)), batch=3)
+    y = prog(x, interpret=True)
+
+    import jax as _jax
+
+    p = params["ffn"]
+    h = ACT["silu"](x @ p["wg"]) * (x @ p["wu"])
+    ref = _jax.nn.relu(h @ p["wd"] + p["b"])  # non-last layer gets the relu epilogue
+    ref = ref @ params["head"]["w"] + params["head"]["b"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4, rtol=1e-3)
+    assert prog.stats(3)["ffn"]["kind"] == "ffn"
+
+
+def test_serve_engine_threads_program_to_model():
+    """ServeEngine passes the program to models whose decode_step opts in."""
+    import jax
+
+    from repro.serve import ServeEngine
+
+    seen = {}
+
+    class FakeModel:
+        def init_cache(self, b, max_len):
+            return {"kv": jnp.zeros((1, b, max_len))}
+
+        def decode_step(self, params, cache, tokens, index, *, program=None):
+            seen["program"] = program
+            logits = jnp.zeros((tokens.shape[0], 1, 4)).at[:, 0, 1].set(1.0)
+            return logits, cache
+
+    rng = np.random.default_rng(0)
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(layers, params, CFG, batch=1)
+    eng = ServeEngine(FakeModel(), {}, batch_size=1, max_len=8, program=prog)
+    assert eng.program is prog
+    req = eng.submit([1, 2], max_new_tokens=1)
+    eng.run()
+    assert req.done and seen["program"] is prog

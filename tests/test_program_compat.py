@@ -1,0 +1,124 @@
+"""Deprecation-shim guard for the pre-program entry points (tier-1).
+
+DeprecationWarning is *an error* in this module, so the contract is sharp:
+each old entry point (``prepare_cnn_phantom``, ``cnn_forward_phantom``, the
+legacy ``CnnServeEngine(params, layers, ...)`` form) warns exactly once per
+process — the first call raises here (caught by ``pytest.warns``), every
+later call is silent (any second emission would fail the test under the
+error filter) — and all of them delegate to the program machinery
+bit-for-bit at ``Cin % bk == 0``.
+"""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import phantom
+from repro import program as program_mod
+from repro.core.dataflow import ConvSpec, FCSpec
+from repro.models import cnn
+from repro.serve import CnnServeEngine
+
+pytestmark = pytest.mark.filterwarnings("error::DeprecationWarning")
+
+BLK = (8, 8, 8)
+
+
+def _aligned_net(rng):
+    """Channels are multiples of bk=8 ⇒ both paths tile K identically, so
+    shim-vs-program agreement must be bit-for-bit (DESIGN.md §3)."""
+    layers = [
+        ConvSpec("c1", 8, 16, 8, 8, 3, 3, (1, 1)),
+        ConvSpec("c2", 16, 16, 8, 8, 3, 3, (1, 1)),
+        FCSpec("fc", 16, 8, pool="gap"),
+    ]
+    params = {}
+    for l in layers:
+        wshape = (
+            (l.kh, l.kw, l.in_ch, l.out_ch)
+            if isinstance(l, ConvSpec)
+            else (l.in_dim, l.out_dim)
+        )
+        w = rng.standard_normal(wshape).astype(np.float32) * 0.1
+        w *= rng.random(wshape) < 0.4
+        params[l.name] = {
+            "w": jnp.asarray(w),
+            "b": jnp.asarray(rng.standard_normal(wshape[-1]).astype(np.float32) * 0.1),
+        }
+    return layers, params
+
+
+@pytest.fixture(autouse=True)
+def _rearmed_warnings():
+    """Each test sees freshly-armed once-per-process warnings."""
+    program_mod.reset_deprecation_warnings()
+    yield
+    program_mod.reset_deprecation_warnings()
+
+
+def test_old_entry_points_warn_exactly_once():
+    rng = np.random.default_rng(1)
+    layers, params = _aligned_net(rng)
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 8)).astype(np.float32))
+
+    with pytest.warns(DeprecationWarning, match="prepare_cnn_phantom") as rec:
+        prepared = cnn.prepare_cnn_phantom(params, layers, batch=1, block=BLK)
+    assert sum(r.category is DeprecationWarning for r in rec) == 1
+    with pytest.warns(DeprecationWarning, match="cnn_forward_phantom") as rec:
+        cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
+    assert sum(r.category is DeprecationWarning for r in rec) == 1
+    with pytest.warns(DeprecationWarning, match="CnnServeEngine") as rec:
+        CnnServeEngine(params, layers, batch_size=1, block=BLK, interpret=True)
+    assert sum(r.category is DeprecationWarning for r in rec) == 1
+
+    # Second calls are silent: under the error filter any further emission
+    # would raise out of these statements.
+    prepared = cnn.prepare_cnn_phantom(params, layers, batch=1, block=BLK)
+    cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
+    CnnServeEngine(params, layers, batch_size=1, block=BLK, interpret=True)
+
+
+def test_program_form_never_warns():
+    rng = np.random.default_rng(2)
+    layers, params = _aligned_net(rng)
+    prog = phantom.compile(
+        layers, params, phantom.PhantomConfig(enabled=True, block=BLK), batch=1
+    )
+    eng = CnnServeEngine(program=prog, batch_size=1, interpret=True)
+    eng.submit(np.zeros((8, 8, 8), np.float32))
+    eng.run()  # error filter active: any DeprecationWarning fails the test
+
+
+def test_shims_delegate_bit_for_bit():
+    """Old prepare+forward == program forward, and the legacy engine ==
+    the program-backed engine, bit for bit at Cin % bk == 0."""
+    rng = np.random.default_rng(3)
+    layers, params = _aligned_net(rng)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 8)).astype(np.float32))
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        prepared = cnn.prepare_cnn_phantom(params, layers, batch=2, block=BLK)
+        y_old = cnn.cnn_forward_phantom(params, prepared, x, layers, interpret=True)
+
+    prog = phantom.compile(
+        layers, params, phantom.PhantomConfig(enabled=True, block=BLK), batch=2
+    )
+    np.testing.assert_array_equal(
+        np.asarray(y_old), np.asarray(prog(x, interpret=True))
+    )
+
+    imgs = rng.standard_normal((3, 8, 8, 8)).astype(np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng_old = CnnServeEngine(params, layers, batch_size=2, block=BLK, interpret=True)
+    reqs_old = [eng_old.submit(im) for im in imgs]
+    eng_old.run()
+    eng_new = CnnServeEngine(program=prog, batch_size=2, interpret=True)
+    reqs_new = [eng_new.submit(im) for im in imgs]
+    eng_new.run()
+    np.testing.assert_array_equal(
+        np.stack([r.logits for r in reqs_old]),
+        np.stack([r.logits for r in reqs_new]),
+    )
