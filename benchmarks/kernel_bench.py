@@ -141,24 +141,83 @@ def conv_mode_rows(rng, *, b=1, hw=14, cin=64, cout=64, kh=3, stride=(1, 1),
     return rows, result
 
 
-def write_conv_trajectory(result, path="BENCH_conv.json"):
-    """Append one trajectory point comparing the two conv lowerings."""
+def multicore_rows(rng, *, cores=4, mt=4):
+    """Balanced (densest-first LPT, §4.3.1) vs naive round-robin partition
+    across virtual cores, on a skewed-density layer — the DESIGN.md §9
+    acceptance row.  A heavy column block every ``cores``-th position makes
+    round-robin collide heavies onto one core; LPT spreads them.  Metrics
+    come from the *real* execution artifacts: ``makespan`` is the padded
+    per-core queue length the grid executes, ``work_makespan`` the per-core
+    MAC-step maximum, ``imbalance`` max/mean per-core work.  Outputs are
+    bit-identical across policies — the bench asserts it."""
+    kt, nt, blk = 12, 8, (32, 32, 32)
+    bk, bn = blk[1:]
+    w = np.zeros((kt * bk, nt * bn), np.float32)
+    for c in range(nt):
+        rows_kept = kt if c % cores == 0 else 1  # heavy every cores-th column
+        w[: rows_kept * bk, c * bn : (c + 1) * bn] = rng.standard_normal(
+            (rows_kept * bk, bn)
+        ).astype(np.float32)
+    m = mt * blk[0]
+    x = jnp.asarray(rng.standard_normal((m, w.shape[0])).astype(np.float32))
+    rows, result, outs = [], {}, {}
+    for bal in ("none", "full"):
+        pw = ops.prepare_weight(w, m=m, block=blk, cores=cores, balance=bal)
+        t_us = _time_call(lambda: ops.phantom_matmul(x, pw, interpret=True))
+        outs[bal] = np.asarray(ops.phantom_matmul(x, pw, interpret=True))
+        work = pw.core_cost * mt
+        result[bal] = dict(
+            us=t_us,
+            makespan=int(pw.core_steps.max()),
+            work_makespan=int(work.max()),
+            imbalance=float(work.max() / work.mean()),
+        )
+        rows.append(
+            (
+                f"multicore/{bal}/cores{cores}",
+                f"{t_us:.0f}",
+                f"makespan={result[bal]['makespan']};"
+                f"work_makespan={result[bal]['work_makespan']};"
+                f"imbalance={result[bal]['imbalance']:.3f}",
+            )
+        )
+    np.testing.assert_array_equal(outs["none"], outs["full"])
+    assert result["full"]["work_makespan"] <= result["none"]["work_makespan"]
+    return rows, result
+
+
+def write_conv_trajectory(result, mc_result=None, path="BENCH_conv.json"):
+    """Append one trajectory point comparing the two conv lowerings (plus,
+    when supplied, the multi-core balanced-vs-naive makespans)."""
     p = pathlib.Path(path)
     hist = json.loads(p.read_text()) if p.exists() else []
-    hist.append(
-        {
-            "direct_us": round(result["direct"]["us"], 1),
-            "im2col_us": round(result["im2col"]["us"], 1),
-            "speedup_direct_over_im2col": round(
-                result["im2col"]["us"] / result["direct"]["us"], 3
+    point = {
+        "direct_us": round(result["direct"]["us"], 1),
+        "im2col_us": round(result["im2col"]["us"], 1),
+        "speedup_direct_over_im2col": round(
+            result["im2col"]["us"] / result["direct"]["us"], 3
+        ),
+        "direct_patch_bytes": result["direct"]["patch_bytes"],
+        "im2col_patch_bytes": result["im2col"]["patch_bytes"],
+        "activation_bytes_ratio": round(
+            result["direct"]["act_bytes"] / result["im2col"]["act_bytes"], 3
+        ),
+    }
+    if mc_result is not None:
+        point.update(
+            multicore_naive_makespan=mc_result["none"]["makespan"],
+            multicore_balanced_makespan=mc_result["full"]["makespan"],
+            multicore_naive_work_makespan=mc_result["none"]["work_makespan"],
+            multicore_balanced_work_makespan=mc_result["full"]["work_makespan"],
+            multicore_naive_imbalance=round(mc_result["none"]["imbalance"], 3),
+            multicore_balanced_imbalance=round(mc_result["full"]["imbalance"], 3),
+            multicore_balance_speedup=round(
+                mc_result["none"]["work_makespan"]
+                / mc_result["full"]["work_makespan"],
+                3,
             ),
-            "direct_patch_bytes": result["direct"]["patch_bytes"],
-            "im2col_patch_bytes": result["im2col"]["patch_bytes"],
-            "activation_bytes_ratio": round(
-                result["direct"]["act_bytes"] / result["im2col"]["act_bytes"], 3
-            ),
-        }
-    )
+        )
+    hist.append(point)
     p.write_text(json.dumps(hist, indent=2) + "\n")
     return hist[-1]
 
@@ -214,6 +273,13 @@ def program_rows(rng):
     return rows
 
 
+def run_multicore():
+    """The multi-core balance rows alone (fast — printed by the CI tier-1
+    job to keep the balanced-vs-naive makespans visible per commit)."""
+    rows, result = multicore_rows(np.random.default_rng(0))
+    return emit(rows), result
+
+
 def run():
     rows = []
     rng = np.random.default_rng(0)
@@ -255,11 +321,18 @@ def run():
     rows += _conv_rows(rng)
     mode_rows, mode_result = conv_mode_rows(rng)
     rows += mode_rows
+    mc_rows, mc_result = multicore_rows(rng)
+    rows += mc_rows
     rows += program_rows(rng)
-    return emit(rows), mode_result
+    return emit(rows), mode_result, mc_result
 
 
 if __name__ == "__main__":
-    _, result = run()
-    point = write_conv_trajectory(result)
-    print("BENCH_conv.json +=", json.dumps(point))
+    import sys
+
+    if len(sys.argv) > 1 and sys.argv[1] == "multicore":
+        run_multicore()
+    else:
+        _, result, mc_result = run()
+        point = write_conv_trajectory(result, mc_result)
+        print("BENCH_conv.json +=", json.dumps(point))

@@ -121,6 +121,21 @@ for name, s in prog.stats(2).items():
     print(f"    {name:3s}: steps {s['steps']:4d}/{s['dense_steps']:4d} "
           f"density {s['density']:.2f} valid_macs {s['valid_macs']}")
 
+# Multi-core (Phantom-2D, DESIGN.md §9): the same network partitioned
+# across 2 virtual cores — densest-first LPT per layer, one pallas_call
+# with a leading cores grid axis, bit-identical logits.
+prog2 = phantom.compile(
+    layers, params,
+    phantom.PhantomConfig(enabled=True, block=(16, 16, 16), cores=2),
+    batch=2,
+)
+x2 = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+assert np.array_equal(np.asarray(prog2(x2, interpret=True)),
+                      np.asarray(prog(x2, interpret=True)))
+s2 = prog2.stats(2)["c2"]
+print(f"  cores=2 bit-identical; c2 per-core work {s2['per_core_work']} "
+      f"(makespan {s2['makespan']}, imbalance {s2['imbalance']:.2f})")
+
 # Fixed-slot batched serving over the program (padded slots gated off
 # in-kernel); a prog.save()/PhantomProgram.load() round-trip would serve
 # in a fresh process with zero re-lowering.

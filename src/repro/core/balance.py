@@ -71,6 +71,7 @@ def inter_core_schedule(
     *,
     balanced: bool,
     densities: np.ndarray | None = None,
+    capacity: int | None = None,
 ) -> InterCoreSchedule:
     """Dispatch jobs (filter broadcasts) onto workers (core columns).
 
@@ -79,15 +80,25 @@ def inter_core_schedule(
     filter stalls its round).  ``balanced=True`` reproduces the paper's
     dynamic policy: order jobs densest-first (``densities`` defaults to the
     true costs — popcount of the filter mask is the paper's proxy) and give
-    each to the worker that finishes earliest.
+    each to the worker that finishes earliest.  ``capacity`` caps the number
+    of jobs per worker (the TPU adaptation's equal-output-slab constraint —
+    matches ``blocksparse.balance_columns`` with the same cap; the classic
+    unconstrained LPT is ``capacity=None``).
     """
     costs = np.asarray(costs, dtype=np.float64)
     n = costs.shape[0]
+    if capacity is not None and capacity * n_workers < n:
+        raise ValueError(
+            f"capacity {capacity} × {n_workers} workers cannot hold {n} jobs"
+        )
     workers: list[list[int]] = [[] for _ in range(n_workers)]
     finish = np.zeros(n_workers, dtype=np.float64)
     if not balanced:
         # Lock-step rounds: each round dispatches one job per column and the
-        # round ends when the slowest column finishes (systematic imbalance).
+        # round ends when the slowest column finishes (systematic imbalance —
+        # idle columns wait inside the round).  Every column advances with
+        # the round, including columns with no job in a partial final round,
+        # so finish times never lag the true end.
         t = 0.0
         for start in range(0, n, n_workers):
             round_jobs = list(range(start, min(start + n_workers, n)))
@@ -95,14 +106,20 @@ def inter_core_schedule(
             for w, j in enumerate(round_jobs):
                 workers[w].append(j)
             t += round_len
-            finish[: len(round_jobs)] = t
+            finish[:] = t
         return InterCoreSchedule(workers, finish, float(t))
     order = np.argsort(
         -(np.asarray(densities, dtype=np.float64) if densities is not None else costs),
         kind="stable",
     )
+    sizes = np.zeros(n_workers, dtype=np.int64)
     for j in order:
-        w = int(np.argmin(finish))
+        if capacity is None:
+            w = int(np.argmin(finish))
+        else:
+            elig = np.flatnonzero(sizes < capacity)
+            w = int(elig[np.argmin(finish[elig])])
         workers[w].append(int(j))
         finish[w] += costs[j]
+        sizes[w] += 1
     return InterCoreSchedule(workers, finish, float(finish.max()))

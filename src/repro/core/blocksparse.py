@@ -47,6 +47,10 @@ __all__ = [
     "build_work_queue",
     "build_conv_work_queue",
     "balance_columns",
+    "partition_columns",
+    "check_balance",
+    "balance_interleaves",
+    "BALANCE_MODES",
     "pack_blocks",
     "effectual_tiles",
 ]
@@ -270,23 +274,86 @@ def pack_blocks(w: np.ndarray, w_bmask: np.ndarray, block: tuple[int, int]) -> n
     return np.stack(out)
 
 
-def balance_columns(w_bmask: np.ndarray, n_shards: int) -> np.ndarray:
-    """Inter-core balancing analogue (§4.3.1): permute output tile-columns so
-    each of ``n_shards`` contiguous shards receives near-equal effectual
-    work, assigning densest-first to the least-loaded shard.  Returns the
-    column permutation (apply to N axis of the weight *before* sharding; the
-    inverse applies to the output)."""
+def balance_columns(
+    w_bmask: np.ndarray,
+    n_shards: int,
+    *,
+    capacity: int | None = None,
+    as_buckets: bool = False,
+):
+    """Inter-core balancing analogue (§4.3.1): assign output tile-columns to
+    ``n_shards`` shards so each receives near-equal effectual work,
+    densest-first to the least-loaded shard (LPT on weight-mask popcounts —
+    the paper's "low latency, more dense" broadcast order, no offline pass).
+
+    ``capacity`` caps how many columns a shard may take; the default
+    ``ceil(nt / n_shards)`` keeps shard widths equal — the TPU adaptation's
+    constraint that every core's output slab has the same padded tile width
+    (so the cores axis shards evenly over a device mesh).  The tie-breaking
+    (stable densest-first order, first least-loaded shard) is exactly
+    :func:`repro.core.balance.inter_core_schedule` with the same capacity —
+    the engine↔simulator balancing contract (DESIGN.md §5, §9).
+
+    Returns the flat column permutation (shard-major; apply to the N axis of
+    the weight *before* sharding, the inverse to the output), or the per-shard
+    column lists when ``as_buckets`` is set.
+    """
     w = np.asarray(w_bmask, dtype=bool)
     nt = w.shape[1]
-    per_shard = math.ceil(nt / n_shards)
+    cap = math.ceil(nt / n_shards) if capacity is None else int(capacity)
+    if cap * n_shards < nt:
+        raise ValueError(
+            f"capacity {cap} × {n_shards} shards cannot hold {nt} columns"
+        )
     dens = w.sum(axis=0)
     order = np.argsort(-dens, kind="stable")
     load = np.zeros(n_shards)
     buckets: list[list[int]] = [[] for _ in range(n_shards)]
     for c in order:
-        elig = [s for s in range(n_shards) if len(buckets[s]) < per_shard]
+        elig = [s for s in range(n_shards) if len(buckets[s]) < cap]
         s = min(elig, key=lambda s: load[s])
         buckets[s].append(int(c))
         load[s] += dens[c]
+    if as_buckets:
+        return [np.asarray(b, dtype=np.int64) for b in buckets]
     perm = [c for b in buckets for c in b]
     return np.asarray(perm, dtype=np.int64)
+
+
+BALANCE_MODES = ("none", "intra", "inter", "full")
+
+
+def check_balance(balance: str) -> str:
+    """Validate a balance policy name (raises on typos up front — a silent
+    fallthrough would just drop the balancing the user asked for)."""
+    if balance not in BALANCE_MODES:
+        raise ValueError(
+            f"balance must be one of {'|'.join(BALANCE_MODES)}, got {balance!r}"
+        )
+    return balance
+
+
+def balance_interleaves(balance: str) -> bool:
+    """Whether a balance policy enables the §4.6 intra-core-style queue
+    rotation — the one definition both lowerings (FC and conv) gate their
+    ``interleave`` knob on."""
+    return check_balance(balance) in ("intra", "full")
+
+
+def partition_columns(
+    w_bmask: np.ndarray, cores: int, balance: str
+) -> list[np.ndarray]:
+    """Bucket output tile-columns onto ``cores`` virtual cores (§4.2).
+
+    ``balance`` in ``{"inter", "full"}`` uses the densest-first LPT of
+    :func:`balance_columns`; ``{"none", "intra"}`` is the naive baseline —
+    columns in natural order, round-robin across cores (core ``c`` takes
+    columns ``c, c + cores, ...``), matching the dispatch order of
+    ``inter_core_schedule(balanced=False)``.  Every bucket holds at most
+    ``ceil(nt / cores)`` columns so core output slabs stay width-equal.
+    """
+    check_balance(balance)
+    nt = np.asarray(w_bmask).shape[1]
+    if balance in ("inter", "full"):
+        return balance_columns(w_bmask, cores, as_buckets=True)
+    return [np.arange(c, nt, cores, dtype=np.int64) for c in range(cores)]

@@ -51,6 +51,13 @@ class PhantomConfig:
     mode: str = "auto"  # dense | masked | kernel | auto
     conv_mode: str = "direct"  # direct (implicit im2col) | im2col (oracle)
     dtype: str = "float32"  # packed-payload dtype (string: keeps cfg hashable)
+    # Virtual Phantom cores (§4.2 / DESIGN.md §9): output tile-columns are
+    # partitioned across `cores` per-core work queues at weight-load time —
+    # densest-first LPT when `balance` enables inter-core balancing, naive
+    # round-robin otherwise — and executed as a leading grid axis of one
+    # pallas_call (shardable over a device mesh).  cores=1 is the classic
+    # single-queue path, bit-identical to cores>1.
+    cores: int = 1
 
     def jnp_dtype(self):
         return jnp.dtype(self.dtype)

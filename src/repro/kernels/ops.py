@@ -26,9 +26,13 @@ from . import phantom_ffn, phantom_spmm
 from .ref import ref_activation_block_mask
 
 __all__ = [
+    "MulticoreSteps",
     "PhantomWeight",
     "prepare_weight",
     "append_empty_steps",
+    "build_multicore_queues",
+    "pack_multicore_blocks",
+    "stitch_core_outputs",
     "activation_tile_bits",
     "element_mask_tile_bits",
     "phantom_matmul",
@@ -41,9 +45,35 @@ def default_interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+class MulticoreSteps:
+    """Shared ``steps`` accounting for single- and multi-core artifacts
+    (:class:`PhantomWeight`, :class:`repro.kernels.phantom_conv.DirectConvPlan`).
+
+    For ``cores > 1`` the padding-column zero-writes (slots beyond Nt) are
+    excluded so ``steps`` stays comparable across core counts: MAC steps +
+    genuine §3.8 empty-output steps, exactly the ``cores == 1`` count.
+    """
+
+    @property
+    def steps(self) -> int:
+        if self.cores > 1:
+            pad = self.grid_tiles[0] * (self.cores * self.local_nt - self.grid_tiles[2])
+            return int(self.core_steps.sum()) - pad
+        return int(self.mi.shape[0])
+
+
 @dataclasses.dataclass
-class PhantomWeight:
-    """Weight-load-time artifact: packed payload + compacted queue."""
+class PhantomWeight(MulticoreSteps):
+    """Weight-load-time artifact: packed payload + compacted queue.
+
+    Single-core (``cores == 1``): the queue arrays are 1-D [Q] and ``ni``
+    is the global output tile-column.  Multi-core (DESIGN.md §9): they are
+    int32 [cores, Qpad] — one compacted queue per virtual core, padded to
+    the makespan — ``ni`` is the *core-local* column, ``col_perm`` (length
+    ``cores·local_nt``, −1 on padding slots) maps core-major local columns
+    back to global ones, and ``wq`` indexes the per-core payloads
+    concatenated along axis 0 of ``packed``.
+    """
 
     packed: jnp.ndarray  # [nnzb, bk, bn]
     mi: np.ndarray
@@ -58,10 +88,12 @@ class PhantomWeight:
     grid_tiles: tuple[int, int, int]
     shape: tuple[int, int]  # original (K, N)
     w_bmask: np.ndarray  # [Kt, Nt] (kept for tests / stats)
-
-    @property
-    def steps(self) -> int:
-        return int(self.mi.shape[0])
+    cores: int = 1
+    col_perm: np.ndarray | None = None  # int64 [cores·local_nt], −1 = pad slot
+    col_inv: np.ndarray | None = None  # int64 [Nt] inverse (stitch gather)
+    local_nt: int = 0  # per-core padded column-tile width (ceil(Nt / cores))
+    core_steps: np.ndarray | None = None  # int64 [cores] real steps per core
+    core_cost: np.ndarray | None = None  # int64 [cores] Σ column nnz blocks
 
     def density(self) -> float:
         return float(self.w_bmask.mean())
@@ -90,6 +122,195 @@ def append_empty_steps(queue: bs.WorkQueue):
     return mi, ni, ki, wq, start, last, valid
 
 
+def build_multicore_queues(
+    bmask: np.ndarray,
+    m_tiles: int,
+    cores: int,
+    balance: str,
+    *,
+    interleave: bool = True,
+    conv: dict | None = None,
+):
+    """Partition tile-columns onto cores and build per-core padded queues.
+
+    The two-level balancing of the paper, at weight-load time (§4.2, §4.3.1;
+    DESIGN.md §9): columns go to cores densest-first LPT
+    (:func:`repro.core.blocksparse.partition_columns` — naive round-robin
+    when ``balance`` disables inter-core balancing), each core's sub-mask is
+    compacted into its own queue exactly like the single-core TDS, and all
+    queues are padded to the makespan so one grid executes them in lock-step
+    slots.  Three step classes per core, distinguished by flags:
+
+    * real steps — the compacted effectual work (``valid = 1``);
+    * zero-write steps — §3.8 empty output tiles *plus* the core's padding
+      column slots beyond its bucket (``start = last = 1``, ``valid = 0``):
+      every local output tile is written exactly once;
+    * inert makespan-padding steps (``start = last = valid = 0``) — the tail
+      that brings a short queue up to the longest core's length.  Their
+      index fields repeat the core's *last* real step (flags zeroed), so the
+      revisited output block is the one just flushed: on compiled TPU the
+      end-of-window writeback then rewrites that block with the identical
+      VMEM contents instead of smearing a stale buffer over tile (0, 0).
+
+    ``conv={"kw": ..., "ct": ...}`` builds coordinate-carrying conv queues
+    (adds ``ky``/``kx``/``ci`` rows).  Returns ``(buckets, q2d, meta)``:
+    per-core column lists, ``{field: int32 [cores, Qpad]}``, and
+    ``{col_perm, local_nt, core_steps, core_cost}``.
+    """
+    bmask = np.asarray(bmask, dtype=bool)
+    kt, nt = bmask.shape
+    buckets = bs.partition_columns(bmask, cores, balance)
+    ntc = max(1, math.ceil(nt / cores))
+    dens = bmask.sum(axis=0)
+    per_core: list[dict] = []
+    for bucket in buckets:
+        sub = bmask[:, bucket] if len(bucket) else np.zeros((kt, 0), dtype=bool)
+        if conv is None:
+            q = bs.build_work_queue(sub, m_tiles, interleave=interleave)
+        else:
+            q = bs.build_conv_work_queue(
+                sub, m_tiles, kw=conv["kw"], ct=conv["ct"], interleave=interleave
+            )
+        mi, ni, ki, wq, start, last, valid = append_empty_steps(q)
+        fields = dict(mi=mi, ni=ni, ki=ki, wq=wq, start=start, last=last, valid=valid)
+        if conv is not None:
+            pad0 = np.zeros(len(mi) - q.steps, dtype=np.int32)
+            for name in ("ky", "kx", "ci"):
+                fields[name] = np.concatenate([getattr(q, name), pad0])
+        extra = ntc - len(bucket)
+        if extra:  # zero-write the padding column slots (dropped at stitch)
+            emi = np.repeat(np.arange(m_tiles, dtype=np.int32), extra)
+            eni = np.tile(np.arange(len(bucket), ntc, dtype=np.int32), m_tiles)
+            ez = np.zeros(extra * m_tiles, dtype=np.int32)
+            eo = np.ones(extra * m_tiles, dtype=np.int32)
+            pads = dict(mi=emi, ni=eni, start=eo, last=eo)
+            for name, arr in fields.items():
+                fields[name] = np.concatenate([arr, pads.get(name, ez)])
+        per_core.append(fields)
+    core_steps = np.asarray([len(f["mi"]) for f in per_core], dtype=np.int64)
+    qmax = int(core_steps.max())
+    flags = ("start", "last", "valid")  # tail: no zero / no MAC / no flush
+    q2d = {}
+    for name in per_core[0]:
+        rows = []
+        for f in per_core:
+            arr = f[name]
+            # Tail fill rule (load-bearing, see the tail-revisit test): flag
+            # fields pad with 0 so tail steps stay inert; index fields repeat
+            # the core's last step so revisits target the just-flushed block.
+            fill = 0 if name in flags else arr[-1]
+            rows.append(
+                np.concatenate([arr, np.full(qmax - len(arr), fill, np.int32)])
+            )
+        q2d[name] = np.stack(rows)
+    col_perm = np.full(cores * ntc, -1, dtype=np.int64)
+    for c, bucket in enumerate(buckets):
+        col_perm[c * ntc : c * ntc + len(bucket)] = bucket
+    live = col_perm >= 0
+    col_inv = np.zeros(nt, dtype=np.int64)
+    col_inv[col_perm[live]] = np.flatnonzero(live)
+    meta = dict(
+        col_perm=col_perm,
+        col_inv=col_inv,
+        local_nt=ntc,
+        core_steps=core_steps,
+        core_cost=np.asarray([int(dens[b].sum()) for b in buckets], dtype=np.int64),
+    )
+    return buckets, q2d, meta
+
+
+def pack_multicore_blocks(
+    w_padded: np.ndarray,  # [Kt·bk, Nt·bn] element weight, tile-padded
+    bmask: np.ndarray,  # [Kt, Nt]
+    buckets: list[np.ndarray],
+    block: tuple[int, int],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pack each core's kept tiles (its bucket's columns, in local
+    (ni-major, ki) order — matching its queue's ``wq`` ids) and concatenate
+    the payloads.  Returns ``(packed [nnzb, bk, bn], offsets [cores])`` —
+    add ``offsets[c]`` to core ``c``'s local ``wq``.  A core with no kept
+    tiles contributes the 1-block zero dummy ``pack_blocks`` emits (its
+    queue never MACs, so the dummy is only ever a dead prefetch)."""
+    bk, bn = block
+    kt = np.asarray(bmask).shape[0]
+    packs, offsets, off = [], [], 0
+    for bucket in buckets:
+        if len(bucket):
+            sub_w = np.concatenate(
+                [w_padded[:, c * bn : (c + 1) * bn] for c in bucket], axis=1
+            )
+            sub_mask = np.asarray(bmask)[:, bucket]
+        else:
+            sub_w = np.zeros((kt * bk, 0), dtype=w_padded.dtype)
+            sub_mask = np.zeros((kt, 0), dtype=bool)
+        p = bs.pack_blocks(sub_w, sub_mask, (bk, bn))
+        packs.append(p)
+        offsets.append(off)
+        off += p.shape[0]
+    return np.concatenate(packs, axis=0), np.asarray(offsets, dtype=np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def stitch_core_outputs(
+    y3: jnp.ndarray,  # [cores, Mpad, ntc·bn] per-core output slabs
+    col_inv: jnp.ndarray,  # int [Nt]: global column → core-major position
+    *,
+    bn: int,
+) -> jnp.ndarray:
+    """Invert the balancing permutation: core-major local column slabs →
+    the global ``[Mpad, Nt·bn]`` output (padding slots dropped).  ``col_inv``
+    is precomputed at weight-load time (:func:`build_multicore_queues`);
+    jitted so the transpose/gather compiles once per shape instead of
+    dispatching eagerly on the per-layer serving path."""
+    cores, mpad, _ = y3.shape
+    ntc = y3.shape[2] // bn
+    yp = (
+        y3.reshape(cores, mpad, ntc, bn)
+        .transpose(1, 0, 2, 3)
+        .reshape(mpad, cores * ntc, bn)
+    )
+    nt = col_inv.shape[0]
+    return yp[:, col_inv].reshape(mpad, nt * bn)
+
+
+def _prepare_weight_multicore(
+    w: np.ndarray,
+    bmask: np.ndarray,
+    *,
+    m_tiles: int,
+    cores: int,
+    balance: str,
+    block: tuple[int, int, int],
+    interleave: bool,
+    dtype,
+) -> PhantomWeight:
+    bm, bk, bn = block
+    kt, nt = bmask.shape
+    buckets, q2d, meta = build_multicore_queues(
+        bmask, m_tiles, cores, balance, interleave=interleave
+    )
+    wp = np.zeros((kt * bk, nt * bn), dtype=np.asarray(w).dtype)
+    wp[: w.shape[0], : w.shape[1]] = w
+    packed, offsets = pack_multicore_blocks(wp, bmask, buckets, (bk, bn))
+    return PhantomWeight(
+        packed=jnp.asarray(packed, dtype=dtype),
+        mi=q2d["mi"],
+        ni=q2d["ni"],
+        ki=q2d["ki"],
+        wq=q2d["wq"] + offsets[:, None],
+        start=q2d["start"],
+        last=q2d["last"],
+        valid=q2d["valid"],
+        flat_ak=q2d["mi"] * kt + q2d["ki"],
+        block=block,
+        grid_tiles=(m_tiles, kt, nt),
+        shape=w.shape,
+        w_bmask=bmask,
+        cores=cores,
+        **meta,
+    )
+
+
 def prepare_weight(
     w: np.ndarray,
     *,
@@ -97,21 +318,44 @@ def prepare_weight(
     block: tuple[int, int, int] = (256, 256, 256),
     interleave: bool = True,
     dtype=jnp.float32,
+    cores: int = 1,
+    balance: str = "full",
     config=None,
 ) -> PhantomWeight:
     """Pack a (pruned) dense weight [K, N] for activations with ``m`` rows.
 
+    ``cores > 1`` partitions the output tile-columns across that many
+    virtual Phantom cores (densest-first LPT when ``balance`` enables
+    inter-core balancing, naive round-robin otherwise — DESIGN.md §9) and
+    the runtime executes all cores in one ``pallas_call`` with a leading
+    cores grid axis.  ``balance`` also gates the intra-core-style queue
+    rotation: ``interleave`` is honored only for ``{"intra", "full"}``.
+
     ``config`` (a :class:`repro.core.phantom_linear.PhantomConfig`) is the
-    preferred knob surface and overrides ``block``/``interleave``/``dtype``
-    — the program API (DESIGN.md §8) passes it through unchanged.
+    preferred knob surface and overrides
+    ``block``/``interleave``/``dtype``/``cores``/``balance`` — the program
+    API (DESIGN.md §8) passes it through unchanged.
     """
     if config is not None:
         block, interleave, dtype = config.block, config.interleave, config.jnp_dtype()
+        cores, balance = config.cores, config.balance
+    interleave = interleave and bs.balance_interleaves(balance)
     w = np.asarray(w)
     k, n = w.shape
     bm, bk, bn = block
     mt = math.ceil(m / bm)
     bmask = bs.block_mask_from_dense(w, (bk, bn)).mask
+    if cores > 1:
+        return _prepare_weight_multicore(
+            w,
+            bmask,
+            m_tiles=mt,
+            cores=cores,
+            balance=balance,
+            block=block,
+            interleave=interleave,
+            dtype=dtype,
+        )
     queue = bs.build_work_queue(bmask, mt, interleave=interleave)
     packed = jnp.asarray(bs.pack_blocks(w, bmask, (bk, bn)), dtype=dtype)
     kt = bmask.shape[0]
@@ -180,6 +424,42 @@ def _run(call, x, pw: PhantomWeight, act_bits, interpret, **kw):
     )
 
 
+def _run_multicore(
+    x2: jnp.ndarray,
+    pw: PhantomWeight,
+    act_bits: jnp.ndarray,
+    interpret: bool,
+    out_dtype,
+    activation: str = "none",
+) -> jnp.ndarray:
+    """Execute a multi-core artifact: per-core queues through the leading
+    cores grid axis (mapped onto a device mesh when one is available —
+    :func:`repro.parallel.sharding.cores_mesh`), then stitch the per-core
+    output slabs back through the inverse column permutation.  Returns the
+    padded ``[Mt·bm, Nt·bn]`` output — numerics are bit-identical to the
+    single-core path (per-tile accumulation order is unchanged by the
+    partition)."""
+    from repro.parallel import sharding  # local: keep kernels importable alone
+
+    bm, bk, bn = pw.block
+    xp = _pad2(x2, bm, bk)
+    abit = act_bits.reshape(-1)[jnp.asarray(pw.flat_ak)] * jnp.asarray(pw.valid)
+    mt, kt, _nt = pw.grid_tiles
+    call = functools.partial(
+        phantom_spmm.phantom_spmm_multicore_call,
+        block=pw.block,
+        grid_tiles=(mt, kt, pw.local_nt),
+        activation=activation,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )
+    queues = tuple(
+        jnp.asarray(a) for a in (pw.mi, pw.ni, pw.ki, pw.wq, pw.start, pw.last)
+    ) + (abit.astype(jnp.int32),)
+    y3 = sharding.run_cores_call(call, (xp, pw.packed), queues, pw.cores)
+    return stitch_core_outputs(y3, jnp.asarray(pw.col_inv), bn=bn)
+
+
 def phantom_matmul(
     x: jnp.ndarray,
     pw: PhantomWeight,
@@ -207,14 +487,17 @@ def phantom_matmul(
         if act_bits is None
         else act_bits.astype(jnp.int32)
     )
-    y = _run(
-        phantom_spmm.phantom_spmm_call,
-        x2,
-        pw,
-        bits,
-        interpret,
-        out_dtype=out_dtype or x.dtype,
-    )
+    if pw.cores > 1:
+        y = _run_multicore(x2, pw, bits, interpret, out_dtype or x.dtype)
+    else:
+        y = _run(
+            phantom_spmm.phantom_spmm_call,
+            x2,
+            pw,
+            bits,
+            interpret,
+            out_dtype=out_dtype or x.dtype,
+        )
     return y[: x2.shape[0], :n].reshape(*lead, n)
 
 
@@ -245,6 +528,21 @@ def phantom_linear_act(
         if act_bits is None
         else act_bits.astype(jnp.int32)
     )
+    if pw.cores > 1:
+        # Multi-core: the activation fuses into the flush step of the
+        # multicore kernel (same fp32-accumulator application point as the
+        # fused single-core kernel); the §3.8 tile encoding runs as an XLA
+        # reduction over the stitched output instead of in-kernel — on the
+        # *fp32* activation, pre-cast, matching the in-kernel encoding (a
+        # post-cast mask could disagree for narrow out_dtypes near τ).
+        y32 = _run_multicore(
+            x2, pw, bits, interpret, jnp.float32, activation=activation
+        )
+        ymask = ref_activation_block_mask(
+            y32, (bm, pw.block[2]), mask_threshold
+        ).astype(jnp.int32)
+        y = y32.astype(out_dtype or x.dtype)
+        return y[: x2.shape[0], :n].reshape(*lead, n), ymask
     y, ymask = _run(
         phantom_ffn.phantom_linear_act_call,
         x2,

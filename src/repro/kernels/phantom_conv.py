@@ -46,6 +46,7 @@ linear+activation+output-encoding kernel for bias-free epilogues).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax.numpy as jnp
@@ -143,7 +144,7 @@ def grouped_weight_matrix(w: np.ndarray, groups: int) -> np.ndarray:
 
 
 @dataclasses.dataclass
-class DirectConvPlan:
+class DirectConvPlan(ops.MulticoreSteps):
     """Direct-mode weight-load artifact: tap-aligned packed payload plus the
     coordinate-carrying work queue, fully lowered to the per-step source
     offsets the kernel's unblocked index maps consume (DESIGN.md §3).
@@ -151,6 +152,12 @@ class DirectConvPlan:
     K is tiled per filter tap — flat k-tile ``(ky·kw + kx)·ct + ci`` — so a
     k-tile never straddles a (ky, kx) boundary and its activation source is a
     contiguous ``[ow, bk]`` window of the phase-decomposed padded input.
+
+    Multi-core (``cores > 1``, DESIGN.md §9): queue/offset arrays are int32
+    [cores, Qpad] — one makespan-padded queue per virtual core — ``ni`` is
+    core-local and ``col_perm`` maps core-major local columns back to global
+    output tile-columns, exactly as in
+    :class:`repro.kernels.ops.PhantomWeight`.
     """
 
     packed: jnp.ndarray  # [nnzb, bk, bn] tap-aligned payload
@@ -173,10 +180,12 @@ class DirectConvPlan:
     grid_tiles: tuple[int, int, int]  # (Mt = B·oh, Kt = kh·kw·ct, Nt)
     phase_shape: tuple[int, int, int, int, int]  # (PH, B, Hq, Wq, Cp)
     w_bmask: np.ndarray  # [Kt, Nt] tap-aligned weight tile mask
-
-    @property
-    def steps(self) -> int:
-        return int(self.mi.shape[0])
+    cores: int = 1
+    col_perm: np.ndarray | None = None  # int64 [cores·local_nt], −1 = pad slot
+    col_inv: np.ndarray | None = None  # int64 [Nt] inverse (stitch gather)
+    local_nt: int = 0  # per-core padded column-tile width
+    core_steps: np.ndarray | None = None  # int64 [cores] real steps per core
+    core_cost: np.ndarray | None = None  # int64 [cores] Σ column nnz blocks
 
 
 @dataclasses.dataclass
@@ -227,10 +236,14 @@ def _prepare_direct(
     block: tuple[int, int, int],
     interleave: bool,
     dtype,
+    cores: int = 1,
+    balance: str = "full",
 ) -> DirectConvPlan:
     """Build the implicit-gather plan: tap-align the weight, compact it into
     a coordinate-carrying queue, and lower every step to its element offsets
-    in the phase-decomposed padded activation."""
+    in the phase-decomposed padded activation.  ``cores > 1`` partitions the
+    output tile-columns across virtual cores (DESIGN.md §9) — per-core
+    makespan-padded queues, one leading cores grid axis at runtime."""
     _bm, bk, bn = block
     cout = w2d.shape[1]
     sh, sw = stride
@@ -243,6 +256,41 @@ def _prepare_direct(
     wpad = w3.reshape(kh * kw * cp, cout)
     bmask = bs.block_mask_from_dense(wpad, (bk, bn)).mask  # [kh·kw·ct, Nt]
     mt = batch * oh
+    kt, nt = bmask.shape
+    geom = dict(
+        block=(bk, bn),
+        ct=ct,
+        grid_tiles=(mt, kt, nt),
+        phase_shape=(sh * sw, batch, oh + (kh - 1) // sh, ow + (kw - 1) // sw, cp),
+        w_bmask=bmask,
+    )
+    if cores > 1:
+        buckets, q, meta = ops.build_multicore_queues(
+            bmask, mt, cores, balance, interleave=interleave,
+            conv={"kw": kw, "ct": ct},
+        )
+        wpe = np.zeros((kt * bk, nt * bn), dtype=wpad.dtype)
+        wpe[: wpad.shape[0], :cout] = wpad
+        packed, offsets = ops.pack_multicore_blocks(wpe, bmask, buckets, (bk, bn))
+        mi, ky, kx, ci = q["mi"], q["ky"], q["kx"], q["ci"]
+        return DirectConvPlan(
+            packed=jnp.asarray(packed, dtype=dtype),
+            ph=((ky % sh) * sw + kx % sw).astype(np.int32),
+            nb=(mi // oh).astype(np.int32),
+            r0=(mi % oh + ky // sh).astype(np.int32),
+            c0=(kx // sw).astype(np.int32),
+            ch0=(ci * bk).astype(np.int32),
+            mi=mi,
+            ni=q["ni"],
+            wq=q["wq"] + offsets[:, None],
+            start=q["start"],
+            last=q["last"],
+            valid=q["valid"],
+            flat_ak=mi * kt + q["ki"],
+            cores=cores,
+            **geom,
+            **meta,
+        )
     queue = bs.build_conv_work_queue(bmask, mt, kw=kw, ct=ct, interleave=interleave)
     packed = jnp.asarray(bs.pack_blocks(wpad, bmask, (bk, bn)), dtype=dtype)
     mi, ni, ki, wq, start, last, valid = ops.append_empty_steps(queue)
@@ -250,7 +298,6 @@ def _prepare_direct(
     ky = np.concatenate([queue.ky, pad0])  # empty steps read (in-bounds) 0s
     kx = np.concatenate([queue.kx, pad0])
     ci = np.concatenate([queue.ci, pad0])
-    kt = bmask.shape[0]
     return DirectConvPlan(
         packed=packed,
         ph=((ky % sh) * sw + kx % sw).astype(np.int32),
@@ -265,11 +312,7 @@ def _prepare_direct(
         last=last,
         valid=valid,
         flat_ak=mi * kt + ki,
-        block=(bk, bn),
-        ct=ct,
-        grid_tiles=(mt, kt, bmask.shape[1]),
-        phase_shape=(sh * sw, batch, oh + (kh - 1) // sh, ow + (kw - 1) // sw, cp),
-        w_bmask=bmask,
+        **geom,
     )
 
 
@@ -285,6 +328,8 @@ def prepare_conv_weight(
     interleave: bool = True,
     mode: str = "direct",
     dtype=jnp.float32,
+    cores: int = 1,
+    balance: str = "full",
     config=None,
 ) -> PhantomConvWeight:
     """Lower a (pruned) conv weight to a Phantom core artifact.
@@ -293,18 +338,23 @@ def prepare_conv_weight(
     matrix is never materialised at runtime; ``mode="im2col"`` builds the
     explicit spmm artifact over the ``batch · oh · ow``-row patch matrix.
     Either way, zero weight tiles (pruned blocks *and* the structural zeros
-    of grouped convs) never enter the work queue.
+    of grouped convs) never enter the work queue.  ``cores > 1`` partitions
+    the output tile-columns (= filter blocks) across virtual Phantom cores,
+    balanced per the ``balance`` policy (DESIGN.md §9) — both lowerings run
+    all cores in one ``pallas_call`` with a leading cores grid axis.
 
     ``config`` (a :class:`repro.core.phantom_linear.PhantomConfig`) is the
     preferred knob surface and overrides
-    ``block``/``interleave``/``mode``/``dtype`` — the program API
-    (DESIGN.md §8) passes it through unchanged.
+    ``block``/``interleave``/``mode``/``dtype``/``cores``/``balance`` — the
+    program API (DESIGN.md §8) passes it through unchanged.
     """
     if config is not None:
         block, interleave = config.block, config.interleave
         mode, dtype = config.conv_mode, config.jnp_dtype()
+        cores, balance = config.cores, config.balance
     if mode not in ("direct", "im2col"):
         raise ValueError(f"mode must be 'direct' or 'im2col', got {mode!r}")
+    interleave = interleave and bs.balance_interleaves(balance)
     w = np.asarray(w)
     kh, kw, cpg, cout = w.shape
     cin = cpg * groups
@@ -314,7 +364,8 @@ def prepare_conv_weight(
     pw = plan = None
     if mode == "im2col":
         pw = ops.prepare_weight(
-            w2d, m=batch * oh * ow, block=block, interleave=interleave, dtype=dtype
+            w2d, m=batch * oh * ow, block=block, interleave=interleave,
+            dtype=dtype, cores=cores, balance=balance,
         )
     else:
         plan = _prepare_direct(
@@ -329,6 +380,8 @@ def prepare_conv_weight(
             block=block,
             interleave=interleave,
             dtype=dtype,
+            cores=cores,
+            balance=balance,
         )
     return PhantomConvWeight(
         pw=pw,
@@ -446,6 +499,31 @@ def _direct_call(
     )
     abit = bits.reshape(-1)[jnp.asarray(plan.flat_ak)] * jnp.asarray(plan.valid)
     oh, ow = pcw.out_hw
+    if plan.cores > 1:
+        from repro.parallel import sharding  # local: keep kernels standalone
+
+        mt, kt, _nt = plan.grid_tiles
+        call = functools.partial(
+            phantom_conv_direct.phantom_conv_direct_multicore_call,
+            ow=ow,
+            block=plan.block,
+            grid_tiles=(mt, kt, plan.local_nt),
+            activation=activation,
+            out_dtype=out_dtype or x.dtype,
+            interpret=interpret,
+        )
+        queues = tuple(
+            jnp.asarray(a)
+            for a in (
+                plan.ph, plan.nb, plan.r0, plan.c0, plan.ch0,
+                plan.mi, plan.ni, plan.wq, plan.start, plan.last,
+            )
+        ) + (abit.astype(jnp.int32),)
+        y3 = sharding.run_cores_call(call, (xph, plan.packed), queues, plan.cores)
+        y2 = ops.stitch_core_outputs(
+            y3, jnp.asarray(plan.col_inv), bn=plan.block[1]
+        )
+        return y2[:, : pcw.out_ch].reshape(pcw.batch, oh, ow, pcw.out_ch)
     y2 = phantom_conv_direct.phantom_conv_direct_call(
         xph,
         plan.packed,

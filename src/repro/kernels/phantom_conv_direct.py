@@ -47,7 +47,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .ref import ACTIVATIONS
 
-__all__ = ["phantom_conv_direct_kernel", "phantom_conv_direct_call"]
+__all__ = [
+    "phantom_conv_direct_kernel",
+    "phantom_conv_direct_call",
+    "phantom_conv_direct_multicore_kernel",
+    "phantom_conv_direct_multicore_call",
+]
 
 
 def phantom_conv_direct_kernel(
@@ -156,5 +161,130 @@ def phantom_conv_direct_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mt * ow, nt * bn), out_dtype),
+        interpret=interpret,
+    )(ph, nb, r0, c0, ch0, mi, ni, wq, start, last, abit, xph, w_packed)
+
+
+def phantom_conv_direct_multicore_kernel(
+    # --- scalar prefetch (SMEM), all int32 [cores, Qpad] ---
+    ph_ref,
+    nb_ref,
+    r0_ref,
+    c0_ref,
+    ch0_ref,
+    mi_ref,
+    ni_ref,
+    wq_ref,
+    start_ref,
+    last_ref,
+    abit_ref,
+    # --- VMEM operands ---
+    x_ref,  # (1, 1, 1, ow, bk) activation window
+    w_ref,  # (1, bk, bn) packed weight tile
+    o_ref,  # (1, ow, bn) slab of the [cores, M, ntc*bn] output
+    # --- scratch ---
+    acc_ref,
+    *,
+    activation: str,
+):
+    c, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(start_ref[c, i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(abit_ref[c, i] == 1)
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            x_ref[0, 0, 0], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(last_ref[c, i] == 1)
+    def _flush():
+        o_ref[0] = ACTIVATIONS[activation](acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "ow",
+        "block",
+        "grid_tiles",
+        "activation",
+        "out_dtype",
+        "interpret",
+    ),
+)
+def phantom_conv_direct_multicore_call(
+    xph: jnp.ndarray,  # [PH, B, Hq, Wq, Cp] (shared by all cores)
+    w_packed: jnp.ndarray,  # [nnzb, bk, bn] per-core payloads concatenated
+    ph: jnp.ndarray,  # int32 [cores, Qpad] per-step source offsets
+    nb: jnp.ndarray,
+    r0: jnp.ndarray,
+    c0: jnp.ndarray,
+    ch0: jnp.ndarray,
+    mi: jnp.ndarray,  # int32 [cores, Qpad] per-core queues, makespan-padded
+    ni: jnp.ndarray,  # (ni is the core-local output column)
+    wq: jnp.ndarray,
+    start: jnp.ndarray,
+    last: jnp.ndarray,
+    abit: jnp.ndarray,
+    *,
+    ow: int,
+    block: tuple[int, int],  # (bk, bn)
+    grid_tiles: tuple[int, int, int],  # (Mt = B·oh, Kt, ntc) — ntc PER-CORE
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Direct-conv counterpart of
+    :func:`repro.kernels.phantom_spmm.phantom_spmm_multicore_call`: the
+    leading grid axis walks the virtual cores, each consuming its own
+    makespan-padded coordinate-carrying queue and writing its own
+    ``[B·oh·ow, ntc·bn]`` output slab (DESIGN.md §9)."""
+    bk, bn = block
+    mt, _kt, ntc = grid_tiles
+    cores, q = mi.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=11,
+        grid=(cores, q),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, 1, ow, bk),
+                lambda c, i, ph, nb, r0, c0, ch0, mi, ni, wq, st, la, ab: (
+                    ph[c, i],
+                    nb[c, i],
+                    r0[c, i],
+                    c0[c, i],
+                    ch0[c, i],
+                ),
+                indexing_mode=pl.Unblocked(),
+            ),
+            pl.BlockSpec(
+                (1, bk, bn),
+                lambda c, i, ph, nb, r0, c0, ch0, mi, ni, wq, st, la, ab: (
+                    wq[c, i],
+                    0,
+                    0,
+                ),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, ow, bn),
+            lambda c, i, ph, nb, r0, c0, ch0, mi, ni, wq, st, la, ab: (
+                c,
+                mi[c, i],
+                ni[c, i],
+            ),
+        ),
+        scratch_shapes=[pltpu.VMEM((ow, bn), jnp.float32)],
+    )
+    kernel = functools.partial(
+        phantom_conv_direct_multicore_kernel, activation=activation
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cores, mt * ow, ntc * bn), out_dtype),
         interpret=interpret,
     )(ph, nb, r0, c0, ch0, mi, ni, wq, start, last, abit, xph, w_packed)

@@ -41,7 +41,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["phantom_spmm_kernel", "phantom_spmm_call"]
+from .ref import ACTIVATIONS
+
+__all__ = [
+    "phantom_spmm_kernel",
+    "phantom_spmm_call",
+    "phantom_spmm_multicore_kernel",
+    "phantom_spmm_multicore_call",
+]
 
 
 def phantom_spmm_kernel(
@@ -116,5 +123,101 @@ def phantom_spmm_call(
         phantom_spmm_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mt * bm, nt * bn), out_dtype),
+        interpret=interpret,
+    )(mi, ni, ki, wq, start, last, abit, x, w_packed)
+
+
+def phantom_spmm_multicore_kernel(
+    # --- scalar prefetch (SMEM), all int32 [cores, Qpad] ---
+    mi_ref,
+    ni_ref,
+    ki_ref,
+    wq_ref,
+    start_ref,
+    last_ref,
+    abit_ref,
+    # --- VMEM operands ---
+    x_ref,
+    w_ref,
+    o_ref,  # (1, bm, bn) slab of the [cores, M, ntc*bn] output
+    # --- scratch ---
+    acc_ref,
+    *,
+    activation: str,
+):
+    c, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(start_ref[c, i] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(abit_ref[c, i] == 1)
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[0], preferred_element_type=jnp.float32
+        )
+
+    @pl.when(last_ref[c, i] == 1)
+    def _flush():
+        o_ref[0] = ACTIVATIONS[activation](acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block", "grid_tiles", "activation", "out_dtype", "interpret"),
+)
+def phantom_spmm_multicore_call(
+    x: jnp.ndarray,  # [M, K] (padded to tile multiples; shared by all cores)
+    w_packed: jnp.ndarray,  # [nnzb, bk, bn] per-core payloads concatenated
+    mi: jnp.ndarray,  # int32 [cores, Qpad] per-core queues, makespan-padded
+    ni: jnp.ndarray,  # (ni is the core-local output column)
+    ki: jnp.ndarray,
+    wq: jnp.ndarray,
+    start: jnp.ndarray,
+    last: jnp.ndarray,
+    abit: jnp.ndarray,
+    *,
+    block: tuple[int, int, int],
+    grid_tiles: tuple[int, int, int],  # (Mt, Kt, ntc) — ntc is PER-CORE width
+    activation: str = "none",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Multi-core Phantom-2D execution (DESIGN.md §9): one ``pallas_call``
+    whose leading grid axis walks the virtual cores.
+
+    Each core consumes its own compacted, makespan-padded work queue (the
+    2-D scalar-prefetch arrays) and writes its own ``[M, ntc·bn]`` output
+    slab — cores never touch each other's columns, so on a multi-device
+    backend the leading axis shard_maps onto a device mesh unchanged
+    (:func:`repro.parallel.sharding.shard_cores_call`); on one device it is
+    a sequential grid dimension with identical numerics.  The host stitches
+    slabs back through the inverse column permutation
+    (:func:`repro.kernels.ops.stitch_core_outputs`).
+    """
+    bm, bk, bn = block
+    mt, _kt, ntc = grid_tiles
+    cores, q = mi.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=7,
+        grid=(cores, q),
+        in_specs=[
+            pl.BlockSpec(
+                (bm, bk), lambda c, i, mi, ni, ki, wq, st, la, ab: (mi[c, i], ki[c, i])
+            ),
+            pl.BlockSpec(
+                (1, bk, bn), lambda c, i, mi, ni, ki, wq, st, la, ab: (wq[c, i], 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bm, bn), lambda c, i, mi, ni, ki, wq, st, la, ab: (c, mi[c, i], ni[c, i])
+        ),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(phantom_spmm_multicore_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cores, mt * bm, ntc * bn), out_dtype),
         interpret=interpret,
     )(mi, ni, ki, wq, start, last, abit, x, w_packed)

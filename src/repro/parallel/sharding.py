@@ -17,6 +17,7 @@ use TP on its own.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Optional
 
@@ -33,6 +34,9 @@ __all__ = [
     "cache_pspecs",
     "resolve_tensor",
     "compat_make_mesh",
+    "cores_mesh",
+    "shard_cores_call",
+    "run_cores_call",
 ]
 
 
@@ -44,6 +48,58 @@ def compat_make_mesh(shape, axes, *, devices=None):
     if hasattr(jax.sharding, "AxisType"):
         kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axes)
     return jax.make_mesh(shape, axes, **kw)
+
+
+# -- Phantom multi-core → device mesh (DESIGN.md §9) -------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def cores_mesh(cores: int) -> Optional[Mesh]:
+    """A 1-axis ``('cores',)`` device mesh for a ``cores``-way Phantom
+    artifact, or ``None`` when the cores axis should stay a sequential grid
+    dimension (single device, or the device count does not divide the core
+    count — per-core queues are identical either way, so the numerics do not
+    depend on which path runs).  Cached per core count: the device set is
+    fixed for the process and this sits on the per-layer serving hot path."""
+    devs = jax.devices()
+    if len(devs) > 1 and cores % len(devs) == 0:
+        return compat_make_mesh((len(devs),), ("cores",))
+    return None
+
+
+def shard_cores_call(mesh: Mesh, call, replicated: tuple, per_core: tuple):
+    """Map the leading cores axis of a multi-core Phantom kernel call onto
+    ``mesh``'s ``'cores'`` device axis via ``shard_map``.
+
+    ``replicated`` (the shared activation + the packed weight payload) goes
+    to every device; each ``per_core`` array (the [cores, Qpad] queues) is
+    split on its leading axis, so a device runs the same ``pallas_call`` on
+    its ``cores / n_devices`` local queues and the outputs' leading cores
+    axis concatenates back.  Replicating the payload trades HBM for
+    simplicity — per-core payload slabs are a follow-up optimisation noted
+    in DESIGN.md §9.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    f = shard_map(
+        lambda *args: call(*args),
+        mesh=mesh,
+        in_specs=(P(),) * len(replicated) + (P("cores"),) * len(per_core),
+        out_specs=P("cores"),
+        check_rep=False,
+    )
+    return f(*replicated, *per_core)
+
+
+def run_cores_call(call, replicated: tuple, per_core: tuple, cores: int):
+    """Dispatch one multi-core kernel invocation: over the ``('cores',)``
+    device mesh when one is available, else as a single sequential-grid
+    ``pallas_call`` — the shared entry point of the spmm and direct-conv
+    multi-core runtimes."""
+    mesh = cores_mesh(cores)
+    if mesh is None:
+        return call(*replicated, *per_core)
+    return shard_cores_call(mesh, call, replicated, per_core)
 
 # logical axis → priority list of mesh axes (first fit wins)
 PARAM_RULES: dict = {

@@ -40,6 +40,7 @@ __all__ = [
     "ConvKind",
     "FCKind",
     "GLUE",
+    "multicore_stats",
 ]
 
 
@@ -76,6 +77,31 @@ def _glue_gap(x, mask, tau):
 
 
 GLUE = {"maxpool2": _glue_maxpool2, "flatten": _glue_flatten, "gap": _glue_gap}
+
+
+def multicore_stats(art) -> dict:
+    """Per-core scheduling stats for a multi-core artifact (DESIGN.md §9).
+
+    ``per_core_work`` is each core's MAC-step count (m-tiles × the Σ of its
+    columns' weight-mask popcounts) — the engine-side counterpart of
+    :func:`repro.core.balance.inter_core_schedule` finish times on the same
+    per-column costs (asserted equal in the multi-core test grid);
+    ``makespan`` is the padded per-core queue length the grid actually
+    executes (MAC steps + §3.8 zero-writes + column-slot padding);
+    ``imbalance`` is max/mean of per-core work, the §4.2 metric.
+    """
+    if getattr(art, "cores", 1) <= 1:
+        return {}
+    mt = art.grid_tiles[0]
+    work = np.asarray(art.core_cost, dtype=np.int64) * mt
+    mean = float(work.mean())
+    return {
+        "cores": art.cores,
+        "per_core_steps": [int(s) for s in art.core_steps],
+        "per_core_work": [int(w) for w in work],
+        "makespan": int(art.core_steps.max()),
+        "imbalance": float(work.max() / mean) if mean > 0 else 1.0,
+    }
 
 
 # -- built-in kinds ----------------------------------------------------------
@@ -127,6 +153,7 @@ class ConvKind:
             # a runtime subtraction on top.
             "valid_macs": batch * oh * ow * w_nnz,
             "dense_macs": batch * spec.macs,
+            **multicore_stats(art),
         }
 
 
@@ -163,6 +190,7 @@ class FCKind:
             "density": plan.density(),
             "valid_macs": batch * w_nnz,
             "dense_macs": batch * spec.macs,
+            **multicore_stats(plan),
         }
 
 

@@ -21,6 +21,8 @@ the forward is the generic walk in :mod:`repro.program.plans`.
 from __future__ import annotations
 
 import dataclasses
+import types
+import typing
 import warnings
 
 import jax.numpy as jnp
@@ -192,9 +194,30 @@ class PhantomProgram:
         return prog
 
 
+def _wants_tuple(hint) -> bool:
+    """True when a spec field annotated ``hint`` stores a tuple (including
+    ``Optional[tuple]``/union members) — only those JSON lists are converted
+    back, so genuinely list-typed fields round-trip with equal types."""
+    if hint is tuple or typing.get_origin(hint) is tuple:
+        return True
+    if typing.get_origin(hint) in (typing.Union, types.UnionType):
+        return any(_wants_tuple(a) for a in typing.get_args(hint))
+    return False
+
+
 def _build_spec(cls, fields: dict):
+    """Rebuild a layer spec from its JSON fields, restoring container types
+    from the dataclass annotations (JSON turns every tuple into a list; a
+    blanket list→tuple conversion would corrupt list-typed fields).  Specs
+    whose annotations cannot be resolved at runtime (TYPE_CHECKING-only or
+    function-local names under PEP 563) fall back to the blanket coercion —
+    load must not crash on a spec that saved fine."""
+    try:
+        hints = typing.get_type_hints(cls)
+    except Exception:
+        hints = {}
     kw = {
-        k: tuple(v) if isinstance(v, list) else v
+        k: tuple(v) if isinstance(v, list) and _wants_tuple(hints.get(k, tuple)) else v
         for k, v in fields.items()
     }
     return cls(**kw)

@@ -79,11 +79,13 @@ class CnnServeEngine:
                 "CnnServeEngine(params, layers, ...)",
                 "CnnServeEngine(program=phantom.compile(...), batch_size=...)",
             )
+            # Explicit None checks: falsy-but-meaningful values (0.0, "", ())
+            # must reach the config instead of collapsing to the defaults.
             cfg = PhantomConfig(
                 enabled=True,
-                block=tuple(block or (128, 128, 128)),
-                conv_mode=conv_mode or "direct",
-                act_threshold=act_threshold or 0.0,
+                block=tuple((128, 128, 128) if block is None else block),
+                conv_mode="direct" if conv_mode is None else conv_mode,
+                act_threshold=0.0 if act_threshold is None else act_threshold,
             )
             program = program_mod.compile(layers, params, cfg, batch=batch_size)
         elif params is not None or layers is not None:
@@ -178,11 +180,14 @@ def serve_cnn(
     batch_size: int = 4,
     block: tuple[int, int, int] | None = None,
     conv_mode: str | None = None,
+    act_threshold: float | None = None,
     interpret: bool | None = None,
 ) -> np.ndarray:
     """One-shot batched inference: ``[N, H, W, C]`` images → ``[N, classes]``
     logits through one fixed-shape compiled program (requests beyond
-    ``batch_size`` reuse the jit cache — no recompilation).  Prefer
+    ``batch_size`` reuse the jit cache — no recompilation).
+    ``act_threshold`` is the runtime τ of §3.8 (``None`` ⇒ the program
+    config's τ) — the same knob :class:`CnnServeEngine` accepts.  Prefer
     ``serve_cnn(images=imgs, program=prog)``; the loose
     ``(params, layers)`` form compiles a program on the spot."""
     if images is None:
@@ -195,7 +200,12 @@ def serve_cnn(
                 "block/conv_mode are compile-time knobs: set them on the "
                 "program's PhantomConfig, not on serve_cnn"
             )
-        eng = CnnServeEngine(program=program, batch_size=batch_size, interpret=interpret)
+        eng = CnnServeEngine(
+            program=program,
+            batch_size=batch_size,
+            act_threshold=act_threshold,
+            interpret=interpret,
+        )
     else:
         program_mod.warn_deprecated(
             "serve_cnn(params, layers, images)",
@@ -203,12 +213,14 @@ def serve_cnn(
         )
         cfg = PhantomConfig(
             enabled=True,
-            block=tuple(block or (128, 128, 128)),
-            conv_mode=conv_mode or "direct",
+            block=tuple((128, 128, 128) if block is None else block),
+            conv_mode="direct" if conv_mode is None else conv_mode,
+            act_threshold=0.0 if act_threshold is None else act_threshold,
         )
         eng = CnnServeEngine(
             program=program_mod.compile(layers, params, cfg, batch=batch_size),
             batch_size=batch_size,
+            act_threshold=act_threshold,
             interpret=interpret,
         )
     reqs = [eng.submit(im) for im in images]

@@ -66,3 +66,64 @@ def test_serve_rejects_wrong_shape():
     eng = CnnServeEngine(params, layers, batch_size=1, block=BLK, interpret=True)
     with pytest.raises(ValueError):
         eng.submit(np.zeros((4, 4, 3), np.float32))
+
+
+def _tau_sensitive_net(rng):
+    """Conv→GAP-FC net whose pooled activations land in (0, τ]: with τ
+    applied the FC consumer sees a fully-gated input and its logits collapse
+    to the bias exactly (the test_program GAP-τ construction)."""
+    import phantom
+    from repro.core.dataflow import ConvSpec, FCSpec
+
+    layers = [ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)), FCSpec("fc", 16, 10, pool="gap")]
+    params = {}
+    for l in layers:
+        shp = (3, 3, 3, 16) if l.name == "c1" else (16, 10)
+        w = rng.standard_normal(shp).astype(np.float32) * (1e-3 if l.name == "c1" else 0.1)
+        params[l.name] = {
+            "w": jnp.asarray(w),
+            "b": jnp.asarray(
+                np.zeros(shp[-1], np.float32)
+                if l.name == "c1"
+                else rng.standard_normal(shp[-1]).astype(np.float32) * 0.1
+            ),
+        }
+    return phantom, layers, params
+
+
+def test_serve_cnn_threads_act_threshold():
+    """Regression (the one-shot API silently dropped τ): ``serve_cnn``
+    passes ``act_threshold`` through to the engine — at τ>0 the
+    τ-sensitive net's logits collapse to the FC bias, and genuinely differ
+    from the τ=0 serve."""
+    rng = np.random.default_rng(41)
+    phantom, layers, params = _tau_sensitive_net(rng)
+    tau = 0.05
+    imgs = np.abs(rng.standard_normal((2, 8, 8, 3))).astype(np.float32)
+    prog = phantom.compile(
+        layers, params, phantom.PhantomConfig(enabled=True, block=BLK), batch=2
+    )
+    got = serve_cnn(images=imgs, program=prog, batch_size=2,
+                    act_threshold=tau, interpret=True)
+    np.testing.assert_array_equal(
+        got, np.tile(np.asarray(params["fc"]["b"]), (2, 1))
+    )
+    exact = serve_cnn(images=imgs, program=prog, batch_size=2, interpret=True)
+    assert np.abs(exact - got).max() > 0  # τ is genuinely lossy here
+
+
+def test_legacy_engine_explicit_falsy_knobs():
+    """Regression (``conv_mode or "direct"`` / ``act_threshold or 0.0``):
+    falsy-but-explicit legacy knobs no longer collapse to the defaults — an
+    empty conv_mode is rejected instead of silently running direct, and an
+    explicit τ reaches the compiled config."""
+    rng = np.random.default_rng(43)
+    layers, params = _toy_net(rng)
+    with pytest.raises(ValueError, match="direct|im2col"):
+        CnnServeEngine(
+            params, layers, batch_size=1, block=BLK, conv_mode="", interpret=True
+        )
+    eng = CnnServeEngine(
+        params, layers, batch_size=1, block=BLK, act_threshold=0.25, interpret=True
+    )
+    assert eng.program.cfg.act_threshold == 0.25

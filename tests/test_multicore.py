@@ -1,0 +1,363 @@
+"""Multi-core (Phantom-2D) execution: partitioned per-core queues through the
+real kernel path (DESIGN.md §9).
+
+The contract under test, end to end:
+
+* **bit-identity** — partitioning output tile-columns across cores never
+  changes numerics: per-tile k-accumulation order is preserved, stitching is
+  a pure column permutation, so every ``cores × balance × lowering`` cell
+  matches the single-core output bit for bit;
+* **scheduling consistency** — the engine's per-core work (from the actual
+  queue artifacts) equals :func:`repro.core.balance.inter_core_schedule` on
+  the same per-column costs, for both the balanced (LPT) and naive
+  (round-robin) policies — the DESIGN.md §5 engine↔simulator contract
+  extended to balancing;
+* **balancing pays** — on a skewed-density layer the balanced makespan is
+  strictly below the naive round-robin one;
+* **program surface** — ``phantom.compile(cfg=PhantomConfig(cores=...))``
+  is bit-identical to ``cores=1`` on the toy CNN in both conv modes,
+  survives save/load, and serves through ``CnnServeEngine`` unchanged.
+"""
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import toy_cnn
+
+import phantom
+from repro.core import balance, sparsity
+from repro.core.blocksparse import partition_columns
+from repro.kernels import ops
+from repro.kernels import phantom_conv as pc
+from repro.models import cnn
+from repro.serve import CnnServeEngine
+
+BLK = (8, 8, 8)
+
+
+def _pruned_fc(rng, k=96, n=80, density=0.4):
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    w *= sparsity.block_prune(w, density, BLK[1:])
+    return w
+
+
+def _pruned_conv(rng, cin=8, cout=16, kh=3, density=0.4):
+    w = rng.standard_normal((kh, kh, cin, cout)).astype(np.float32)
+    w2 = w.reshape(-1, cout)
+    w2 *= sparsity.block_prune(w2, density, BLK[1:])
+    return w2.reshape(w.shape)
+
+
+def _skewed_fc(rng, kt=12, nt=8):
+    """Column-block densities skewed so heavy columns collide under naive
+    round-robin (heavies at stride-``cores`` positions) but spread under
+    LPT."""
+    bk, bn = BLK[1:]
+    w = np.zeros((kt * bk, nt * bn), np.float32)
+    for c in range(nt):
+        rows = kt if c % 4 == 0 else 1  # heavy every 4th column
+        w[: rows * bk, c * bn : (c + 1) * bn] = rng.standard_normal(
+            (rows * bk, bn)
+        ).astype(np.float32)
+    return w
+
+
+# -- bit-identity grid: cores × balance × lowering ---------------------------
+
+
+@pytest.mark.parametrize("cores", [1, 2, 4])
+@pytest.mark.parametrize("bal", ["none", "full"])
+def test_fc_multicore_parity(cores, bal):
+    rng = np.random.default_rng(0)
+    w = _pruned_fc(rng)
+    x = jnp.asarray(rng.standard_normal((24, w.shape[0])).astype(np.float32))
+    pw1 = ops.prepare_weight(w, m=24, block=BLK)
+    ref = np.asarray(ops.phantom_matmul(x, pw1, interpret=True))
+    pw = ops.prepare_weight(w, m=24, block=BLK, cores=cores, balance=bal)
+    got = np.asarray(ops.phantom_matmul(x, pw, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+    if cores > 1:
+        assert pw.cores == cores and pw.mi.shape[0] == cores
+        # Work is conserved: per-core MAC steps sum to the single-core count,
+        # and `steps` (net of padding-slot writes) stays comparable.
+        mt = pw.grid_tiles[0]
+        assert int(pw.core_cost.sum()) * mt == mt * int(pw.w_bmask.sum())
+        assert pw.steps == pw1.steps
+
+
+@pytest.mark.parametrize("cores", [1, 2, 4])
+@pytest.mark.parametrize("bal", ["none", "full"])
+@pytest.mark.parametrize("mode", ["direct", "im2col"])
+def test_conv_multicore_parity(cores, bal, mode):
+    rng = np.random.default_rng(1)
+    w = _pruned_conv(rng)
+    x = jnp.asarray(rng.standard_normal((2, 6, 6, 8)).astype(np.float32))
+    ref = np.asarray(
+        pc.phantom_conv_call(
+            x,
+            pc.prepare_conv_weight(w, batch=2, in_hw=(6, 6), block=BLK, mode=mode),
+            interpret=True,
+        )
+    )
+    pcw = pc.prepare_conv_weight(
+        w, batch=2, in_hw=(6, 6), block=BLK, mode=mode, cores=cores, balance=bal
+    )
+    got = np.asarray(pc.phantom_conv_call(x, pcw, interpret=True))
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_depthwise_strided_multicore_parity():
+    """Grouped/strided conv through per-core queues — the structural-zero
+    compaction and phase decomposition survive the partition."""
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((3, 3, 1, 8)).astype(np.float32)
+    x = jnp.asarray(rng.standard_normal((2, 6, 6, 8)).astype(np.float32))
+    kw = dict(batch=2, in_hw=(6, 6), stride=(2, 2), groups=8, block=BLK, mode="direct")
+    ref = np.asarray(
+        pc.phantom_conv_call(x, pc.prepare_conv_weight(w, **kw), interpret=True)
+    )
+    got = np.asarray(
+        pc.phantom_conv_call(
+            x, pc.prepare_conv_weight(w, cores=4, balance="full", **kw), interpret=True
+        )
+    )
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_multicore_fused_linear_act_parity():
+    """The fused linear+activation+encoding path: multi-core output and §3.8
+    tile mask match the single-core fused kernel."""
+    rng = np.random.default_rng(3)
+    w = _pruned_fc(rng)
+    x = jnp.asarray(rng.standard_normal((24, w.shape[0])).astype(np.float32))
+    y1, m1 = ops.phantom_linear_act(
+        x, ops.prepare_weight(w, m=24, block=BLK), activation="relu", interpret=True
+    )
+    pw = ops.prepare_weight(w, m=24, block=BLK, cores=2)
+    y2, m2 = ops.phantom_linear_act(x, pw, activation="relu", interpret=True)
+    np.testing.assert_array_equal(np.asarray(y2), np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m1))
+
+
+def test_makespan_tail_revisits_last_flushed_block():
+    """Inert makespan-padding tail steps must repeat the core's last real
+    step's indices with all flags zero: on compiled TPU the end-of-window
+    output writeback rewrites the just-flushed block with identical VMEM
+    contents — tails that pointed at block (0, 0) would smear a stale
+    buffer over it (invisible in interpret mode, fatal compiled)."""
+    rng = np.random.default_rng(9)
+    pw = ops.prepare_weight(
+        _skewed_fc(rng), m=16, block=BLK, cores=4, balance="full"
+    )
+    qmax = pw.mi.shape[1]
+    assert (pw.core_steps < qmax).any()  # the skew guarantees short queues
+    for c, real in enumerate(pw.core_steps):
+        if real == qmax:
+            continue
+        for name in ("mi", "ni", "ki", "wq"):
+            arr = getattr(pw, name)[c]
+            np.testing.assert_array_equal(arr[real:], arr[real - 1])
+        for name in ("start", "last", "valid"):
+            assert not getattr(pw, name)[c][real:].any()
+
+
+# -- scheduling consistency: engine queues ↔ simulator schedule --------------
+
+
+@pytest.mark.parametrize("bal", ["none", "full"])
+def test_partition_matches_inter_core_schedule(bal):
+    """The engine's column buckets and per-core costs are exactly the
+    simulator's :func:`inter_core_schedule` on the per-column popcounts —
+    same assignment lists, same loads (capacity = the equal-slab cap)."""
+    rng = np.random.default_rng(4)
+    cores = 4
+    w = _skewed_fc(rng)
+    pw = ops.prepare_weight(w, m=16, block=BLK, cores=cores, balance=bal)
+    dens = pw.w_bmask.sum(axis=0).astype(np.float64)
+    nt = pw.w_bmask.shape[1]
+    sched = balance.inter_core_schedule(
+        dens, cores, balanced=bal == "full", capacity=-(-nt // cores)
+    )
+    buckets = partition_columns(pw.w_bmask, cores, bal)
+    assert [list(b) for b in buckets] == [list(a) for a in sched.assignment]
+    loads = np.array([dens[a].sum() if a else 0.0 for a in sched.assignment])
+    np.testing.assert_array_equal(pw.core_cost, loads.astype(np.int64))
+    if bal == "full":  # balanced finish times are the per-core loads
+        np.testing.assert_allclose(np.sort(sched.finish_times), np.sort(loads))
+        assert int(max(loads)) == int(sched.makespan)
+
+
+def test_program_stats_report_per_core_schedule():
+    """stats() surfaces cores/per-core work/makespan/imbalance, consistent
+    with inter_core_schedule on the same costs (the §5 contract extended)."""
+    rng = np.random.default_rng(5)
+    w = _skewed_fc(rng)
+    from repro.core.dataflow import FCSpec
+
+    layers = [FCSpec("fc1", w.shape[0], w.shape[1]), FCSpec("fc2", w.shape[1], 8)]
+    params = {
+        "fc1": {"w": jnp.asarray(w), "b": jnp.zeros(w.shape[1], jnp.float32)},
+        "fc2": {
+            "w": jnp.asarray(_pruned_fc(rng, w.shape[1], 8, 1.0)),
+            "b": jnp.zeros(8, jnp.float32),
+        },
+    }
+    cfg = phantom.PhantomConfig(enabled=True, block=BLK, cores=4, balance="full")
+    prog = phantom.compile(layers, params, cfg, batch=4)
+    s = prog.stats(4)["fc1"]
+    assert s["cores"] == 4 and len(s["per_core_work"]) == 4
+    art = prog.at_batch(4)["fc1"]
+    dens = art.w_bmask.sum(axis=0).astype(np.float64)
+    nt = art.w_bmask.shape[1]
+    sched = balance.inter_core_schedule(
+        dens, 4, balanced=True, capacity=-(-nt // 4)
+    )
+    mt = art.grid_tiles[0]
+    assert sorted(s["per_core_work"]) == sorted(
+        int(f) * mt for f in sched.finish_times
+    )
+    assert s["makespan"] == max(s["per_core_steps"])
+    assert s["imbalance"] == pytest.approx(sched.imbalance)
+
+
+def test_balanced_beats_naive_on_skewed_layer():
+    """§4.2 payoff on the real artifacts: densest-first LPT strictly lowers
+    both the per-core work makespan and the executed queue makespan vs the
+    naive round-robin partition (outputs stay bit-identical)."""
+    rng = np.random.default_rng(6)
+    w = _skewed_fc(rng)
+    x = jnp.asarray(rng.standard_normal((16, w.shape[0])).astype(np.float32))
+    pws = {
+        bal: ops.prepare_weight(w, m=16, block=BLK, cores=4, balance=bal)
+        for bal in ("none", "full")
+    }
+    np.testing.assert_array_equal(
+        np.asarray(ops.phantom_matmul(x, pws["none"], interpret=True)),
+        np.asarray(ops.phantom_matmul(x, pws["full"], interpret=True)),
+    )
+    assert pws["full"].core_cost.max() < pws["none"].core_cost.max()
+    assert pws["full"].core_steps.max() <= pws["none"].core_steps.max()
+
+
+# -- the naive lock-step regression (satellite fix) --------------------------
+
+
+def test_naive_schedule_partial_final_round():
+    """Non-divisible job counts: the final partial round advances *every*
+    column (lock-step — idle columns wait for the round), so no worker's
+    finish time predates the true end and imbalance is exact."""
+    costs = np.array([4.0, 1.0, 1.0, 1.0, 10.0])  # 5 jobs on 3 workers
+    s = balance.inter_core_schedule(costs, 3, balanced=False)
+    # Rounds: max(4,1,1)=4, then max(1,10)=10 — makespan 14 for everyone.
+    assert s.makespan == 14.0
+    np.testing.assert_array_equal(s.finish_times, np.full(3, 14.0))
+    assert s.imbalance == 1.0  # lock-step: the cost shows up as makespan
+    assert s.assignment == [[0, 3], [1, 4], [2]]
+    # Balanced on the same jobs beats the lock-step makespan.
+    b = balance.inter_core_schedule(costs, 3, balanced=True)
+    assert b.makespan <= s.makespan
+
+
+# -- program surface: toy CNN, save/load, serving ----------------------------
+
+
+@pytest.mark.parametrize("mode", ["direct", "im2col"])
+def test_program_multicore_toy_cnn_parity(mode):
+    """The acceptance bar: cores=4 ≡ cores=1 bit-identically on the toy CNN
+    (conv → depthwise s2 → pointwise → GAP-FC) in both conv lowerings."""
+    rng = np.random.default_rng(7)
+    layers, params = toy_cnn(rng)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    mk = lambda cores: phantom.compile(
+        layers,
+        params,
+        phantom.PhantomConfig(
+            enabled=True, block=(16, 16, 16), conv_mode=mode, cores=cores
+        ),
+        batch=2,
+    )
+    y1 = np.asarray(mk(1)(x, interpret=True))
+    y4 = np.asarray(mk(4)(x, interpret=True))
+    np.testing.assert_array_equal(y4, y1)
+    ref = np.asarray(cnn.cnn_forward(params, x, layers))
+    np.testing.assert_allclose(y4, ref, atol=1e-4, rtol=1e-3)
+
+
+def test_multicore_save_load_serve():
+    """A cores=2 program survives save/load (per-core queues, payload
+    offsets, column permutation all restored; zero re-lowerings) and serves
+    through CnnServeEngine bit-identically."""
+    import tempfile
+
+    rng = np.random.default_rng(8)
+    layers, params = toy_cnn(rng)
+    cfg = phantom.PhantomConfig(enabled=True, block=(16, 16, 16), cores=2)
+    prog = phantom.compile(layers, params, cfg, batch=2)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    y = np.asarray(prog(x, interpret=True))
+    with tempfile.TemporaryDirectory() as d:
+        prog.save(d + "/prog")
+        q = phantom.PhantomProgram.load(d + "/prog")
+        assert q.lowerings == 0 and q.cfg.cores == 2
+        np.testing.assert_array_equal(np.asarray(q(x, interpret=True)), y)
+        assert q.stats(2) == prog.stats(2)
+        plan = q.at_batch(2)["c1"].plan
+        assert plan.cores == 2 and plan.mi.shape[0] == 2
+        eng = CnnServeEngine(program=q, batch_size=2, interpret=True)
+        reqs = [eng.submit(np.asarray(x)[i]) for i in range(2)]
+        eng.run()
+        np.testing.assert_array_equal(np.stack([r.logits for r in reqs]), y)
+    assert q.lowerings == 0
+
+
+@pytest.mark.slow
+def test_multicore_shards_over_devices():
+    """With >1 XLA device the cores axis maps onto a ('cores',) device mesh
+    via shard_map — numerics stay bit-identical to the single-device grid.
+    Subprocess: fake device count must be set before jax initialises."""
+    script = """
+import jax, numpy as np, jax.numpy as jnp
+assert len(jax.devices()) == 2, jax.devices()
+from repro.core import sparsity
+from repro.kernels import ops, phantom_conv as pc
+from repro.parallel import sharding
+
+rng = np.random.default_rng(0)
+blk = (8, 8, 8)
+w = rng.standard_normal((96, 80)).astype(np.float32)
+w *= sparsity.block_prune(w, 0.4, blk[1:])
+x = jnp.asarray(rng.standard_normal((24, 96)).astype(np.float32))
+assert sharding.cores_mesh(4) is not None  # 2 devices, 4 cores: shardable
+y1 = np.asarray(ops.phantom_matmul(x, ops.prepare_weight(w, m=24, block=blk), interpret=True))
+pw = ops.prepare_weight(w, m=24, block=blk, cores=4, balance="full")
+yc = np.asarray(ops.phantom_matmul(x, pw, interpret=True))
+np.testing.assert_array_equal(yc, y1)
+
+wc = rng.standard_normal((3, 3, 8, 16)).astype(np.float32)
+xc = jnp.asarray(rng.standard_normal((2, 6, 6, 8)).astype(np.float32))
+p1 = pc.prepare_conv_weight(wc, batch=2, in_hw=(6, 6), block=blk, mode="direct")
+p2 = pc.prepare_conv_weight(wc, batch=2, in_hw=(6, 6), block=blk, mode="direct", cores=2)
+np.testing.assert_array_equal(
+    np.asarray(pc.phantom_conv_call(xc, p2, interpret=True)),
+    np.asarray(pc.phantom_conv_call(xc, p1, interpret=True)),
+)
+print("SHARDED-OK")
+"""
+    res = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env={
+            **os.environ,
+            "PYTHONPATH": "src",
+            "JAX_PLATFORMS": "cpu",
+            "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+        },
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert res.returncode == 0, res.stderr
+    assert "SHARDED-OK" in res.stdout

@@ -281,6 +281,40 @@ def test_ffn_spec_is_one_registration():
     assert prog.stats(3)["ffn"]["kind"] == "ffn"
 
 
+def test_save_load_preserves_spec_field_types(tmp_path):
+    """Regression (load coerced every list-valued spec field to a tuple): a
+    registered spec with a genuinely list-typed field round-trips with equal
+    *types* — list stays list, tuple-annotated fields still come back as
+    tuples."""
+    import dataclasses
+
+    from repro.program import register_layer_kind
+    from repro.program.plans import FCKind
+
+    @dataclasses.dataclass(frozen=True)
+    class TaggedFCSpec(FCSpec):
+        tags: list = dataclasses.field(default_factory=list)
+
+    register_layer_kind(TaggedFCSpec, FCKind())
+    rng = np.random.default_rng(37)
+    layers = [
+        ConvSpec("c1", 3, 16, 8, 8, 3, 3, (1, 1)),
+        TaggedFCSpec("fc", 16, 10, pool="gap", tags=["serving", "v2"]),
+    ]
+    params = _rand_params(rng, layers)
+    prog = phantom.compile(layers, params, CFG, batch=1)
+    prog.save(str(tmp_path / "prog"))
+    q = phantom.PhantomProgram.load(str(tmp_path / "prog"))
+    conv, fc = q.layers
+    assert type(fc) is TaggedFCSpec and fc == layers[1]
+    assert isinstance(fc.tags, list) and fc.tags == ["serving", "v2"]
+    assert isinstance(conv.stride, tuple) and conv == layers[0]
+    x = jnp.asarray(rng.standard_normal((1, 8, 8, 3)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(q(x, interpret=True)), np.asarray(prog(x, interpret=True))
+    )
+
+
 def test_serve_engine_threads_program_to_model():
     """ServeEngine passes the program to models whose decode_step opts in."""
     import jax
