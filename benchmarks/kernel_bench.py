@@ -141,6 +141,51 @@ def conv_mode_rows(rng, *, b=1, hw=14, cin=64, cout=64, kh=3, stride=(1, 1),
     return rows, result
 
 
+def lookahead_rows(rng, *, lookahead=8, b=1, hw=14, cin=64, cout=64, kh=3,
+                   w_density=0.3, blk=(32, 32, 32)):
+    """Runtime lookahead compaction (DESIGN.md §10) on the direct-conv bench
+    layer: executed grid steps + wall time, gated (``lookahead=0``) vs
+    compacted, at 50% activation-tile density (the back half of the channel
+    axis is zeroed, killing exactly one of the two Cin tiles of every queue
+    segment position).  The structural metric that transfers to hardware is
+    ``queue_steps / executed_steps`` — the bench asserts the acceptance
+    floor of ≥1.5× and bit-identical outputs."""
+    w = rng.standard_normal((kh, kh, cin, cout)).astype(np.float32)
+    w2 = w.reshape(-1, cout)
+    w2 *= sparsity.block_prune(w2, w_density, blk[1:])
+    w = w2.reshape(w.shape)
+    x = rng.standard_normal((b, hw, hw, cin)).astype(np.float32)
+    x[x < 0] = 0.0  # post-ReLU
+    x[..., cin // 2 :] = 0.0  # 50% of activation k-tiles dead
+    xj = jnp.asarray(x)
+    rows, result, outs = [], {}, {}
+    for la in (0, lookahead):
+        pcw = phantom_conv.prepare_conv_weight(
+            w, batch=b, in_hw=(hw, hw), block=blk, mode="direct", lookahead=la
+        )
+        t_us = _time_call(
+            lambda: phantom_conv.phantom_conv_call(xj, pcw, interpret=True)
+        )
+        outs[la] = np.asarray(phantom_conv.phantom_conv_call(xj, pcw, interpret=True))
+        bits = phantom_conv.direct_conv_tile_bits(xj, pcw, 0.0)
+        st = ops.lookahead_stats(pcw.plan, bits, lookahead=la)
+        result["compacted" if la else "gated"] = dict(
+            us=t_us, lookahead=la, queue_steps=st["queue_steps"],
+            executed_steps=st["executed_steps"],
+            utilization=st["utilization"],
+        )
+        rows.append(
+            (f"lookahead/L{la}/3x3_s1", f"{t_us:.0f}",
+             f"queue_steps={st['queue_steps']};"
+             f"executed_steps={st['executed_steps']};"
+             f"utilization={st['utilization']:.3f}")
+        )
+    np.testing.assert_array_equal(outs[0], outs[lookahead])
+    c = result["compacted"]
+    assert c["queue_steps"] / c["executed_steps"] >= 1.5, result
+    return rows, result
+
+
 def multicore_rows(rng, *, cores=4, mt=4):
     """Balanced (densest-first LPT, §4.3.1) vs naive round-robin partition
     across virtual cores, on a skewed-density layer — the DESIGN.md §9
@@ -186,9 +231,10 @@ def multicore_rows(rng, *, cores=4, mt=4):
     return rows, result
 
 
-def write_conv_trajectory(result, mc_result=None, path="BENCH_conv.json"):
+def write_conv_trajectory(result, mc_result=None, la_result=None, path="BENCH_conv.json"):
     """Append one trajectory point comparing the two conv lowerings (plus,
-    when supplied, the multi-core balanced-vs-naive makespans)."""
+    when supplied, the multi-core balanced-vs-naive makespans and the
+    lookahead gated-vs-compacted executed steps / wall time)."""
     p = pathlib.Path(path)
     hist = json.loads(p.read_text()) if p.exists() else []
     point = {
@@ -216,6 +262,19 @@ def write_conv_trajectory(result, mc_result=None, path="BENCH_conv.json"):
                 / mc_result["full"]["work_makespan"],
                 3,
             ),
+        )
+    if la_result is not None:
+        g, c = la_result["gated"], la_result["compacted"]
+        point.update(
+            lookahead=c["lookahead"],
+            lookahead_gated_us=round(g["us"], 1),
+            lookahead_compacted_us=round(c["us"], 1),
+            lookahead_queue_steps=g["queue_steps"],
+            lookahead_executed_steps=c["executed_steps"],
+            lookahead_step_reduction=round(
+                c["queue_steps"] / c["executed_steps"], 3
+            ),
+            lookahead_utilization=round(c["utilization"], 3),
         )
     hist.append(point)
     p.write_text(json.dumps(hist, indent=2) + "\n")
@@ -280,6 +339,13 @@ def run_multicore():
     return emit(rows), result
 
 
+def run_lookahead():
+    """The lookahead compaction rows alone (fast — printed by the CI tier-1
+    job so the executed-step reduction stays visible per commit)."""
+    rows, result = lookahead_rows(np.random.default_rng(0))
+    return emit(rows), result
+
+
 def run():
     rows = []
     rng = np.random.default_rng(0)
@@ -323,8 +389,10 @@ def run():
     rows += mode_rows
     mc_rows, mc_result = multicore_rows(rng)
     rows += mc_rows
+    la_rows, la_result = lookahead_rows(rng)
+    rows += la_rows
     rows += program_rows(rng)
-    return emit(rows), mode_result, mc_result
+    return emit(rows), mode_result, mc_result, la_result
 
 
 if __name__ == "__main__":
@@ -332,7 +400,9 @@ if __name__ == "__main__":
 
     if len(sys.argv) > 1 and sys.argv[1] == "multicore":
         run_multicore()
+    elif len(sys.argv) > 1 and sys.argv[1] == "lookahead":
+        run_lookahead()
     else:
-        _, result, mc_result = run()
-        point = write_conv_trajectory(result, mc_result)
+        _, result, mc_result, la_result = run()
+        point = write_conv_trajectory(result, mc_result, la_result)
         print("BENCH_conv.json +=", json.dumps(point))

@@ -58,6 +58,14 @@ class PhantomConfig:
     # pallas_call (shardable over a device mesh).  cores=1 is the classic
     # single-queue path, bit-identical to cores>1.
     cores: int = 1
+    # TDS lookahead window L_f (§3.4 / DESIGN.md §10): at call time the work
+    # queue is compacted against the activation bits so activation-dead
+    # steps cost no grid iterations — each executed step retires up to
+    # `lookahead` queue entries (at most one effectual MAC, the threads=1
+    # in-order selector).  0/None keeps today's gating behaviour (every
+    # queue slot is a grid step), the parity oracle the compacted path is
+    # asserted bit-identical against.
+    lookahead: int | None = 0
 
     def jnp_dtype(self):
         return jnp.dtype(self.dtype)

@@ -1,0 +1,234 @@
+"""Runtime lookahead compaction — TDS on the kernel path (DESIGN.md §10).
+
+§3.8 activation bits have so far only *gated* a queue step's MXU op: the
+step still occupied a grid iteration, so runtime activation sparsity bought
+no wall time (DESIGN.md §2 records the asymmetry).  This module closes the
+gap with the paper's §3.4 Top-Down Selector semantics: at call time, given
+the already-computed per-step activation bits, the work queue is compacted
+so that activation-dead steps are squeezed out of the executed grid
+entirely — the same elision Fig. 19b attributes to the lookahead window
+``L_f``.
+
+The cycle model is exactly :func:`repro.core.tds.batch_cycles` with
+``threads=1, policy="inorder"`` applied per accumulation segment (one
+(mi, ni) run = one TDS column queue): each executed step examines a window
+of up to ``lookahead`` queue entries, retires every all-zero entry in it
+for free, and performs at most one effectual MAC.  A segment of ``d`` dead
+entries therefore costs ``ceil(d / lookahead)`` pacing steps instead of
+``d`` — and exactly one of those doubles as the §3.8 zero-writer when the
+whole segment is dead.
+
+Mechanically (all traced, so the queue compaction itself jits):
+
+1. a ``lax.scan`` over the queue replays the TDS cycle model and marks the
+   one *kept* entry per cycle (the effectual entry, or the cycle's closer
+   when the cycle is dead);
+2. ``start``/``last`` are re-derived from the keep mask's prefix sums so
+   each segment's surviving entries still zero the accumulator exactly once
+   and flush exactly once;
+3. a stable argsort moves kept entries to the queue front; the tail repeats
+   the last kept entry with flags zeroed — the same inert-tail invariant as
+   the multi-core makespan padding (a revisit targets the just-flushed
+   block, so an end-of-window writeback rewrites identical VMEM contents);
+4. the kernel grid is bounded by the kept-entry count (a traced grid
+   dimension): single-core grids shrink to exactly the executed steps,
+   multi-core grids to ``max`` over the per-core counts (§4.6 lock-step).
+
+The static per-entry segment metadata (:func:`compaction_meta`) is computed
+once at weight-load time and stored on the artifact; only the activation
+bits are dynamic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["compaction_meta", "compact_queue", "lookahead_stats"]
+
+
+def compaction_meta(start: np.ndarray, real_len=None) -> dict:
+    """Static per-entry segment metadata for :func:`compact_queue`.
+
+    ``start``: int [Q] or [cores, Qpad] segment-start flags;
+    ``real_len``: per-row count of real (non-makespan-padding) entries —
+    ``None`` means every entry is real (single-core queues).
+
+    Returns ``{"seg_base", "seg_end", "pad"}`` (int32/bool, same shape as
+    ``start``): ``seg_base[t]`` is the entry index *before* t's segment
+    start (−1 for the first segment), ``seg_end[t]`` the index of its last
+    real entry, ``pad[t]`` whether t is makespan padding.  Computed once at
+    weight-load time (host numpy) and stored on the artifact.
+    """
+    s2 = np.atleast_2d(np.asarray(start, dtype=np.int32))
+    rows, q = s2.shape
+    if real_len is None:
+        reals = np.full(rows, q, dtype=np.int64)
+    else:
+        reals = np.asarray(real_len, dtype=np.int64).reshape(rows)
+    idx = np.arange(q)
+    seg_base = np.empty((rows, q), np.int32)
+    seg_end = np.empty((rows, q), np.int32)
+    pad = np.empty((rows, q), bool)
+    for r in range(rows):
+        real = int(reals[r])
+        p = idx >= real
+        s = (s2[r] == 1) & ~p
+        # last segment start at or before t  (first entry always starts)
+        seg_start = np.maximum.accumulate(np.where(s, idx, -1))
+        # first segment start strictly after t (q when none)
+        nxt = np.where(s, idx, q)
+        suffix_min = np.minimum.accumulate(nxt[::-1])[::-1]
+        nxt_after = np.concatenate([suffix_min[1:], [q]])
+        seg_base[r] = (seg_start - 1).astype(np.int32)
+        seg_end[r] = (np.minimum(nxt_after, real) - 1).astype(np.int32)
+        pad[r] = p
+    if np.asarray(start).ndim == 1:
+        return {"seg_base": seg_base[0], "seg_end": seg_end[0], "pad": pad[0]}
+    return {"seg_base": seg_base, "seg_end": seg_end, "pad": pad}
+
+
+def _compact_row(fields, start, last, abit, seg_base, seg_end, pad, lookahead):
+    q = start.shape[0]
+    a = (abit == 1)
+
+    # -- 1. replay the TDS cycle model (threads=1, in-order) ------------------
+    def step(carry, inp):
+        c, got = carry  # entries retired in the open cycle; cycle has its MAC
+        a_t, s_t, p_t = inp
+        new = ((s_t == 1) | (c >= lookahead) | (a_t & got)) & ~p_t
+        c2 = jnp.where(p_t, c, jnp.where(new, 1, c + 1))
+        got2 = jnp.where(p_t, got, jnp.where(new, a_t, got | a_t))
+        return (c2, got2), (new, got2)
+
+    (_, _), (new_cycle, got_after) = jax.lax.scan(
+        step,
+        (jnp.int32(lookahead), jnp.bool_(False)),
+        (a, start.astype(jnp.int32), pad),
+    )
+    # an entry closes its cycle when the next entry opens a new one (or the
+    # real queue ends); the closer of a dead cycle is kept as its pacing /
+    # §3.8 zero-writer step, every effectual entry is kept as its cycle's MAC
+    true1 = jnp.ones((1,), bool)
+    close_after = jnp.concatenate([new_cycle[1:], true1]) | jnp.concatenate(
+        [pad[1:], true1]
+    )
+    keep = ~pad & (a | (~got_after & close_after))
+
+    # -- 2. re-derive start/last from surviving per-segment ranks -------------
+    kc = jnp.cumsum(keep.astype(jnp.int32))
+    base = jnp.where(seg_base >= 0, kc[jnp.maximum(seg_base, 0)], 0)
+    rank = kc - base
+    tot = kc[seg_end] - base
+    new_start = keep & (rank == 1)
+    new_last = keep & (rank == tot)
+
+    # -- 3. stable compaction + inert tail ------------------------------------
+    order = jnp.argsort((~keep).astype(jnp.int32), stable=True)
+    count = kc[q - 1]
+    pos = jnp.arange(q)
+
+    def gather_index(arr):
+        g = arr[order]
+        return jnp.where(pos < count, g, g[count - 1])  # tail: repeat last kept
+
+    out = {k: gather_index(v) for k, v in fields.items()}
+    # flags/abit: entries past `count` came from dropped steps, which are
+    # never effectual and never flagged — the inert tail is 0 by construction
+    start_c = new_start.astype(jnp.int32)[order]
+    last_c = new_last.astype(jnp.int32)[order]
+    abit_c = (a & keep).astype(jnp.int32)[order]
+    return out, start_c, last_c, abit_c, count
+
+
+@functools.partial(jax.jit, static_argnames=("lookahead",))
+def compact_queue(fields, start, last, abit, seg_base, seg_end, pad, *, lookahead):
+    """Compact one queue (1-D) or one queue per core (2-D) against the
+    dynamic activation bits.
+
+    ``fields``: dict of int32 index arrays (``mi``/``ni``/``ki``/``wq``, or
+    the conv offset arrays) — compacted to the front, tail repeating the
+    last kept entry; ``start``/``last`` are re-derived, ``abit`` keeps only
+    effectual entries.  Returns ``(fields, start, last, abit, count)`` with
+    ``count`` int32 [] (1-D) or [cores] (2-D) — the executed grid bound.
+    """
+    if int(lookahead) < 1:
+        raise ValueError(f"lookahead must be >= 1 to compact, got {lookahead}")
+    start = jnp.asarray(start)
+    args = (fields, start, jnp.asarray(last), jnp.asarray(abit),
+            jnp.asarray(seg_base), jnp.asarray(seg_end), jnp.asarray(pad))
+    if start.ndim == 2:
+        return jax.vmap(
+            lambda *a: _compact_row(*a, lookahead=lookahead)
+        )(*args)
+    return _compact_row(*args, lookahead=lookahead)
+
+
+def lookahead_stats(art, act_bits, *, lookahead=None) -> dict:
+    """Host-side executed-step accounting for an artifact + activation bits,
+    via :func:`repro.core.tds.batch_cycles` on the per-segment popcounts —
+    the simulator-side number the kernel's compacted grid bound must equal
+    (asserted in the tests; the engine↔simulator contract of DESIGN.md §5
+    extended to runtime compaction).
+
+    ``art``: a :class:`repro.kernels.ops.PhantomWeight` or
+    :class:`repro.kernels.phantom_conv.DirectConvPlan`; ``act_bits``: the
+    int [Mt, Kt] tile bits the call would consume; ``lookahead``: override
+    of ``art.lookahead`` (0 ⇒ today's gated behaviour, where every padded
+    queue slot costs a grid step).
+
+    Returns ``lookahead``, ``queue_steps`` (padded per-core queue length),
+    ``executed_steps`` (grid bound actually run: per-core max, §4.6
+    lock-step), ``retired_per_step`` (real queue entries retired per
+    executed grid slot), ``utilization`` (effectual-MAC steps per executed
+    grid slot — ``valid_macs / (cycles · pes · threads)`` of
+    :class:`repro.core.tds.TdsSchedule` with one thread per core), and
+    ``per_core_executed`` for multi-core artifacts.
+    """
+    from repro.core import tds
+
+    la = getattr(art, "lookahead", 0) if lookahead is None else int(lookahead or 0)
+    bits = np.asarray(act_bits).reshape(-1)
+    fa = np.atleast_2d(np.asarray(art.flat_ak))
+    va = np.atleast_2d(np.asarray(art.valid))
+    st = np.atleast_2d(np.asarray(art.start))
+    cores = getattr(art, "cores", 1)
+    qpad = fa.shape[1]
+    reals = (
+        np.asarray(art.core_steps, dtype=np.int64)
+        if cores > 1
+        else np.full(fa.shape[0], qpad, dtype=np.int64)
+    )
+    per_exec, retired, live = [], 0, 0
+    for r in range(fa.shape[0]):
+        real = int(reals[r])
+        a = (bits[fa[r, :real]] * va[r, :real]).astype(np.int32)
+        starts = np.flatnonzero(st[r, :real] == 1)
+        segs = np.split(a, starts[1:]) if len(starts) else [a]
+        retired += real
+        live += int(a.sum())
+        if la:
+            lengths = np.asarray([len(s) for s in segs], dtype=np.int64)
+            pops = np.zeros((len(segs), int(lengths.max())), np.int32)
+            for i, s in enumerate(segs):
+                pops[i, : len(s)] = s
+            cyc = tds.batch_cycles(
+                pops, lengths, lookahead=la, threads=1, policy="inorder"
+            )
+            per_exec.append(int(cyc.sum()))
+        else:
+            per_exec.append(qpad)  # gated: every padded slot is a grid step
+    executed = max(per_exec)
+    slots = cores * executed
+    out = {
+        "lookahead": la,
+        "queue_steps": qpad,
+        "executed_steps": executed,
+        "retired_per_step": retired / slots if slots else 0.0,
+        "utilization": live / slots if slots else 0.0,
+    }
+    if cores > 1:
+        out["per_core_executed"] = per_exec
+    return out

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blocksparse as bs
-from . import phantom_ffn, phantom_spmm
+from . import compaction, phantom_ffn, phantom_spmm
+from .compaction import lookahead_stats
 from .ref import ref_activation_block_mask
 
 __all__ = [
@@ -37,6 +38,7 @@ __all__ = [
     "element_mask_tile_bits",
     "phantom_matmul",
     "phantom_linear_act",
+    "lookahead_stats",
     "default_interpret",
 ]
 
@@ -94,6 +96,10 @@ class PhantomWeight(MulticoreSteps):
     local_nt: int = 0  # per-core padded column-tile width (ceil(Nt / cores))
     core_steps: np.ndarray | None = None  # int64 [cores] real steps per core
     core_cost: np.ndarray | None = None  # int64 [cores] Σ column nnz blocks
+    # Runtime lookahead compaction (DESIGN.md §10): L_f window (0 = gated
+    # path) + the static segment metadata `compact_queue` consumes.
+    lookahead: int = 0
+    cmeta: dict | None = None  # {"seg_base", "seg_end", "pad"} per-entry
 
     def density(self) -> float:
         return float(self.w_bmask.mean())
@@ -283,6 +289,7 @@ def _prepare_weight_multicore(
     block: tuple[int, int, int],
     interleave: bool,
     dtype,
+    lookahead: int = 0,
 ) -> PhantomWeight:
     bm, bk, bn = block
     kt, nt = bmask.shape
@@ -307,6 +314,12 @@ def _prepare_weight_multicore(
         shape=w.shape,
         w_bmask=bmask,
         cores=cores,
+        lookahead=lookahead,
+        cmeta=(
+            compaction.compaction_meta(q2d["start"], meta["core_steps"])
+            if lookahead
+            else None
+        ),
         **meta,
     )
 
@@ -320,6 +333,7 @@ def prepare_weight(
     dtype=jnp.float32,
     cores: int = 1,
     balance: str = "full",
+    lookahead: int = 0,
     config=None,
 ) -> PhantomWeight:
     """Pack a (pruned) dense weight [K, N] for activations with ``m`` rows.
@@ -331,14 +345,22 @@ def prepare_weight(
     cores grid axis.  ``balance`` also gates the intra-core-style queue
     rotation: ``interleave`` is honored only for ``{"intra", "full"}``.
 
+    ``lookahead`` ≥ 1 enables runtime queue compaction against the
+    activation bits (the §3.4 L_f window, DESIGN.md §10): activation-dead
+    steps stop costing grid iterations.  0 keeps the gated path.
+
     ``config`` (a :class:`repro.core.phantom_linear.PhantomConfig`) is the
-    preferred knob surface and overrides
-    ``block``/``interleave``/``dtype``/``cores``/``balance`` — the program
-    API (DESIGN.md §8) passes it through unchanged.
+    preferred knob surface and overrides ``block``/``interleave``/``dtype``
+    /``cores``/``balance``/``lookahead`` — the program API (DESIGN.md §8)
+    passes it through unchanged.
     """
     if config is not None:
         block, interleave, dtype = config.block, config.interleave, config.jnp_dtype()
         cores, balance = config.cores, config.balance
+        lookahead = config.lookahead
+    lookahead = int(lookahead or 0)
+    if lookahead < 0:
+        raise ValueError(f"lookahead must be >= 0, got {lookahead}")
     interleave = interleave and bs.balance_interleaves(balance)
     w = np.asarray(w)
     k, n = w.shape
@@ -355,6 +377,7 @@ def prepare_weight(
             block=block,
             interleave=interleave,
             dtype=dtype,
+            lookahead=lookahead,
         )
     queue = bs.build_work_queue(bmask, mt, interleave=interleave)
     packed = jnp.asarray(bs.pack_blocks(w, bmask, (bk, bn)), dtype=dtype)
@@ -374,6 +397,8 @@ def prepare_weight(
         grid_tiles=(mt, kt, bmask.shape[1]),
         shape=(k, n),
         w_bmask=bmask,
+        lookahead=lookahead,
+        cmeta=compaction.compaction_meta(start) if lookahead else None,
     )
 
 
@@ -403,20 +428,64 @@ def element_mask_tile_bits(
     return activation_tile_bits(_pad2(m, *block), block, threshold)
 
 
+def _check_rows(m: int, pw: PhantomWeight):
+    """Fail fast (and helpfully) when the activation's row count does not
+    match the M-tile count baked into the prepared queue — without this the
+    mismatch surfaces as a cryptic BlockSpec shape error deep in the kernel."""
+    bm = pw.block[0]
+    mt = pw.grid_tiles[0]
+    need = math.ceil(m / bm)
+    if need != mt:
+        raise ValueError(
+            f"activation has M={m} rows -> ceil({m}/{bm}) = {need} m-tiles, "
+            f"but this PhantomWeight was prepared for grid_tiles[0]={mt} "
+            f"(prepare_weight(..., m=...)). Phantom plans bake the M-tile "
+            f"count into the work queue: re-prepare for this batch, or use "
+            f"the program API's program.at_batch(batch) to fetch the plan "
+            f"lowered for it."
+        )
+
+
+def _compact(fields: dict, pw, abit):
+    """Call-time lookahead compaction (DESIGN.md §10): squeeze activation-
+    dead steps out of the queue; returns the compacted fields plus the
+    executed-step count that bounds the grid."""
+    start, last = jnp.asarray(pw.start), jnp.asarray(pw.last)
+    cm = pw.cmeta
+    fields, start, last, abit, count = compaction.compact_queue(
+        {k: jnp.asarray(v) for k, v in fields.items()},
+        start,
+        last,
+        abit,
+        jnp.asarray(cm["seg_base"]),
+        jnp.asarray(cm["seg_end"]),
+        jnp.asarray(cm["pad"]),
+        lookahead=int(pw.lookahead),
+    )
+    return fields, start, last, abit, count
+
+
 def _run(call, x, pw: PhantomWeight, act_bits, interpret, **kw):
     bm, bk, bn = pw.block
     xp = _pad2(x, bm, bk)
-    abit = act_bits.reshape(-1)[jnp.asarray(pw.flat_ak)] * jnp.asarray(pw.valid)
+    abit = (
+        act_bits.reshape(-1)[jnp.asarray(pw.flat_ak)] * jnp.asarray(pw.valid)
+    ).astype(jnp.int32)
+    fields = dict(mi=pw.mi, ni=pw.ni, ki=pw.ki, wq=pw.wq)
+    start, last, num_steps = pw.start, pw.last, None
+    if pw.lookahead:
+        fields, start, last, abit, num_steps = _compact(fields, pw, abit)
     return call(
         xp,
         pw.packed,
-        jnp.asarray(pw.mi),
-        jnp.asarray(pw.ni),
-        jnp.asarray(pw.ki),
-        jnp.asarray(pw.wq),
-        jnp.asarray(pw.start),
-        jnp.asarray(pw.last),
-        abit.astype(jnp.int32),
+        jnp.asarray(fields["mi"]),
+        jnp.asarray(fields["ni"]),
+        jnp.asarray(fields["ki"]),
+        jnp.asarray(fields["wq"]),
+        jnp.asarray(start),
+        jnp.asarray(last),
+        abit,
+        num_steps,
         block=pw.block,
         grid_tiles=pw.grid_tiles,
         interpret=interpret,
@@ -443,7 +512,9 @@ def _run_multicore(
 
     bm, bk, bn = pw.block
     xp = _pad2(x2, bm, bk)
-    abit = act_bits.reshape(-1)[jnp.asarray(pw.flat_ak)] * jnp.asarray(pw.valid)
+    abit = (
+        act_bits.reshape(-1)[jnp.asarray(pw.flat_ak)] * jnp.asarray(pw.valid)
+    ).astype(jnp.int32)
     mt, kt, _nt = pw.grid_tiles
     call = functools.partial(
         phantom_spmm.phantom_spmm_multicore_call,
@@ -453,9 +524,22 @@ def _run_multicore(
         out_dtype=out_dtype,
         interpret=interpret,
     )
+    fields = dict(mi=pw.mi, ni=pw.ni, ki=pw.ki, wq=pw.wq)
+    start, last, counts = pw.start, pw.last, None
+    if pw.lookahead:
+        # Per-core compaction: each core's queue shrinks to its own executed
+        # count; the grid's second dimension is the max (§4.6 lock-step), so
+        # `counts` rides along as one more per-core array (split by the
+        # shard_map when the cores axis maps onto a device mesh).
+        fields, start, last, abit, counts = _compact(fields, pw, abit)
     queues = tuple(
-        jnp.asarray(a) for a in (pw.mi, pw.ni, pw.ki, pw.wq, pw.start, pw.last)
-    ) + (abit.astype(jnp.int32),)
+        jnp.asarray(a)
+        for a in (
+            fields["mi"], fields["ni"], fields["ki"], fields["wq"], start, last
+        )
+    ) + (abit,)
+    if counts is not None:
+        queues = queues + (counts,)
     y3 = sharding.run_cores_call(call, (xp, pw.packed), queues, pw.cores)
     return stitch_core_outputs(y3, jnp.asarray(pw.col_inv), bn=bn)
 
@@ -481,6 +565,7 @@ def phantom_matmul(
     lead = x.shape[:-1]
     k, n = pw.shape
     x2 = x.reshape(-1, k)
+    _check_rows(x2.shape[0], pw)
     bm, bk, _ = pw.block
     bits = (
         activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)
@@ -522,6 +607,7 @@ def phantom_linear_act(
     lead = x.shape[:-1]
     k, n = pw.shape
     x2 = x.reshape(-1, k)
+    _check_rows(x2.shape[0], pw)
     bm, bk, _ = pw.block
     bits = (
         activation_tile_bits(_pad2(x2, bm, bk), (bm, bk), act_threshold)

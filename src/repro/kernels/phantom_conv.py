@@ -186,6 +186,10 @@ class DirectConvPlan(ops.MulticoreSteps):
     local_nt: int = 0  # per-core padded column-tile width
     core_steps: np.ndarray | None = None  # int64 [cores] real steps per core
     core_cost: np.ndarray | None = None  # int64 [cores] Σ column nnz blocks
+    # Runtime lookahead compaction (DESIGN.md §10): L_f window (0 = gated
+    # path) + the static segment metadata `compact_queue` consumes.
+    lookahead: int = 0
+    cmeta: dict | None = None  # {"seg_base", "seg_end", "pad"} per-entry
 
 
 @dataclasses.dataclass
@@ -238,6 +242,7 @@ def _prepare_direct(
     dtype,
     cores: int = 1,
     balance: str = "full",
+    lookahead: int = 0,
 ) -> DirectConvPlan:
     """Build the implicit-gather plan: tap-align the weight, compact it into
     a coordinate-carrying queue, and lower every step to its element offsets
@@ -288,6 +293,12 @@ def _prepare_direct(
             valid=q["valid"],
             flat_ak=mi * kt + q["ki"],
             cores=cores,
+            lookahead=lookahead,
+            cmeta=(
+                ops.compaction.compaction_meta(q["start"], meta["core_steps"])
+                if lookahead
+                else None
+            ),
             **geom,
             **meta,
         )
@@ -312,6 +323,8 @@ def _prepare_direct(
         last=last,
         valid=valid,
         flat_ak=mi * kt + ki,
+        lookahead=lookahead,
+        cmeta=ops.compaction.compaction_meta(start) if lookahead else None,
         **geom,
     )
 
@@ -330,6 +343,7 @@ def prepare_conv_weight(
     dtype=jnp.float32,
     cores: int = 1,
     balance: str = "full",
+    lookahead: int = 0,
     config=None,
 ) -> PhantomConvWeight:
     """Lower a (pruned) conv weight to a Phantom core artifact.
@@ -342,16 +356,22 @@ def prepare_conv_weight(
     the output tile-columns (= filter blocks) across virtual Phantom cores,
     balanced per the ``balance`` policy (DESIGN.md §9) — both lowerings run
     all cores in one ``pallas_call`` with a leading cores grid axis.
+    ``lookahead`` ≥ 1 additionally compacts the queue at call time against
+    the activation bits (DESIGN.md §10).
 
     ``config`` (a :class:`repro.core.phantom_linear.PhantomConfig`) is the
-    preferred knob surface and overrides
-    ``block``/``interleave``/``mode``/``dtype``/``cores``/``balance`` — the
-    program API (DESIGN.md §8) passes it through unchanged.
+    preferred knob surface and overrides ``block``/``interleave``/``mode``
+    /``dtype``/``cores``/``balance``/``lookahead`` — the program API
+    (DESIGN.md §8) passes it through unchanged.
     """
     if config is not None:
         block, interleave = config.block, config.interleave
         mode, dtype = config.conv_mode, config.jnp_dtype()
         cores, balance = config.cores, config.balance
+        lookahead = config.lookahead
+    lookahead = int(lookahead or 0)
+    if lookahead < 0:
+        raise ValueError(f"lookahead must be >= 0, got {lookahead}")
     if mode not in ("direct", "im2col"):
         raise ValueError(f"mode must be 'direct' or 'im2col', got {mode!r}")
     interleave = interleave and bs.balance_interleaves(balance)
@@ -365,7 +385,7 @@ def prepare_conv_weight(
     if mode == "im2col":
         pw = ops.prepare_weight(
             w2d, m=batch * oh * ow, block=block, interleave=interleave,
-            dtype=dtype, cores=cores, balance=balance,
+            dtype=dtype, cores=cores, balance=balance, lookahead=lookahead,
         )
     else:
         plan = _prepare_direct(
@@ -382,6 +402,7 @@ def prepare_conv_weight(
             dtype=dtype,
             cores=cores,
             balance=balance,
+            lookahead=lookahead,
         )
     return PhantomConvWeight(
         pw=pw,
@@ -497,7 +518,18 @@ def _direct_call(
     bits = direct_conv_tile_bits(
         x if x_mask is None else x_mask, pcw, act_threshold
     )
-    abit = bits.reshape(-1)[jnp.asarray(plan.flat_ak)] * jnp.asarray(plan.valid)
+    abit = (
+        bits.reshape(-1)[jnp.asarray(plan.flat_ak)] * jnp.asarray(plan.valid)
+    ).astype(jnp.int32)
+    fields = dict(
+        ph=plan.ph, nb=plan.nb, r0=plan.r0, c0=plan.c0, ch0=plan.ch0,
+        mi=plan.mi, ni=plan.ni, wq=plan.wq,
+    )
+    start, last, count = plan.start, plan.last, None
+    if plan.lookahead:
+        # Lookahead compaction (DESIGN.md §10): the spatial source offsets
+        # ride through the same gather as the queue indices.
+        fields, start, last, abit, count = ops._compact(fields, plan, abit)
     oh, ow = pcw.out_hw
     if plan.cores > 1:
         from repro.parallel import sharding  # local: keep kernels standalone
@@ -515,10 +547,13 @@ def _direct_call(
         queues = tuple(
             jnp.asarray(a)
             for a in (
-                plan.ph, plan.nb, plan.r0, plan.c0, plan.ch0,
-                plan.mi, plan.ni, plan.wq, plan.start, plan.last,
+                fields["ph"], fields["nb"], fields["r0"], fields["c0"],
+                fields["ch0"], fields["mi"], fields["ni"], fields["wq"],
+                start, last,
             )
-        ) + (abit.astype(jnp.int32),)
+        ) + (abit,)
+        if count is not None:
+            queues = queues + (count,)  # per-core counts split by shard_map
         y3 = sharding.run_cores_call(call, (xph, plan.packed), queues, plan.cores)
         y2 = ops.stitch_core_outputs(
             y3, jnp.asarray(plan.col_inv), bn=plan.block[1]
@@ -527,17 +562,18 @@ def _direct_call(
     y2 = phantom_conv_direct.phantom_conv_direct_call(
         xph,
         plan.packed,
-        jnp.asarray(plan.ph),
-        jnp.asarray(plan.nb),
-        jnp.asarray(plan.r0),
-        jnp.asarray(plan.c0),
-        jnp.asarray(plan.ch0),
-        jnp.asarray(plan.mi),
-        jnp.asarray(plan.ni),
-        jnp.asarray(plan.wq),
-        jnp.asarray(plan.start),
-        jnp.asarray(plan.last),
-        abit.astype(jnp.int32),
+        jnp.asarray(fields["ph"]),
+        jnp.asarray(fields["nb"]),
+        jnp.asarray(fields["r0"]),
+        jnp.asarray(fields["c0"]),
+        jnp.asarray(fields["ch0"]),
+        jnp.asarray(fields["mi"]),
+        jnp.asarray(fields["ni"]),
+        jnp.asarray(fields["wq"]),
+        jnp.asarray(start),
+        jnp.asarray(last),
+        abit,
+        count,
         ow=ow,
         block=plan.block,
         grid_tiles=plan.grid_tiles,

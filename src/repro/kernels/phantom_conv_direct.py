@@ -119,6 +119,7 @@ def phantom_conv_direct_call(
     start: jnp.ndarray,
     last: jnp.ndarray,
     abit: jnp.ndarray,  # int32 [Q] activation tile bit per step (dynamic)
+    num_steps=None,  # traced [] grid bound after lookahead compaction (§10)
     *,
     ow: int,
     block: tuple[int, int],  # (bk, bn)
@@ -129,7 +130,7 @@ def phantom_conv_direct_call(
 ) -> jnp.ndarray:
     bk, bn = block
     mt, _kt, nt = grid_tiles
-    q = mi.shape[0]
+    q = mi.shape[0] if num_steps is None else num_steps
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=11,
         grid=(q,),
@@ -229,6 +230,7 @@ def phantom_conv_direct_multicore_call(
     start: jnp.ndarray,
     last: jnp.ndarray,
     abit: jnp.ndarray,
+    counts=None,  # traced [cores] per-core executed-step counts (§10)
     *,
     ow: int,
     block: tuple[int, int],  # (bk, bn)
@@ -241,10 +243,13 @@ def phantom_conv_direct_multicore_call(
     :func:`repro.kernels.phantom_spmm.phantom_spmm_multicore_call`: the
     leading grid axis walks the virtual cores, each consuming its own
     makespan-padded coordinate-carrying queue and writing its own
-    ``[B·oh·ow, ntc·bn]`` output slab (DESIGN.md §9)."""
+    ``[B·oh·ow, ntc·bn]`` output slab (DESIGN.md §9).  ``counts`` bounds
+    the step axis at ``max(counts)`` after lookahead compaction (§10)."""
     bk, bn = block
     mt, _kt, ntc = grid_tiles
     cores, q = mi.shape
+    if counts is not None:
+        q = jnp.max(counts)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=11,
         grid=(cores, q),

@@ -82,6 +82,7 @@ def phantom_linear_act_call(
     start,
     last,
     abit,
+    num_steps=None,  # traced [] grid bound after lookahead compaction (§10)
     *,
     block: tuple[int, int, int],
     grid_tiles: tuple[int, int, int],
@@ -92,7 +93,7 @@ def phantom_linear_act_call(
 ):
     bm, bk, bn = block
     mt, _kt, nt = grid_tiles
-    q = mi.shape[0]
+    q = mi.shape[0] if num_steps is None else num_steps
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(q,),

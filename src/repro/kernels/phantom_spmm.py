@@ -8,9 +8,12 @@
   zero weight tile, and the packed weight payload (§3.1 sparse-mask storage)
   is the only weight data that ever moves HBM→VMEM;
 * the activation's zero tiles are *gated*: the per-step activation tile bit
-  arrives via scalar prefetch and a ``pl.when`` skips the MXU op (the grid
-  step itself cannot be elided — TPU grids are static; DESIGN.md §2 records
-  this asymmetry vs. the paper).
+  arrives via scalar prefetch and a ``pl.when`` skips the MXU op (DESIGN.md
+  §2 records this asymmetry vs. the paper) — and with
+  ``PhantomConfig(lookahead=L)`` the queue is additionally *compacted* at
+  call time so dead steps leave the executed grid entirely: ``num_steps`` /
+  ``counts`` below bound the grid after
+  :func:`repro.kernels.compaction.compact_queue` (DESIGN.md §10).
 
 Accumulation is k-major in a VMEM fp32 scratch tile that stays resident for
 a full (mi, ni) run — the paper's output-buffer L2 accumulation with zero
@@ -98,6 +101,7 @@ def phantom_spmm_call(
     start: jnp.ndarray,
     last: jnp.ndarray,
     abit: jnp.ndarray,  # int32 [Q] activation tile bit per step (dynamic)
+    num_steps=None,  # traced [] grid bound after lookahead compaction (§10)
     *,
     block: tuple[int, int, int],
     grid_tiles: tuple[int, int, int],
@@ -106,7 +110,7 @@ def phantom_spmm_call(
 ) -> jnp.ndarray:
     bm, bk, bn = block
     mt, _kt, nt = grid_tiles
-    q = mi.shape[0]
+    q = mi.shape[0] if num_steps is None else num_steps
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(q,),
@@ -176,6 +180,7 @@ def phantom_spmm_multicore_call(
     start: jnp.ndarray,
     last: jnp.ndarray,
     abit: jnp.ndarray,
+    counts=None,  # traced [cores] per-core executed-step counts (§10)
     *,
     block: tuple[int, int, int],
     grid_tiles: tuple[int, int, int],  # (Mt, Kt, ntc) — ntc is PER-CORE width
@@ -194,10 +199,17 @@ def phantom_spmm_multicore_call(
     a sequential grid dimension with identical numerics.  The host stitches
     slabs back through the inverse column permutation
     (:func:`repro.kernels.ops.stitch_core_outputs`).
+
+    ``counts`` (lookahead compaction, DESIGN.md §10) bounds the step axis
+    at ``max(counts)`` — cores run in lock-step (§4.6), so the makespan is
+    the slowest core's compacted count; shorter cores idle on their inert
+    tail steps.
     """
     bm, bk, bn = block
     mt, _kt, ntc = grid_tiles
     cores, q = mi.shape
+    if counts is not None:
+        q = jnp.max(counts)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=7,
         grid=(cores, q),

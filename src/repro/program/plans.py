@@ -136,6 +136,28 @@ class ConvKind:
     def mask_out(self, x, act_threshold):
         return (x > act_threshold).astype(x.dtype)
 
+    def tile_bits(self, x, plan, *, mask, act_threshold):
+        """The [Mt, Kt] activation tile bits :meth:`apply` would gate on —
+        recomputed host-visibly so :meth:`runtime_stats` can account the
+        executed grid without re-running the kernel (DESIGN.md §10)."""
+        if plan.mode == "direct":
+            return phantom_conv.direct_conv_tile_bits(
+                x if mask is None else mask, plan, act_threshold
+            )
+        if mask is not None:
+            return phantom_conv.conv_patch_tile_bits(mask, plan, act_threshold)
+        patches = phantom_conv.im2col_patches(
+            x, plan.kh, plan.kw, plan.stride, plan.padding
+        )
+        bm, bk, _ = plan.pw.block
+        return ops.activation_tile_bits(
+            ops._pad2(patches, bm, bk), (bm, bk), act_threshold
+        )
+
+    def runtime_stats(self, plan, tile_bits) -> dict:
+        art = plan.pw if plan.pw is not None else plan.plan
+        return ops.lookahead_stats(art, tile_bits)
+
     def stats(self, plan, spec: ConvSpec, batch: int) -> dict:
         art = plan.pw if plan.pw is not None else plan.plan
         mt, kt, nt = art.grid_tiles
@@ -147,6 +169,7 @@ class ConvKind:
             "steps": plan.steps,
             "dense_steps": mt * kt * nt,
             "density": plan.density(),
+            "lookahead": getattr(art, "lookahead", 0),
             # Weight-effectual MACs at dense activations: M output positions
             # × nonzero weights.  The simulator's layer_work counts the same
             # quantity per-mask (DESIGN.md §5); dynamic activation gating is
@@ -180,6 +203,19 @@ class FCKind:
     def mask_out(self, x, act_threshold):
         return (x > act_threshold).astype(x.dtype)
 
+    def tile_bits(self, x, plan, *, mask, act_threshold):
+        """See :meth:`ConvKind.tile_bits` — same contract for FC layers."""
+        bm, bk, _ = plan.block
+        if mask is not None:
+            return ops.element_mask_tile_bits(mask, (bm, bk))
+        x2 = x.reshape(-1, plan.shape[0])
+        return ops.activation_tile_bits(
+            ops._pad2(x2, bm, bk), (bm, bk), act_threshold
+        )
+
+    def runtime_stats(self, plan, tile_bits) -> dict:
+        return ops.lookahead_stats(plan, tile_bits)
+
     def stats(self, plan, spec: FCSpec, batch: int) -> dict:
         mt, kt, nt = plan.grid_tiles
         w_nnz = int(np.count_nonzero(np.asarray(plan.packed)))
@@ -188,6 +224,7 @@ class FCKind:
             "steps": plan.steps,
             "dense_steps": mt * kt * nt,
             "density": plan.density(),
+            "lookahead": getattr(plan, "lookahead", 0),
             "valid_macs": batch * w_nnz,
             "dense_macs": batch * spec.macs,
             **multicore_stats(plan),
@@ -282,6 +319,7 @@ def run_prepared(
     act_threshold: float = 0.0,
     slot_mask: jnp.ndarray | None = None,
     interpret: bool | None = None,
+    collect: dict | None = None,
 ) -> jnp.ndarray:
     """Run a compiled node sequence over prepared artifacts.
 
@@ -292,18 +330,30 @@ def run_prepared(
     every activation so their flowing masks keep gating their tiles
     (DESIGN.md §4) — without it, ``relu(0 + b)`` lights dead slots up from
     layer 2 on.
+
+    ``collect`` (a dict, mutated in place) gathers each layer's activation
+    tile bits — the same bits the kernel call gates/compacts on — keyed by
+    node name, for :meth:`PhantomProgram.stats`'s runtime accounting
+    (DESIGN.md §10).  Kinds without a ``tile_bits`` method are skipped.
     """
     mask = None
     for node in nodes:
         for g in node.pre:
             x, mask = GLUE[g](x, mask, act_threshold)
         kind = kind_for(node.spec)
+        eff_tau = 0.0 if mask is not None else act_threshold
+        if collect is not None:
+            tb = getattr(kind, "tile_bits", None)
+            if tb is not None:
+                collect[node.name] = np.asarray(
+                    tb(x, prepared[node.name], mask=mask, act_threshold=eff_tau)
+                )
         y = kind.apply(
             x,
             prepared[node.name],
             params[node.name],
             mask=mask,
-            act_threshold=0.0 if mask is not None else act_threshold,
+            act_threshold=eff_tau,
             interpret=interpret,
         )
         if node.activation == "relu":

@@ -114,11 +114,25 @@ class PhantomProgram:
         )
 
     # -- introspection -------------------------------------------------------
-    def stats(self, batch: int | None = None) -> dict:
+    def stats(
+        self,
+        batch: int | None = None,
+        *,
+        sample: jnp.ndarray | None = None,
+        slot_mask: jnp.ndarray | None = None,
+        interpret: bool | None = None,
+    ) -> dict:
         """Per-layer ``{name: {steps, density, valid_macs, ...}}``.
 
         ``batch=None`` reads the single cached batch size (error if zero or
         several are cached — pass one explicitly then).  Never lowers.
+
+        With ``sample`` (an input batch of the requested size) the static
+        stats are augmented with the *runtime* lookahead accounting of
+        DESIGN.md §10 — ``executed_steps`` / ``retired_per_step`` /
+        ``utilization`` per layer, computed from the exact activation tile
+        bits that batch's forward gates (and, with ``cfg.lookahead``,
+        compacts) on.  This runs the forward once to flow the §3.8 masks.
         """
         if batch is None:
             if len(self._plans) != 1:
@@ -130,10 +144,33 @@ class PhantomProgram:
         if batch not in self._plans:
             raise KeyError(f"batch {batch} not lowered; cached: {self.batch_sizes}")
         prepared = self._plans[batch]
-        return {
+        out = {
             node.name: kind_for(node.spec).stats(prepared[node.name], node.spec, batch)
             for node in self.nodes
         }
+        if sample is not None:
+            if sample.shape[0] != batch:
+                raise ValueError(
+                    f"sample batch {sample.shape[0]} != stats batch {batch}"
+                )
+            collected: dict = {}
+            run_prepared(
+                self.nodes,
+                self.params,
+                prepared,
+                sample,
+                act_threshold=self.cfg.act_threshold,
+                slot_mask=slot_mask,
+                interpret=interpret,
+                collect=collected,
+            )
+            for node in self.nodes:
+                rs = getattr(kind_for(node.spec), "runtime_stats", None)
+                if rs is not None and node.name in collected:
+                    out[node.name].update(
+                        rs(prepared[node.name], collected[node.name])
+                    )
+        return out
 
     # -- persistence ---------------------------------------------------------
     def save(self, path: str) -> str:

@@ -76,34 +76,59 @@ class ServeEngine:
 
     # -- client API ----------------------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 16, eos_id=None) -> Request:
-        req = Request(next(self._rid), list(prompt), max_new_tokens, eos_id)
+        prompt = list(prompt)
+        if not prompt:
+            raise ValueError(
+                "cannot submit an empty prompt: decoding needs at least one "
+                "conditioning token (the engine would otherwise crash at "
+                "generation time reading prompt[-1])"
+            )
+        req = Request(next(self._rid), prompt, max_new_tokens, eos_id)
         self.queue.append(req)
         return req
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        """Drive until every submitted request completes; returns them."""
+        """Drive until every submitted request completes; returns them.
+
+        Raises :class:`RuntimeError` if ``max_steps`` decode steps pass
+        without draining the work — silently dropping undone requests would
+        hand the caller a short list indistinguishable from success.
+        """
         finished = []
         for _ in range(max_steps):
             self._fill_slots()
             if all(r is None for r in self.slot_req):
                 break
             self._decode_once(finished)
+        else:
+            undone = [r.rid for r in self.slot_req if r is not None]
+            undone += [r.rid for r in self.queue]
+            if undone:
+                raise RuntimeError(
+                    f"run(max_steps={max_steps}) exhausted with "
+                    f"{len(undone)} request(s) incomplete (rids {undone}); "
+                    f"raise max_steps or submit less work per run() call"
+                )
         return finished
 
     # -- internals -------------------------------------------------------------
     def _fill_slots(self):
+        filled = []
         for s in range(self.b):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.popleft()
                 self.slot_req[s] = req
                 self.slot_pending[s] = deque(req.prompt)
                 self.index[s] = 0
-                self._reset_slot_cache(s)
+                filled.append(s)
+        if filled:
+            self._reset_slot_caches(filled)
 
-    def _reset_slot_cache(self, s: int):
-        self.cache = jax.tree.map(
-            lambda t: t.at[:, s].set(jnp.zeros_like(t[:, s])), self.cache
-        )
+    def _reset_slot_caches(self, slots: list[int]):
+        # One tree traversal for all slots filled this pass — per-slot
+        # resets each rebuilt every array of the whole KV cache.
+        idx = np.asarray(slots)
+        self.cache = jax.tree.map(lambda t: t.at[:, idx].set(0), self.cache)
 
     def _decode_once(self, finished: list):
         tokens = np.zeros((self.b, 1), dtype=np.int32)

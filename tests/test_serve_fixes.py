@@ -1,0 +1,116 @@
+"""Serving-engine bugfix sweep: input validation, honest exhaustion, and the
+batched slot-cache reset — plus the kernel-layer batch-mismatch guard.
+
+Uses a deterministic toy model (next token = prev + 1 mod vocab) so the
+engine mechanics are tested without paying for a real transformer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.serve import ServeEngine
+
+VOCAB = 16
+
+
+class _CountModel:
+    """Minimal decode contract: logits one-hot the incremented token, cache
+    records the fed token at the slot's index (so resets are observable)."""
+
+    def init_cache(self, batch, max_len):
+        return {"k": jnp.zeros((1, batch, max_len, 2), jnp.float32)}
+
+    def decode_step(self, params, cache, tokens, index):
+        logits = jax.nn.one_hot((tokens + 1) % VOCAB, VOCAB)
+        b = cache["k"].shape[1]
+        k = cache["k"].at[0, jnp.arange(b), index, 0].set(
+            1.0 + tokens[:, 0].astype(jnp.float32)
+        )
+        return logits, {"k": k}
+
+
+def _engine(batch_size=3, max_len=32):
+    return ServeEngine(_CountModel(), {}, batch_size=batch_size, max_len=max_len)
+
+
+def test_empty_prompt_rejected_at_submit():
+    eng = _engine()
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    assert not eng.queue  # nothing half-enqueued
+    # and a valid request afterwards still serves
+    req = eng.submit([3], max_new_tokens=2)
+    done = eng.run()
+    assert done == [req] and req.output == [4, 5]
+
+
+def test_run_raises_on_max_steps_exhaustion():
+    eng = _engine(batch_size=1)
+    r1 = eng.submit([1, 2, 3], max_new_tokens=8)
+    r2 = eng.submit([1], max_new_tokens=8)
+    with pytest.raises(RuntimeError, match=r"max_steps=2.*incomplete"):
+        eng.run(max_steps=2)
+    assert not r1.done and not r2.done
+    # the engine is still usable: a follow-up run finishes the work
+    done = eng.run()
+    assert {r.rid for r in done} == {r1.rid, r2.rid}
+    assert r1.output == [4, 5, 6, 7, 8, 9, 10, 11]
+
+
+def test_run_exact_final_step_is_not_an_error():
+    eng = _engine(batch_size=1)
+    eng.submit([1], max_new_tokens=2)
+    # 2 decode steps finish the request; the loop never observes the drain,
+    # but nothing is incomplete either — must return, not raise
+    done = eng.run(max_steps=2)
+    assert len(done) == 1 and done[0].output == [2, 3]
+
+
+def test_fill_pass_resets_all_slots_in_one_traversal():
+    eng = _engine(batch_size=3)
+    calls = []
+    orig = eng._reset_slot_caches
+    eng._reset_slot_caches = lambda slots: (calls.append(list(slots)), orig(slots))[1]
+    # dirty every slot's cache so the reset is observable
+    eng.cache = jax.tree.map(lambda t: t + 7.0, eng.cache)
+    for p in ([1], [2], [3]):
+        eng.submit(p, max_new_tokens=1)
+    eng._fill_slots()
+    assert calls == [[0, 1, 2]]  # one batched reset, not one per slot
+    assert float(jnp.abs(eng.cache["k"]).max()) == 0.0
+
+
+def test_partial_fill_resets_only_freed_slots():
+    eng = _engine(batch_size=3)
+    eng.cache = jax.tree.map(lambda t: t + 7.0, eng.cache)
+    eng.submit([5], max_new_tokens=1)
+    eng._fill_slots()
+    k = np.asarray(eng.cache["k"])
+    assert np.all(k[:, 0] == 0.0)  # filled slot zeroed
+    assert np.all(k[:, 1:] == 7.0)  # untouched slots keep their state
+
+
+def test_continuous_batching_output_unchanged():
+    eng = _engine(batch_size=2)
+    reqs = [eng.submit([i + 1], max_new_tokens=3) for i in range(5)]
+    done = eng.run()
+    assert len(done) == 5
+    for r in reqs:
+        assert r.output == [(r.prompt[0] + j) % VOCAB for j in (1, 2, 3)]
+
+
+# -- kernel-layer guard: mismatched batch fails fast --------------------------
+
+
+def test_phantom_matmul_batch_mismatch_message():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((16, 16)).astype(np.float32)
+    pw = ops.prepare_weight(w, m=8, block=(8, 8, 8))
+    good = ops.phantom_matmul(jnp.ones((8, 16)), pw, interpret=True)
+    assert good.shape == (8, 16)
+    with pytest.raises(ValueError, match=r"m-tiles.*at_batch"):
+        ops.phantom_matmul(jnp.ones((24, 16)), pw, interpret=True)
+    with pytest.raises(ValueError, match=r"m-tiles.*at_batch"):
+        ops.phantom_linear_act(jnp.ones((24, 16)), pw, interpret=True)
