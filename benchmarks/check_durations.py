@@ -1,0 +1,65 @@
+"""Per-test duration budget, parsed from pytest's ``--durations`` report.
+
+CI runs ``pytest --durations=0 | tee pytest.log`` and then::
+
+    python -m benchmarks.check_durations pytest.log --budget 60
+
+Any single test phase (call/setup/teardown) over the budget fails the job —
+the tier-1 suite stays fast because no individual test is allowed to grow
+into a benchmark.  The parser matches pytest's report lines::
+
+    1.23s call     tests/test_kernels.py::test_matmul_parity
+
+``parse_durations`` is the pure piece (unit-tested in ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+_LINE = re.compile(r"^\s*(\d+(?:\.\d+)?)s\s+(call|setup|teardown)\s+(\S+)\s*$")
+
+
+def parse_durations(text: str) -> list[tuple[float, str, str]]:
+    """Extract ``(seconds, phase, test_id)`` rows from pytest output."""
+    rows = []
+    for line in text.splitlines():
+        m = _LINE.match(line)
+        if m:
+            rows.append((float(m.group(1)), m.group(2), m.group(3)))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("log", help="pytest output containing a --durations report")
+    ap.add_argument(
+        "--budget", type=float, default=60.0,
+        help="max seconds for any single test phase (default 60)",
+    )
+    args = ap.parse_args(argv)
+
+    rows = parse_durations(pathlib.Path(args.log).read_text())
+    if not rows:
+        print(
+            "check_durations: no duration lines found — did pytest run with "
+            "--durations=N (and -vv or durations above pytest's 0.005s floor)?"
+        )
+        return 1
+    over = [r for r in rows if r[0] > args.budget]
+    worst = max(rows)
+    print(
+        f"check_durations: {len(rows)} phases parsed, worst "
+        f"{worst[0]:.2f}s ({worst[1]} {worst[2]}), budget {args.budget:g}s"
+    )
+    if over:
+        for secs, phase, test in sorted(over, reverse=True):
+            print(f"  OVER BUDGET {secs:.2f}s {phase} {test}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,130 @@
+"""Perf-regression gate over the ``BENCH_conv.json`` trajectory.
+
+Runs the kernel bench fresh (same rng order as ``kernel_bench.run``, so the
+structural metrics are bit-reproducible) and compares the resulting point
+against the last committed trajectory point:
+
+- **Structural metrics** (grid/queue shapes — multi-core makespans, the
+  balance speedup, lookahead executed steps / step reduction / utilization,
+  activation-byte ratios) are machine-independent and deterministic; they
+  are gated with a small tolerance band so intentional re-tunings need a
+  baseline refresh but drift fails loudly.
+- **Wall-clock metrics** (interpret-mode CPU µs) do not transfer across
+  runners; they are printed as advisory deltas only.
+
+Usage (CI tier-1)::
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --baseline BENCH_conv.json --out bench_fresh.json
+
+Exit code 1 on any structural regression.  ``check_point`` is the pure
+comparison (unit-tested with doctored baselines in ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+# (metric, direction, rel_tol) — direction names which way is WORSE.  The
+# band absorbs intentional small re-tunings (e.g. an rng-order shift when a
+# bench case is added); genuine scheduling regressions (a worse §4.3.1
+# partition, lost §3.4 compaction) move these metrics well past 5%.
+STRUCTURAL = [
+    ("multicore_naive_work_makespan", "higher_worse", 0.05),
+    ("multicore_balanced_work_makespan", "higher_worse", 0.05),
+    ("multicore_balanced_makespan", "higher_worse", 0.05),
+    ("multicore_balanced_imbalance", "higher_worse", 0.05),
+    ("multicore_balance_speedup", "lower_worse", 0.05),
+    ("lookahead_executed_steps", "higher_worse", 0.05),
+    ("lookahead_step_reduction", "lower_worse", 0.05),
+    ("lookahead_utilization", "lower_worse", 0.05),
+    ("activation_bytes_ratio", "higher_worse", 0.05),
+    ("direct_patch_bytes", "higher_worse", 0.0),  # 0 by construction (§3.6)
+]
+
+# Interpret-mode wall times: reported, never gated.
+ADVISORY = [
+    "direct_us",
+    "im2col_us",
+    "speedup_direct_over_im2col",
+    "lookahead_gated_us",
+    "lookahead_compacted_us",
+]
+
+
+def check_point(fresh: dict, baseline: dict) -> tuple[list[str], list[str]]:
+    """Compare a fresh bench point against a baseline point.
+
+    Returns ``(failures, notes)``: failures are structural metrics worse
+    than their tolerance band (or structural metrics that vanished);
+    notes are passing comparisons and advisory wall-time deltas.
+    """
+    failures, notes = [], []
+    for key, direction, tol in STRUCTURAL:
+        if key not in baseline:
+            notes.append(f"{key}: no baseline yet (new metric)")
+            continue
+        if key not in fresh:
+            failures.append(f"{key}: missing from fresh run (baseline {baseline[key]})")
+            continue
+        base, new = float(baseline[key]), float(fresh[key])
+        scale = abs(base) if base else 1.0
+        worse = (new - base) / scale
+        if direction == "lower_worse":
+            worse = -worse
+        if worse > tol:
+            failures.append(
+                f"{key}: {base:g} -> {new:g} ({worse:+.1%} worse, tol {tol:.0%})"
+            )
+        else:
+            notes.append(f"{key}: {base:g} -> {new:g} (ok)")
+    for key in ADVISORY:
+        if key in baseline and key in fresh:
+            base, new = float(baseline[key]), float(fresh[key])
+            rel = (new - base) / base if base else 0.0
+            notes.append(f"{key}: {base:g} -> {new:g} ({rel:+.1%}, advisory)")
+    return failures, notes
+
+
+def fresh_point() -> dict:
+    """Run the kernel bench end to end and build a trajectory point.
+
+    Reuses :func:`kernel_bench.run` verbatim so the shared-rng draw order —
+    and therefore every structural metric — matches how the committed
+    ``BENCH_conv.json`` points were produced.
+    """
+    from benchmarks import kernel_bench
+
+    _, mode_result, mc_result, la_result = kernel_bench.run()
+    return kernel_bench.build_point(mode_result, mc_result, la_result)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_conv.json")
+    ap.add_argument("--out", default=None, help="write the fresh point JSON here")
+    args = ap.parse_args(argv)
+
+    hist = json.loads(pathlib.Path(args.baseline).read_text())
+    baseline = hist[-1] if isinstance(hist, list) else hist
+    fresh = fresh_point()
+    if args.out:
+        pathlib.Path(args.out).write_text(json.dumps(fresh, indent=2) + "\n")
+
+    failures, notes = check_point(fresh, baseline)
+    print(f"check_regression: fresh point vs {args.baseline}[-1]")
+    for n in notes:
+        print(f"  {n}")
+    if failures:
+        print("REGRESSION (structural metrics worse than tolerance):")
+        for f in failures:
+            print(f"  FAIL {f}")
+        return 1
+    print(f"check_regression: OK ({len(STRUCTURAL)} structural metrics in band)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,11 +1,13 @@
-"""Shared benchmark utilities: CSV emission + default simulator options."""
+"""Shared benchmark utilities: CSV emission + default simulator options.
+
+Timing is delegated to :mod:`repro.obs` (DESIGN.md §11) — the one
+warmup-aware, ``block_until_ready``-correct implementation — instead of a
+local ``time.perf_counter`` loop.
+"""
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
 from repro.core import simulator
+from repro.obs import timeit
 
 FAST = simulator.SimOptions(job_frac=0.2, max_jobs=16, max_entries=192, seed=0)
 FULL = simulator.SimOptions(job_frac=0.25, max_jobs=48, max_entries=384, seed=0)
@@ -19,6 +21,6 @@ def emit(rows: list[tuple], header=("name", "us_per_call", "derived")):
 
 
 def timed(fn, *args, **kw):
-    t0 = time.perf_counter()
-    out = fn(*args, **kw)
-    return out, (time.perf_counter() - t0) * 1e6
+    """One un-warmed call → ``(out, µs)``: the simulator benchmarks time a
+    single cold run on purpose (host numpy; no compile cache to exclude)."""
+    return timeit(fn, *args, reps=1, warmup=0, **kw)

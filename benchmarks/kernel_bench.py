@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import json
 import pathlib
-import time
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +24,7 @@ import numpy as np
 
 from repro.core import sparsity
 from repro.kernels import ops, phantom_conv
+from repro.obs import timeit
 
 from .common import emit
 
@@ -77,11 +77,7 @@ def _conv_rows(rng):
                     feature_group_count=c["groups"],
                 )
             )
-            f_dense(xj, wj).block_until_ready()
-            t0 = time.perf_counter()
-            for _ in range(5):
-                f_dense(xj, wj).block_until_ready()
-            t_dense = (time.perf_counter() - t0) / 5 * 1e6
+            _, t_dense = timeit(f_dense, xj, wj, reps=5, warmup=1)
             wbytes = art.packed.size * art.packed.dtype.itemsize
             # Dense baseline is the im2col matrix [kh*kw*Cin, Cout] — the
             # operand the kernel would otherwise move — not the compact
@@ -97,11 +93,7 @@ def _conv_rows(rng):
 
 
 def _time_call(fn, reps=3):
-    fn().block_until_ready()  # compile/trace once
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn().block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+    return timeit(fn, reps=reps, warmup=1)[1]  # warmup absorbs compile/trace
 
 
 def conv_mode_rows(rng, *, b=1, hw=14, cin=64, cout=64, kh=3, stride=(1, 1),
@@ -231,12 +223,10 @@ def multicore_rows(rng, *, cores=4, mt=4):
     return rows, result
 
 
-def write_conv_trajectory(result, mc_result=None, la_result=None, path="BENCH_conv.json"):
-    """Append one trajectory point comparing the two conv lowerings (plus,
-    when supplied, the multi-core balanced-vs-naive makespans and the
-    lookahead gated-vs-compacted executed steps / wall time)."""
-    p = pathlib.Path(path)
-    hist = json.loads(p.read_text()) if p.exists() else []
+def build_point(result, mc_result=None, la_result=None):
+    """One trajectory point from bench results — shared by
+    :func:`write_conv_trajectory` (append to BENCH_conv.json) and
+    ``benchmarks.check_regression`` (compare against the last point)."""
     point = {
         "direct_us": round(result["direct"]["us"], 1),
         "im2col_us": round(result["im2col"]["us"], 1),
@@ -276,7 +266,16 @@ def write_conv_trajectory(result, mc_result=None, la_result=None, path="BENCH_co
             ),
             lookahead_utilization=round(c["utilization"], 3),
         )
-    hist.append(point)
+    return point
+
+
+def write_conv_trajectory(result, mc_result=None, la_result=None, path="BENCH_conv.json"):
+    """Append one trajectory point comparing the two conv lowerings (plus,
+    when supplied, the multi-core balanced-vs-naive makespans and the
+    lookahead gated-vs-compacted executed steps / wall time)."""
+    p = pathlib.Path(path)
+    hist = json.loads(p.read_text()) if p.exists() else []
+    hist.append(build_point(result, mc_result, la_result))
     p.write_text(json.dumps(hist, indent=2) + "\n")
     return hist[-1]
 
@@ -311,9 +310,10 @@ def program_rows(rng):
             "b": jnp.asarray(np.zeros(shp[-1], np.float32)),
         }
     cfg = phantom.PhantomConfig(enabled=True, block=blk)
-    t0 = time.perf_counter()
-    prog = phantom.compile(layers, params, cfg, batch=(1, 8))
-    t_compile = (time.perf_counter() - t0) * 1e6
+    # One cold call: compile time *is* the quantity (no warmup to exclude).
+    prog, t_compile = timeit(
+        phantom.compile, layers, params, cfg, batch=(1, 8), reps=1, warmup=0
+    )
     rows = [
         (
             "program/compile", f"{t_compile:.0f}",
@@ -330,6 +330,54 @@ def program_rows(rng):
             )
         )
     return rows
+
+
+def obs_overhead_rows(rng, *, trials=3, reps=5):
+    """Recorder overhead on a whole-network forward (DESIGN.md §11
+    acceptance: <5% wall time vs ``recorder=None``).  Same compiled program,
+    same input; only the ``recorder`` attribute toggles between timings.
+    Min-over-trials makes the ratio robust to scheduler noise."""
+    import phantom
+    from repro.core.dataflow import ConvSpec, FCSpec
+    from repro.obs import Recorder
+
+    layers = [
+        ConvSpec("c1", 3, 16, 14, 14),
+        ConvSpec("c2", 16, 32, 14, 14),
+        FCSpec("fc", 32, 10, pool="gap"),
+    ]
+    blk = (16, 16, 16)
+    params = {}
+    for l in layers:
+        shp = (
+            (l.kh, l.kw, l.in_ch, l.out_ch)
+            if isinstance(l, ConvSpec)
+            else (l.in_dim, l.out_dim)
+        )
+        params[l.name] = {
+            "w": jnp.asarray(rng.standard_normal(shp).astype(np.float32) * 0.1),
+            "b": jnp.asarray(np.zeros(shp[-1], np.float32)),
+        }
+    prog = phantom.compile(
+        layers, params, phantom.PhantomConfig(enabled=True, block=blk), batch=2
+    )
+    x = jnp.asarray(rng.standard_normal((2, 14, 14, 3)).astype(np.float32))
+
+    def measure():
+        return min(timeit(prog, x, reps=reps, warmup=1)[1] for _ in range(trials))
+
+    prog.recorder = None
+    t_off = measure()
+    prog.recorder = Recorder()
+    t_on = measure()
+    ratio = t_on / t_off
+    assert ratio < 1.05, f"recorder overhead {ratio:.3f}x exceeds the 5% budget"
+    return [
+        (
+            "obs/recorder_overhead", f"{t_on:.0f}",
+            f"recorder_off_us={t_off:.0f};ratio={ratio:.3f}",
+        )
+    ]
 
 
 def run_multicore():
@@ -365,19 +413,11 @@ def run():
 
         xj, wj = jnp.asarray(x), jnp.asarray(w)
         f_dense = jax.jit(lambda a, b: a @ b)
-        f_dense(xj, wj).block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(5):
-            f_dense(xj, wj).block_until_ready()
-        t_dense = (time.perf_counter() - t0) / 5 * 1e6
+        _, t_dense = timeit(f_dense, xj, wj, reps=5, warmup=1)
 
         mask = jnp.asarray((w != 0).astype(np.float32))
         f_masked = jax.jit(lambda a, b, mm: a @ (b * mm))
-        f_masked(xj, wj, mask).block_until_ready()
-        t0 = time.perf_counter()
-        for _ in range(5):
-            f_masked(xj, wj, mask).block_until_ready()
-        t_masked = (time.perf_counter() - t0) / 5 * 1e6
+        _, t_masked = timeit(f_masked, xj, wj, mask, reps=5, warmup=1)
 
         rows.append(
             (f"kernel/wd{wd}", f"{t_dense:.0f}",
@@ -392,6 +432,7 @@ def run():
     la_rows, la_result = lookahead_rows(rng)
     rows += la_rows
     rows += program_rows(rng)
+    rows += obs_overhead_rows(rng)
     return emit(rows), mode_result, mc_result, la_result
 
 

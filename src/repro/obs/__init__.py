@@ -1,0 +1,21 @@
+"""Observability: the one measurement substrate (DESIGN.md §11).
+
+    from repro import obs
+
+    rec = obs.Recorder()
+    prog = phantom.compile(layers, params, cfg, batch=8, recorder=rec)
+    prog(x)
+    rec.save_trace("phantom.trace.json")   # chrome://tracing / Perfetto
+    print(rec.to_json())                   # counters / gauges / histograms
+
+Everything that times or counts — the program layer's per-layer spans, the
+serve engines' latency percentiles, the trainer's step timing, the
+benchmark harness — goes through :class:`Recorder` / :func:`timeit` so the
+numbers are warmup-aware and ``block_until_ready``-correct in exactly one
+place, and every measurement is exportable as structured JSON and as a
+Chrome-trace.
+"""
+from .recorder import Recorder, Span, timeit
+from .trace import to_chrome_trace, validate_chrome_trace
+
+__all__ = ["Recorder", "Span", "timeit", "to_chrome_trace", "validate_chrome_trace"]

@@ -1,0 +1,247 @@
+"""The measurement substrate: counters / gauges / histograms + timed spans.
+
+Phantom's claims are *throughput* claims (paper §5: thread utilization, load
+balancing), so the repo needs one trustworthy way to measure — not the three
+hand-rolled ``time.perf_counter`` loops that used to live in
+``benchmarks/common.py``, ``benchmarks/kernel_bench.py`` and
+``train/trainer.py``.  This module is that way (DESIGN.md §11):
+
+* :class:`Recorder` — an in-process metrics sink.  Counters accumulate
+  (``inc``), gauges hold the latest value (``gauge``), histograms collect
+  samples (``observe``) and report percentiles (``percentiles``: the
+  p50/p95/p99 the serve engines publish).  Metrics are keyed by name plus
+  optional labels (``rec.inc("serve/requests", engine="cnn")``), so one
+  recorder can be shared by a program, its serve engine and a trainer
+  without collisions.
+* :meth:`Recorder.span` — a timing context manager.  Every span lands in a
+  histogram (seconds) *and* as a Chrome-trace complete event, so the same
+  measurement feeds both the JSON snapshot and ``chrome://tracing`` /
+  Perfetto (:mod:`repro.obs.trace`).
+* :func:`timeit` — warmup-aware, ``block_until_ready``-correct wall timing
+  for benchmarks.  JAX dispatch is async: timing a call without blocking on
+  its result measures dispatch, not execution, and timing the first call
+  measures compilation.  ``timeit`` blocks on every result and excludes
+  ``warmup`` calls from the timed window.
+
+Determinism: every clock read goes through the recorder's (or ``timeit``'s)
+injectable ``clock`` callable, so tests drive a fake clock and assert exact
+durations — wall-clock flakiness never leaks into tier-1.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Callable
+
+from .trace import to_chrome_trace
+
+__all__ = ["Recorder", "Span", "timeit"]
+
+
+def _key(name: str, labels: dict) -> str:
+    """Stable metric key: ``name{k=v,...}`` with labels sorted by key."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Span:
+    """One timed region.  Use via ``with rec.span("layer/c1") as sp:`` —
+    after exit ``sp.dur`` is the wall seconds (recorder-clock) the region
+    took; the recorder has observed it into the span's histogram and emitted
+    a Chrome-trace complete event for it."""
+
+    __slots__ = ("name", "labels", "tid", "t0", "dur", "_rec")
+
+    def __init__(self, rec: "Recorder", name: str, tid: int, labels: dict):
+        self._rec = rec
+        self.name = name
+        self.tid = tid
+        self.labels = labels
+        self.t0 = 0.0
+        self.dur = 0.0
+
+    def __enter__(self) -> "Span":
+        self.t0 = self._rec.clock()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.dur = self._rec.clock() - self.t0
+        self._rec._end_span(self)
+        return False
+
+
+class Recorder:
+    """In-process metrics sink: counters, gauges, histograms, trace spans.
+
+    ``clock`` is any zero-arg callable returning seconds (default
+    ``time.perf_counter``); tests inject a fake.  ``runtime=True`` asks the
+    program layer to additionally account *runtime* per-call stats
+    (executed steps / utilization, DESIGN.md §10) — off by default because
+    it costs a host-side pass over each layer's activation tile bits.
+    """
+
+    def __init__(self, *, clock: Callable[[], float] = time.perf_counter,
+                 runtime: bool = False):
+        self.clock = clock
+        self.runtime = runtime
+        self.epoch = clock()  # trace timestamps are relative to this
+        self.counters: dict[str, float] = {}
+        self.gauges: dict[str, float] = {}
+        self.hists: dict[str, list[float]] = {}
+        self.events: list[dict] = []
+
+    # -- metric primitives ---------------------------------------------------
+    def inc(self, name: str, value: float = 1.0, **labels) -> float:
+        k = _key(name, labels)
+        self.counters[k] = self.counters.get(k, 0.0) + value
+        return self.counters[k]
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        self.gauges[_key(name, labels)] = float(value)
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        self.hists.setdefault(_key(name, labels), []).append(float(value))
+
+    def span(self, name: str, *, tid: int = 0, **labels) -> Span:
+        """Timing context: histogram sample + Chrome-trace event on exit."""
+        return Span(self, name, tid, labels)
+
+    def mark(self, name: str, **labels) -> None:
+        """Instant trace event (a point in time, e.g. a rejected request)."""
+        self.events.append(
+            {
+                "name": name,
+                "cat": "mark",
+                "ph": "i",
+                "ts": (self.clock() - self.epoch) * 1e6,
+                "pid": 0,
+                "tid": 0,
+                "s": "t",
+                "args": {k: _jsonable(v) for k, v in labels.items()},
+            }
+        )
+
+    def _end_span(self, sp: Span) -> None:
+        self.observe(sp.name, sp.dur, **sp.labels)
+        self.events.append(
+            {
+                "name": sp.name,
+                "cat": "span",
+                "ph": "X",
+                "ts": (sp.t0 - self.epoch) * 1e6,
+                "dur": sp.dur * 1e6,
+                "pid": 0,
+                "tid": sp.tid,
+                "args": {k: _jsonable(v) for k, v in sp.labels.items()},
+            }
+        )
+
+    # -- readout -------------------------------------------------------------
+    def percentiles(self, name: str, qs=(50, 95, 99), **labels) -> dict[str, float]:
+        """``{"p50": ..., "p95": ..., "p99": ...}`` over a histogram's
+        samples (nearest-rank on the sorted samples; exact for small n)."""
+        samples = sorted(self.hists.get(_key(name, labels), ()))
+        if not samples:
+            raise KeyError(f"no samples for histogram {_key(name, labels)!r}")
+        n = len(samples)
+        out = {}
+        for q in qs:
+            rank = max(0, min(n - 1, int(round(q / 100 * (n - 1)))))
+            out[f"p{q}"] = samples[rank]
+        return out
+
+    def snapshot(self) -> dict:
+        """Structured, JSON-ready view of everything recorded so far."""
+        hists = {}
+        for k, v in self.hists.items():
+            s = sorted(v)
+            n = len(s)
+            summary = {
+                "count": n,
+                "sum": sum(s),
+                "mean": sum(s) / n,
+                "min": s[0],
+                "max": s[-1],
+            }
+            for q in (50, 95, 99):
+                summary[f"p{q}"] = s[max(0, min(n - 1, int(round(q / 100 * (n - 1)))))]
+            hists[k] = summary
+        return {
+            "counters": dict(self.counters),
+            "gauges": dict(self.gauges),
+            "histograms": hists,
+        }
+
+    def to_json(self, path: str | None = None) -> str:
+        """The snapshot as a JSON string; also written to ``path`` if given."""
+        text = json.dumps(self.snapshot(), indent=2, sort_keys=True) + "\n"
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    def chrome_trace(self) -> dict:
+        """The recorded spans/marks as a Chrome-trace (Perfetto) JSON object."""
+        return to_chrome_trace(self.events)
+
+    def save_trace(self, path: str) -> str:
+        """Write :meth:`chrome_trace` to ``path``; returns ``path``."""
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f, indent=2)
+            f.write("\n")
+        return path
+
+    def clear(self) -> None:
+        self.counters.clear()
+        self.gauges.clear()
+        self.hists.clear()
+        self.events.clear()
+        self.epoch = self.clock()
+
+
+def _jsonable(v):
+    """Trace ``args`` must serialise: keep JSON scalars, stringify the rest
+    (numpy scalars, dtypes, tuples...)."""
+    if isinstance(v, (bool, int, float, str)) or v is None:
+        return v
+    return str(v)
+
+
+def timeit(
+    fn,
+    *args,
+    reps: int = 3,
+    warmup: int = 1,
+    clock: Callable[[], float] = time.perf_counter,
+    recorder: Recorder | None = None,
+    name: str | None = None,
+    **kw,
+):
+    """Time ``fn(*args, **kw)``: mean microseconds per call over ``reps``
+    timed calls, after ``warmup`` untimed ones.
+
+    Returns ``(out, us_per_call)`` where ``out`` is the last call's result.
+    Every result is passed through ``jax.block_until_ready`` (a no-op for
+    non-JAX results) so async dispatch cannot make calls look free, and the
+    warmup calls absorb compile/trace time so it cannot make them look slow.
+    With ``recorder=``, the per-call time is also observed into the
+    histogram ``name`` (default ``fn.__qualname__``), in microseconds.
+    """
+    if reps < 1:
+        raise ValueError(f"reps must be >= 1, got {reps}")
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    import jax  # local: keep the obs package importable without jax loaded
+
+    out = None
+    for _ in range(warmup):
+        out = jax.block_until_ready(fn(*args, **kw))
+    t0 = clock()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args, **kw))
+    us = (clock() - t0) / reps * 1e6
+    if recorder is not None:
+        recorder.observe(name or getattr(fn, "__qualname__", "timeit"), us)
+    return out, us

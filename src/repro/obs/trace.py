@@ -1,0 +1,81 @@
+"""Chrome-trace (``chrome://tracing`` / Perfetto) export + schema check.
+
+The trace format is the Trace Event Format's JSON object form:
+``{"traceEvents": [...], "displayTimeUnit": "ms"}``.  We emit two phases:
+
+* ``"X"`` — complete events (one per :meth:`repro.obs.Recorder.span`),
+  requiring ``ts`` (µs since the recorder's epoch) and ``dur`` (µs);
+* ``"i"`` — instant events (one per :meth:`repro.obs.Recorder.mark`).
+
+:func:`validate_chrome_trace` is the schema check the tests gate trace
+export on — it accepts exactly what Perfetto's JSON importer needs (and the
+bare-array form, which the format also allows), and rejects events that
+would silently drop or mis-render there (missing ``dur`` on a complete
+event, negative timestamps, non-numeric fields).
+"""
+from __future__ import annotations
+
+import json
+
+__all__ = ["to_chrome_trace", "validate_chrome_trace"]
+
+#: Phases we emit, plus the other common ones a hand-written trace may use.
+_PHASES = {"X", "B", "E", "i", "I", "C", "M"}
+
+
+def to_chrome_trace(events: list[dict]) -> dict:
+    """Wrap raw trace events in the JSON-object container form."""
+    return {"traceEvents": list(events), "displayTimeUnit": "ms"}
+
+
+def validate_chrome_trace(trace) -> list[dict]:
+    """Schema-check a Chrome-trace document; returns its event list.
+
+    ``trace`` may be the JSON object form, a bare event array, or a JSON
+    string of either.  Raises :class:`ValueError` on the first violation —
+    the message names the offending event index and field.
+    """
+    if isinstance(trace, str):
+        trace = json.loads(trace)
+    if isinstance(trace, list):
+        events = trace
+    elif isinstance(trace, dict):
+        if "traceEvents" not in trace:
+            raise ValueError("trace object form requires a 'traceEvents' key")
+        events = trace["traceEvents"]
+    else:
+        raise ValueError(f"trace must be an object or array, got {type(trace).__name__}")
+    if not isinstance(events, list):
+        raise ValueError("'traceEvents' must be an array")
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            raise ValueError(f"event {i}: not an object")
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"event {i}: 'name' must be a non-empty string")
+        ph = ev.get("ph")
+        if ph not in _PHASES:
+            raise ValueError(f"event {i} ({name!r}): bad phase {ph!r}")
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or isinstance(ts, bool) or ts < 0:
+            raise ValueError(f"event {i} ({name!r}): 'ts' must be a number >= 0")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or isinstance(dur, bool) or dur < 0:
+                raise ValueError(
+                    f"event {i} ({name!r}): complete events need 'dur' >= 0"
+                )
+        for field in ("pid", "tid"):
+            v = ev.get(field, 0)
+            if not isinstance(v, int) or isinstance(v, bool):
+                raise ValueError(f"event {i} ({name!r}): {field!r} must be an int")
+        args = ev.get("args", {})
+        if not isinstance(args, dict):
+            raise ValueError(f"event {i} ({name!r}): 'args' must be an object")
+        try:
+            json.dumps(args)
+        except TypeError as e:
+            raise ValueError(
+                f"event {i} ({name!r}): 'args' not JSON-serialisable: {e}"
+            ) from e
+    return events

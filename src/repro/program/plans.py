@@ -21,6 +21,7 @@ Glue ops (all mask-preserving, DESIGN.md §4):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -320,6 +321,7 @@ def run_prepared(
     slot_mask: jnp.ndarray | None = None,
     interpret: bool | None = None,
     collect: dict | None = None,
+    recorder=None,
 ) -> jnp.ndarray:
     """Run a compiled node sequence over prepared artifacts.
 
@@ -335,32 +337,47 @@ def run_prepared(
     tile bits — the same bits the kernel call gates/compacts on — keyed by
     node name, for :meth:`PhantomProgram.stats`'s runtime accounting
     (DESIGN.md §10).  Kinds without a ``tile_bits`` method are skipped.
+
+    ``recorder`` (a :class:`repro.obs.Recorder`) wraps each node — its glue
+    ops, kernel call and activation epilogue — in one ``layer/<name>`` span,
+    blocking on the layer's output inside the span so async dispatch cannot
+    attribute one layer's work to the next (DESIGN.md §11).  Exactly one
+    span per node per call: the trace's per-layer span count equals the
+    program's layer count.
     """
     mask = None
     for node in nodes:
-        for g in node.pre:
-            x, mask = GLUE[g](x, mask, act_threshold)
         kind = kind_for(node.spec)
-        eff_tau = 0.0 if mask is not None else act_threshold
-        if collect is not None:
-            tb = getattr(kind, "tile_bits", None)
-            if tb is not None:
-                collect[node.name] = np.asarray(
-                    tb(x, prepared[node.name], mask=mask, act_threshold=eff_tau)
-                )
-        y = kind.apply(
-            x,
-            prepared[node.name],
-            params[node.name],
-            mask=mask,
-            act_threshold=eff_tau,
-            interpret=interpret,
+        cm = (
+            recorder.span(f"layer/{node.name}", kind=kind.name)
+            if recorder is not None
+            else contextlib.nullcontext()
         )
-        if node.activation == "relu":
-            x = jax.nn.relu(y)
-            if slot_mask is not None:
-                x = x * slot_mask.reshape((-1,) + (1,) * (x.ndim - 1))
-            mask = kind.mask_out(x, act_threshold)
-        else:
-            x = y
+        with cm:
+            for g in node.pre:
+                x, mask = GLUE[g](x, mask, act_threshold)
+            eff_tau = 0.0 if mask is not None else act_threshold
+            if collect is not None:
+                tb = getattr(kind, "tile_bits", None)
+                if tb is not None:
+                    collect[node.name] = np.asarray(
+                        tb(x, prepared[node.name], mask=mask, act_threshold=eff_tau)
+                    )
+            y = kind.apply(
+                x,
+                prepared[node.name],
+                params[node.name],
+                mask=mask,
+                act_threshold=eff_tau,
+                interpret=interpret,
+            )
+            if node.activation == "relu":
+                x = jax.nn.relu(y)
+                if slot_mask is not None:
+                    x = x * slot_mask.reshape((-1,) + (1,) * (x.ndim - 1))
+                mask = kind.mask_out(x, act_threshold)
+            else:
+                x = y
+            if recorder is not None:
+                x = jax.block_until_ready(x)
     return x

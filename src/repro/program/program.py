@@ -20,6 +20,7 @@ the forward is the generic walk in :mod:`repro.program.plans`.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import types
 import typing
@@ -53,7 +54,14 @@ class PhantomProgram:
     between layers and the τ-at-producer rule applied uniformly.
     """
 
-    def __init__(self, layers, params, cfg: PhantomConfig | None = None):
+    def __init__(
+        self,
+        layers,
+        params,
+        cfg: PhantomConfig | None = None,
+        *,
+        recorder=None,
+    ):
         self.layers = list(layers)
         self.cfg = cfg or SERVE_DEFAULT
         self.params = params
@@ -62,6 +70,10 @@ class PhantomProgram:
         #: number of weight-load-time lowerings actually performed by this
         #: object (cache hits and checkpoint loads do not count).
         self.lowerings = 0
+        #: optional :class:`repro.obs.Recorder` (DESIGN.md §11).  Purely a
+        #: runtime sink: it is never serialised, so attaching one leaves
+        #: :meth:`save` output byte-identical.
+        self.recorder = recorder
 
     # -- plan cache ----------------------------------------------------------
     def at_batch(self, batch: int) -> dict:
@@ -74,14 +86,40 @@ class PhantomProgram:
         if batch <= 0:
             raise ValueError(f"batch must be positive, got {batch}")
         if batch not in self._plans:
-            self._plans[batch] = {
-                node.name: kind_for(node.spec).prepare(
-                    node.spec, self.params[node.name], batch, self.cfg
-                )
-                for node in self.nodes
-            }
+            rec = self.recorder
+            cm = (
+                rec.span("program/lower", batch=batch)
+                if rec is not None
+                else contextlib.nullcontext()
+            )
+            with cm:
+                self._plans[batch] = {
+                    node.name: kind_for(node.spec).prepare(
+                        node.spec, self.params[node.name], batch, self.cfg
+                    )
+                    for node in self.nodes
+                }
             self.lowerings += 1
+            if rec is not None:
+                rec.inc("program/lowerings")
+                self._record_static(batch, rec)
         return self._plans[batch]
+
+    def _record_static(self, batch: int, rec) -> None:
+        """Weight-load-time facts as gauges, once per lowered batch size:
+        per-layer queue steps, and for multi-core plans the per-core
+        work / makespan / imbalance of DESIGN.md §9."""
+        prepared = self._plans[batch]
+        for node in self.nodes:
+            s = kind_for(node.spec).stats(prepared[node.name], node.spec, batch)
+            lab = dict(layer=node.name, batch=batch)
+            rec.gauge("layer/steps", s["steps"], **lab)
+            rec.gauge("layer/dense_steps", s["dense_steps"], **lab)
+            if "makespan" in s:
+                rec.gauge("layer/makespan", s["makespan"], **lab)
+                rec.gauge("layer/imbalance", s["imbalance"], **lab)
+                for c, w in enumerate(s["per_core_work"]):
+                    rec.gauge("layer/core_work", w, core=c, **lab)
 
     @property
     def batch_sizes(self) -> tuple[int, ...]:
@@ -100,18 +138,55 @@ class PhantomProgram:
 
         ``act_threshold`` defaults to ``cfg.act_threshold``; ``slot_mask``
         (float [B], 1 = live) gates padded serving slots (DESIGN.md §4).
+
+        With a :attr:`recorder` attached (DESIGN.md §11) each call records
+        one ``program/call`` span plus one ``layer/<name>`` span per layer
+        (wall time, ``block_until_ready``-correct); a recorder constructed
+        with ``runtime=True`` additionally accounts the §10 per-call
+        runtime stats (executed steps / utilization per layer) from the
+        same activation tile bits the kernels gate on.
         """
         prepared = self.at_batch(x.shape[0])
         tau = self.cfg.act_threshold if act_threshold is None else act_threshold
-        return run_prepared(
-            self.nodes,
-            self.params,
-            prepared,
-            x,
-            act_threshold=tau,
-            slot_mask=slot_mask,
-            interpret=interpret,
-        )
+        rec = self.recorder
+        if rec is None:
+            return run_prepared(
+                self.nodes,
+                self.params,
+                prepared,
+                x,
+                act_threshold=tau,
+                slot_mask=slot_mask,
+                interpret=interpret,
+            )
+        collected: dict | None = {} if rec.runtime else None
+        with rec.span("program/call", batch=int(x.shape[0])):
+            out = run_prepared(
+                self.nodes,
+                self.params,
+                prepared,
+                x,
+                act_threshold=tau,
+                slot_mask=slot_mask,
+                interpret=interpret,
+                collect=collected,
+                recorder=rec,
+            )
+        rec.inc("program/calls")
+        if collected:
+            for node in self.nodes:
+                rs = getattr(kind_for(node.spec), "runtime_stats", None)
+                if rs is not None and node.name in collected:
+                    st = rs(prepared[node.name], collected[node.name])
+                    rec.gauge(
+                        "layer/executed_steps",
+                        st["executed_steps"],
+                        layer=node.name,
+                    )
+                    rec.observe(
+                        "layer/utilization", st["utilization"], layer=node.name
+                    )
+        return out
 
     # -- introspection -------------------------------------------------------
     def stats(
@@ -266,6 +341,7 @@ def compile(
     cfg: PhantomConfig | None = None,
     *,
     batch: int | tuple[int, ...] = 1,
+    recorder=None,
 ) -> PhantomProgram:
     """Compile a network onto the Phantom core: one weight-load-time pass
     per batch size, reused for every inference.
@@ -276,9 +352,12 @@ def compile(
     zero tiles never enter the queues); ``cfg``: the one knob surface
     (:class:`~repro.core.phantom_linear.PhantomConfig`), defaulting to
     :data:`SERVE_DEFAULT`; ``batch``: size(s) to pre-lower (more are lowered
-    lazily by :meth:`PhantomProgram.at_batch`).
+    lazily by :meth:`PhantomProgram.at_batch`); ``recorder``: an optional
+    :class:`repro.obs.Recorder` metrics sink — lowering, per-call and
+    per-layer timing land there (DESIGN.md §11; never serialised by
+    :meth:`PhantomProgram.save`).
     """
-    prog = PhantomProgram(layers, params, cfg)
+    prog = PhantomProgram(layers, params, cfg, recorder=recorder)
     for b in (batch,) if isinstance(batch, int) else tuple(batch):
         prog.at_batch(b)
     return prog

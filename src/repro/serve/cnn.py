@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
 from typing import Optional
 
@@ -48,6 +49,7 @@ class CnnRequest:
     image: np.ndarray  # [H, W, C]
     logits: Optional[np.ndarray] = None
     done: bool = False
+    t_submit: float = 0.0  # engine-clock timestamp (observability)
 
 
 class CnnServeEngine:
@@ -71,6 +73,7 @@ class CnnServeEngine:
         conv_mode: str | None = None,
         act_threshold: float | None = None,
         interpret: bool | None = None,
+        recorder=None,
     ):
         if program is None:
             if params is None or layers is None:
@@ -99,6 +102,12 @@ class CnnServeEngine:
         self.b = batch_size
         self.act_threshold = act_threshold  # None ⇒ program.cfg.act_threshold
         self.interpret = interpret
+        self.recorder = recorder
+        self._clock = recorder.clock if recorder is not None else time.perf_counter
+        if recorder is not None and program.recorder is None:
+            # Share the sink: the program's per-layer spans join the
+            # engine's serving metrics on one timeline (DESIGN.md §11).
+            program.recorder = recorder
         program.at_batch(batch_size)  # no-op when the plan was saved/restored
         first = program.layers[0]
         if not isinstance(first, ConvSpec):
@@ -114,9 +123,14 @@ class CnnServeEngine:
     def submit(self, image: np.ndarray) -> CnnRequest:
         image = np.asarray(image, dtype=np.float32)
         if image.shape != self.in_shape:
+            if self.recorder is not None:
+                self.recorder.inc("serve_cnn/rejected_shape")
             raise ValueError(f"image {image.shape} != expected {self.in_shape}")
-        req = CnnRequest(next(self._rid), image)
+        req = CnnRequest(next(self._rid), image, t_submit=self._clock())
         self.queue.append(req)
+        if self.recorder is not None:
+            self.recorder.inc("serve_cnn/submitted")
+            self.recorder.gauge("serve_cnn/queue_depth", len(self.queue))
         return req
 
     def step(self) -> list[CnnRequest]:
@@ -124,22 +138,33 @@ class CnnServeEngine:
         with zero images that the slot mask keeps gated off layer to layer."""
         if not self.queue:
             return []
+        rec = self.recorder
         reqs = [self.queue.popleft() for _ in range(min(self.b, len(self.queue)))]
         x = np.zeros((self.b,) + self.in_shape, dtype=np.float32)
         slot = np.zeros(self.b, dtype=np.float32)
         for s, req in enumerate(reqs):
             x[s] = req.image
             slot[s] = 1.0
+        if rec is not None:
+            rec.gauge("serve_cnn/queue_depth", len(self.queue))
+            rec.observe("serve_cnn/slot_occupancy", len(reqs) / self.b)
+            sp = rec.span("serve_cnn/batch", live=len(reqs))
+            sp.__enter__()
         logits = self.program(
             jnp.asarray(x),
             slot_mask=jnp.asarray(slot),
             act_threshold=self.act_threshold,
             interpret=self.interpret,
         )
-        logits = np.asarray(logits)
+        logits = np.asarray(logits)  # sync point: the batch is done here
+        if rec is not None:
+            sp.__exit__(None, None, None)
         for s, req in enumerate(reqs):
             req.logits = logits[s]
             req.done = True
+            if rec is not None:
+                rec.inc("serve_cnn/completed")
+                rec.observe("serve_cnn/request_latency_s", self._clock() - req.t_submit)
         self.batches_run += 1
         self.images_served += len(reqs)
         self.padded_slots += self.b - len(reqs)
@@ -182,6 +207,7 @@ def serve_cnn(
     conv_mode: str | None = None,
     act_threshold: float | None = None,
     interpret: bool | None = None,
+    recorder=None,
 ) -> np.ndarray:
     """One-shot batched inference: ``[N, H, W, C]`` images → ``[N, classes]``
     logits through one fixed-shape compiled program (requests beyond
@@ -205,6 +231,7 @@ def serve_cnn(
             batch_size=batch_size,
             act_threshold=act_threshold,
             interpret=interpret,
+            recorder=recorder,
         )
     else:
         program_mod.warn_deprecated(
@@ -222,6 +249,7 @@ def serve_cnn(
             batch_size=batch_size,
             act_threshold=act_threshold,
             interpret=interpret,
+            recorder=recorder,
         )
     reqs = [eng.submit(im) for im in images]
     eng.run()

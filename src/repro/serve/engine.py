@@ -17,6 +17,13 @@ The engine takes a :class:`repro.program.PhantomProgram` directly
 prepared kernel-path artifacts from the program's plan cache instead of
 re-lowering per process (DESIGN.md §8); for other models the program is
 held for introspection (``engine.program.stats(...)``).
+
+With ``recorder=`` (a :class:`repro.obs.Recorder`, DESIGN.md §11) the
+engine publishes serving metrics: per-request latency
+(``serve/request_latency_s`` — read p50/p95/p99 via
+``recorder.percentiles``), queue depth and slot occupancy per decode step,
+steps-per-request, and counters for submissions, completions, empty-prompt
+rejections and ``run()`` exhaustions.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ import dataclasses
 import functools
 import inspect
 import itertools
+import time
 from collections import deque
 from typing import Optional
 
@@ -42,6 +50,7 @@ class Request:
     eos_id: Optional[int] = None
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0  # engine-clock timestamp (observability)
 
 
 def _accepts_program(fn) -> bool:
@@ -59,10 +68,25 @@ def _accepts_program(fn) -> bool:
 
 
 class ServeEngine:
-    def __init__(self, model, params, *, batch_size: int, max_len: int, program=None):
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        batch_size: int,
+        max_len: int,
+        program=None,
+        recorder=None,
+    ):
         self.model, self.params = model, params
         self.b, self.max_len = batch_size, max_len
         self.program = program
+        self.recorder = recorder
+        self._clock = recorder.clock if recorder is not None else time.perf_counter
+        if recorder is not None and program is not None and program.recorder is None:
+            # One timeline: the program's per-layer spans land in the same
+            # trace as the engine's serving metrics (DESIGN.md §11).
+            program.recorder = recorder
         self.cache = model.init_cache(batch_size, max_len)
         self.index = np.zeros(batch_size, dtype=np.int32)  # per-slot fill
         self.slot_req: list[Optional[Request]] = [None] * batch_size
@@ -78,13 +102,20 @@ class ServeEngine:
     def submit(self, prompt: list[int], max_new_tokens: int = 16, eos_id=None) -> Request:
         prompt = list(prompt)
         if not prompt:
+            if self.recorder is not None:
+                self.recorder.inc("serve/rejected_empty_prompt")
             raise ValueError(
                 "cannot submit an empty prompt: decoding needs at least one "
                 "conditioning token (the engine would otherwise crash at "
                 "generation time reading prompt[-1])"
             )
-        req = Request(next(self._rid), prompt, max_new_tokens, eos_id)
+        req = Request(
+            next(self._rid), prompt, max_new_tokens, eos_id, t_submit=self._clock()
+        )
         self.queue.append(req)
+        if self.recorder is not None:
+            self.recorder.inc("serve/submitted")
+            self.recorder.gauge("serve/queue_depth", len(self.queue))
         return req
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
@@ -104,6 +135,8 @@ class ServeEngine:
             undone = [r.rid for r in self.slot_req if r is not None]
             undone += [r.rid for r in self.queue]
             if undone:
+                if self.recorder is not None:
+                    self.recorder.inc("serve/exhausted_runs")
                 raise RuntimeError(
                     f"run(max_steps={max_steps}) exhausted with "
                     f"{len(undone)} request(s) incomplete (rids {undone}); "
@@ -131,6 +164,12 @@ class ServeEngine:
         self.cache = jax.tree.map(lambda t: t.at[:, idx].set(0), self.cache)
 
     def _decode_once(self, finished: list):
+        rec = self.recorder
+        if rec is not None:
+            rec.inc("serve/decode_steps")
+            occupied = sum(r is not None for r in self.slot_req)
+            rec.observe("serve/slot_occupancy", occupied / self.b)
+            rec.gauge("serve/queue_depth", len(self.queue))
         tokens = np.zeros((self.b, 1), dtype=np.int32)
         for s, req in enumerate(self.slot_req):
             if req is None:
@@ -161,3 +200,9 @@ class ServeEngine:
                 req.done = True
                 finished.append(req)
                 self.slot_req[s] = None
+                if rec is not None:
+                    rec.inc("serve/completed")
+                    rec.observe(
+                        "serve/request_latency_s", self._clock() - req.t_submit
+                    )
+                    rec.observe("serve/steps_per_request", int(self.index[s]))

@@ -13,7 +13,6 @@ cross-pod path (:mod:`repro.optim.compression`).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Optional
 
 import jax
@@ -21,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import optim
+from repro import obs, optim
 from repro.checkpoint import CheckpointManager
 from repro.models.common import set_mesh_rules
 from repro.parallel import sharding as shd
@@ -106,6 +105,7 @@ class Trainer:
         tcfg: TrainConfig = TrainConfig(),
         mesh=None,
         ckpt_dir: Optional[str] = None,
+        recorder: Optional[obs.Recorder] = None,
     ):
         self.model, self.data, self.opt_cfg, self.tcfg = model, data, opt_cfg, tcfg
         self.mesh = mesh
@@ -117,6 +117,11 @@ class Trainer:
         self._ewma: float | None = None
         self.straggler_events = 0
         self.history: list[dict] = []
+        #: step timing goes through the observability layer (DESIGN.md §11):
+        #: one ``train/step`` span per step feeds both the straggler EWMA and
+        #: the exportable trace/metrics; pass a shared Recorder to merge the
+        #: trainer's timeline with a program/serve one.
+        self.recorder = recorder if recorder is not None else obs.Recorder()
 
     def init_state(self, seed: int = 0):
         params = self.model.init(jax.random.PRNGKey(seed))
@@ -147,10 +152,13 @@ class Trainer:
     def run(self, params, opt_state, n_steps: int):
         for s in range(self.start_step, self.start_step + n_steps):
             batch = {k: jnp.asarray(v) for k, v in self.data.batch(s).items()}
-            t0 = time.perf_counter()
-            params, opt_state, metrics = self.step_fn(params, opt_state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            self._tick(time.perf_counter() - t0)
+            with self.recorder.span("train/step") as sp:
+                params, opt_state, metrics = self.step_fn(params, opt_state, batch)
+                # float() blocks on the step's outputs, so the span measures
+                # execution, not async dispatch (same sync point the old
+                # hand-rolled perf_counter loop relied on).
+                metrics = {k: float(v) for k, v in metrics.items()}
+            self._tick(sp.dur)
             self.history.append({"step": s, **metrics})
             if self.ckpt and self.tcfg.ckpt_every and (s + 1) % self.tcfg.ckpt_every == 0:
                 self.ckpt.save(

@@ -1,0 +1,198 @@
+"""Property suite for runtime lookahead compaction (DESIGN.md §10).
+
+The queue compactor (:func:`repro.kernels.compaction.compact_queue`) is a
+pure schedule transformation; these tests pin its two load-bearing
+invariants over random ``activation bits × cores × lookahead`` draws:
+
+* **gated-oracle popcount semantics** — each row's kept-entry count equals
+  :func:`repro.core.tds.batch_cycles` (``threads=1, policy="inorder"``) on
+  that row's per-segment activation popcounts: the executed grid bound is
+  exactly the §3.4 TDS cycle count, per core;
+* **inert-tail invariant** — past the kept count, every compacted field
+  repeats the last kept entry and every flag (``start``/``last``/``abit``)
+  is zero, so the padded grid steps re-execute an already-flushed block
+  (same trick as the multi-core makespan padding, §4.6).
+
+Plus the structural bookkeeping that makes the compacted queue a *queue*:
+all effectual entries survive, each segment keeps exactly one ``start`` and
+one ``last``, and compaction is stable (original order preserved).
+
+A deterministic random grid runs in tier-1; the hypothesis sweep follows
+the repo convention (``slow`` marker, skipped without hypothesis).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tds
+from repro.kernels import compaction
+
+# -- shared helpers -----------------------------------------------------------
+
+
+def _random_queue(rng, cores, qpad):
+    """Random per-core queues: segment starts, activation bits, real
+    lengths (multi-core rows are makespan-padded past ``real``)."""
+    start = np.zeros((cores, qpad), np.int32)
+    abit = np.zeros((cores, qpad), np.int32)
+    real = np.zeros(cores, np.int64)
+    for r in range(cores):
+        real[r] = rng.integers(1, qpad + 1)
+        s = (rng.random(qpad) < 0.3).astype(np.int32)
+        s[0] = 1  # first real entry always opens a segment
+        start[r, : real[r]] = s[: real[r]]
+        abit[r, : real[r]] = rng.integers(0, 2, int(real[r]))
+    return start, abit, real
+
+
+def _oracle_count(abit_row, start_row, real, la):
+    """Gated-oracle popcount semantics: TDS cycles over the row's segments."""
+    a = abit_row[:real]
+    starts = np.flatnonzero(start_row[:real] == 1)
+    segs = np.split(a, starts[1:]) if len(starts) else [a]
+    lengths = np.asarray([len(s) for s in segs], dtype=np.int64)
+    pops = np.zeros((len(segs), int(lengths.max())), np.int32)
+    for i, s in enumerate(segs):
+        pops[i, : len(s)] = s
+    cyc = tds.batch_cycles(pops, lengths, lookahead=la, threads=1, policy="inorder")
+    return int(cyc.sum()), len(segs)
+
+
+def _check_invariants(start, abit, real, la):
+    cores, qpad = start.shape
+    meta = compaction.compaction_meta(
+        start if cores > 1 else start[0],
+        real if cores > 1 else None,
+    )
+    fields = {"mi": np.tile(np.arange(qpad, dtype=np.int32), (cores, 1))}
+    if cores == 1:
+        fields = {"mi": fields["mi"][0]}
+        args = (fields, start[0], np.zeros(qpad, np.int32), abit[0])
+        real = np.full(1, qpad, np.int64)  # 1-D queues have no padding
+    else:
+        args = (fields, start, np.zeros_like(start), abit)
+    with jax.disable_jit():  # eager: shapes vary per example, skip XLA
+        out, start_c, last_c, abit_c, count = compaction.compact_queue(
+            *args, meta["seg_base"], meta["seg_end"], meta["pad"], lookahead=la
+        )
+    mi = np.atleast_2d(np.asarray(out["mi"]))
+    start_c = np.atleast_2d(np.asarray(start_c))
+    last_c = np.atleast_2d(np.asarray(last_c))
+    abit_c = np.atleast_2d(np.asarray(abit_c))
+    counts = np.atleast_1d(np.asarray(count))
+    for r in range(cores):
+        n = int(counts[r])
+        want, n_segs = _oracle_count(abit[r], start[r], int(real[r]), la)
+        # 1. per-core executed count == the TDS cycle oracle
+        assert n == want, (r, la, abit[r].tolist(), start[r].tolist())
+        # 2. inert tail: fields repeat the last kept entry, flags are zero
+        assert np.all(mi[r, n:] == mi[r, n - 1])
+        assert not start_c[r, n:].any() and not last_c[r, n:].any()
+        assert not abit_c[r, n:].any()
+        # 3. every effectual entry survives compaction
+        assert int(abit_c[r, :n].sum()) == int(abit[r, : real[r]].sum())
+        # 4. one start and one last per surviving segment
+        assert int(start_c[r, :n].sum()) == n_segs
+        assert int(last_c[r, :n].sum()) == n_segs
+        # 5. stable: kept entries keep their original relative order
+        assert np.all(np.diff(mi[r, :n]) > 0)
+
+
+# -- deterministic tier-1 grid ------------------------------------------------
+
+
+@pytest.mark.parametrize("cores", [1, 2, 3])
+@pytest.mark.parametrize("la", [1, 2, 5])
+def test_compaction_invariants_random_grid(cores, la):
+    rng = np.random.default_rng(cores * 31 + la)
+    for trial in range(4):
+        qpad = int(rng.integers(2, 18))
+        start, abit, real = _random_queue(rng, cores, qpad)
+        _check_invariants(start, abit, real, la)
+
+
+def test_all_dead_queue_keeps_pacing_steps_only():
+    """Zero activations: each segment of length d survives as exactly
+    ceil(d / L) §3.8 zero-writer pacing steps."""
+    start = np.zeros((1, 12), np.int32)
+    start[0, [0, 5, 9]] = 1  # segments of length 5, 4, 3
+    abit = np.zeros((1, 12), np.int32)
+    real = np.array([12], np.int64)
+    meta = compaction.compaction_meta(start[0])
+    with jax.disable_jit():
+        _, _, _, abit_c, count = compaction.compact_queue(
+            {"mi": np.arange(12, dtype=np.int32)},
+            start[0], np.zeros(12, np.int32), abit[0],
+            meta["seg_base"], meta["seg_end"], meta["pad"], lookahead=4,
+        )
+    assert int(count) == 2 + 1 + 1  # ceil(5/4) + ceil(4/4) + ceil(3/4)
+    assert not np.asarray(abit_c).any()
+    _check_invariants(start, abit, real, 4)
+
+
+def test_all_live_queue_is_identity_schedule():
+    """Full activations: nothing compacts — every entry is its cycle's MAC."""
+    start = np.zeros((1, 8), np.int32)
+    start[0, [0, 3]] = 1
+    abit = np.ones((1, 8), np.int32)
+    _check_invariants(start, abit, np.array([8], np.int64), 3)
+    meta = compaction.compaction_meta(start[0])
+    with jax.disable_jit():
+        out, start_c, _, _, count = compaction.compact_queue(
+            {"mi": np.arange(8, dtype=np.int32)},
+            start[0], np.zeros(8, np.int32), abit[0],
+            meta["seg_base"], meta["seg_end"], meta["pad"], lookahead=3,
+        )
+    assert int(count) == 8
+    np.testing.assert_array_equal(np.asarray(out["mi"]), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(start_c), start[0])
+
+
+# -- hypothesis sweep (slow tier; the deterministic grid above always runs) --
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 containers without the dev extra
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def queue_case(draw):
+        cores = draw(st.integers(1, 3))
+        qpad = draw(st.integers(1, 24))
+        la = draw(st.integers(1, 8))
+        seed = draw(st.integers(0, 2**31 - 1))
+        return cores, qpad, la, seed
+
+    @pytest.mark.slow
+    @given(queue_case())
+    @settings(max_examples=60, deadline=None)
+    def test_compaction_invariants_property(case):
+        cores, qpad, la, seed = case
+        rng = np.random.default_rng(seed)
+        start, abit, real = _random_queue(rng, cores, qpad)
+        _check_invariants(start, abit, real, la)
+
+    @pytest.mark.slow
+    @given(st.integers(1, 24), st.integers(1, 8), st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_single_core_lookahead_bounds(qpad, la, seed):
+        """Executed count is bracketed: every live entry needs a MAC step
+        (live <= count) and compaction never exceeds the gated grid
+        (count <= qpad)."""
+        rng = np.random.default_rng(seed)
+        start, abit, real = _random_queue(rng, 1, qpad)
+        meta = compaction.compaction_meta(start[0])
+        with jax.disable_jit():
+            _, _, _, _, count = compaction.compact_queue(
+                {"mi": np.arange(qpad, dtype=np.int32)},
+                start[0], np.zeros(qpad, np.int32), abit[0],
+                meta["seg_base"], meta["seg_end"], meta["pad"], lookahead=la,
+            )
+        n = int(count)
+        live = int(abit[0].sum())
+        assert max(live, 1) <= n <= qpad

@@ -1,0 +1,411 @@
+"""Observability layer (DESIGN.md §11): Recorder semantics, warmup-correct
+``timeit``, Chrome-trace export, program instrumentation, and the two CI
+gates (``check_regression`` structural bands, ``check_durations`` budget).
+
+Every timing assertion drives the injectable clock — wall-clock flakiness
+never decides a tier-1 test.  The one genuinely wall-clock claim (<5%
+recorder overhead on a whole-network forward) lives in
+``benchmarks.kernel_bench.obs_overhead_rows`` where min-over-trials makes
+it robust.
+"""
+import json
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import toy_cnn
+
+import phantom
+from repro.obs import Recorder, timeit, to_chrome_trace, validate_chrome_trace
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks import check_durations, check_regression  # noqa: E402
+
+BLK = (16, 16, 16)
+CFG = phantom.PhantomConfig(enabled=True, block=BLK)
+
+
+class FakeClock:
+    """Deterministic recorder clock: reads return the current virtual time;
+    tests advance it explicitly."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- Recorder primitives ------------------------------------------------------
+
+
+def test_counters_gauges_histograms_and_labels():
+    rec = Recorder(clock=FakeClock())
+    assert rec.inc("reqs") == 1.0
+    assert rec.inc("reqs", 2.0) == 3.0
+    rec.inc("reqs", engine="cnn")  # labelled: distinct series
+    assert rec.counters == {"reqs": 3.0, "reqs{engine=cnn}": 1.0}
+    rec.gauge("depth", 4)
+    rec.gauge("depth", 2)  # gauges hold the latest value
+    assert rec.gauges["depth"] == 2.0
+    rec.observe("lat", 0.5)
+    rec.observe("lat", 1.5)
+    assert rec.hists["lat"] == [0.5, 1.5]
+    # label order never matters: sorted into one stable key
+    rec.inc("x", a=1, b=2)
+    rec.inc("x", b=2, a=1)
+    assert rec.counters["x{a=1,b=2}"] == 2.0
+
+
+def test_span_measures_recorder_clock_and_emits_trace_event():
+    clk = FakeClock()
+    rec = Recorder(clock=clk)
+    clk.advance(10.0)  # epoch offset: trace ts must be relative, not absolute
+    with rec.span("layer/c1", kind="conv") as sp:
+        clk.advance(2.5)
+    assert sp.dur == 2.5
+    assert rec.hists["layer/c1{kind=conv}"] == [2.5]
+    (ev,) = rec.events
+    assert ev["name"] == "layer/c1" and ev["ph"] == "X"
+    assert ev["ts"] == pytest.approx(10.0 * 1e6)
+    assert ev["dur"] == pytest.approx(2.5 * 1e6)
+    assert ev["args"] == {"kind": "conv"}
+
+
+def test_percentiles_nearest_rank():
+    rec = Recorder(clock=FakeClock())
+    for v in range(101):  # 0..100: nearest-rank indices land exactly
+        rec.observe("lat", float(v))
+    p = rec.percentiles("lat")
+    assert p == {"p50": 50.0, "p95": 95.0, "p99": 99.0}
+    rec.observe("one", 7.0)
+    assert rec.percentiles("one") == {"p50": 7.0, "p95": 7.0, "p99": 7.0}
+    with pytest.raises(KeyError, match="no samples"):
+        rec.percentiles("missing")
+
+
+def test_snapshot_to_json_and_clear(tmp_path):
+    clk = FakeClock()
+    rec = Recorder(clock=clk)
+    rec.inc("n", 3)
+    rec.gauge("g", 1.5)
+    rec.observe("h", 2.0)
+    rec.observe("h", 4.0)
+    snap = json.loads(rec.to_json(str(tmp_path / "metrics.json")))
+    assert snap == json.loads((tmp_path / "metrics.json").read_text())
+    assert snap["counters"] == {"n": 3.0}
+    assert snap["gauges"] == {"g": 1.5}
+    h = snap["histograms"]["h"]
+    assert h["count"] == 2 and h["sum"] == 6.0 and h["mean"] == 3.0
+    assert h["min"] == 2.0 and h["max"] == 4.0
+    rec.clear()
+    assert rec.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert rec.events == []
+
+
+def test_chrome_trace_valid_and_saved(tmp_path):
+    clk = FakeClock()
+    rec = Recorder(clock=clk)
+    with rec.span("a", tid=1):
+        clk.advance(0.25)
+    rec.mark("rejected", reason="shape")
+    trace = rec.chrome_trace()
+    validate_chrome_trace(trace)  # must not raise
+    assert trace["displayTimeUnit"] == "ms"
+    assert [e["ph"] for e in trace["traceEvents"]] == ["X", "i"]
+    path = rec.save_trace(str(tmp_path / "trace.json"))
+    loaded = json.loads(pathlib.Path(path).read_text())
+    validate_chrome_trace(loaded)
+    assert loaded == json.loads(json.dumps(trace))  # file == in-memory trace
+
+
+@pytest.mark.parametrize(
+    "event, err",
+    [
+        ({"ph": "X", "ts": 0, "dur": 1}, "name"),
+        ({"name": "a", "ph": "Q", "ts": 0}, "ph"),
+        ({"name": "a", "ph": "X", "ts": "soon", "dur": 1}, "ts"),
+        ({"name": "a", "ph": "X", "ts": 0, "dur": -1}, "dur"),
+        ({"name": "a", "ph": "X", "ts": 0, "dur": 1, "pid": True}, "pid"),
+        ({"name": "a", "ph": "i", "ts": 0, "args": {"x": object()}}, "args"),
+    ],
+)
+def test_validate_chrome_trace_rejects_malformed(event, err):
+    with pytest.raises(ValueError, match=err):
+        validate_chrome_trace(to_chrome_trace([event]))
+
+
+# -- timeit: the one timing loop ---------------------------------------------
+
+
+def test_timeit_excludes_warmup_and_averages_reps():
+    clk = FakeClock()
+    costs = iter([100.0, 1.0, 2.0, 3.0])  # first call is "compilation"
+
+    def fn():
+        clk.advance(next(costs))
+        return 42
+
+    out, us = timeit(fn, reps=3, warmup=1, clock=clk)
+    assert out == 42
+    # the 100s warmup call is excluded; (1+2+3)/3 seconds per timed call
+    assert us == pytest.approx(2.0 * 1e6)
+
+
+def test_timeit_no_warmup_times_cold_call():
+    clk = FakeClock()
+
+    def fn():
+        clk.advance(7.0)
+
+    _, us = timeit(fn, reps=1, warmup=0, clock=clk)
+    assert us == pytest.approx(7.0 * 1e6)
+
+
+def test_timeit_records_into_recorder_and_validates():
+    clk = FakeClock()
+    rec = Recorder(clock=clk)
+
+    def fn():
+        clk.advance(1.0)
+
+    timeit(fn, reps=2, warmup=0, clock=clk, recorder=rec, name="bench/fn")
+    assert rec.hists["bench/fn"] == [pytest.approx(1e6)]
+    with pytest.raises(ValueError, match="reps"):
+        timeit(fn, reps=0)
+    with pytest.raises(ValueError, match="warmup"):
+        timeit(fn, warmup=-1)
+
+
+def test_timeit_blocks_on_jax_results():
+    """The timed window must cover execution, not dispatch: a jitted call's
+    result is block_until_ready'd inside timeit (smoke: result is concrete
+    and correct)."""
+    import jax
+
+    f = jax.jit(lambda a: a * 2)
+    out, us = timeit(f, jnp.ones((4,)), reps=1, warmup=1)
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones(4))
+    assert us >= 0.0
+
+
+# -- program instrumentation --------------------------------------------------
+
+
+def _compiled(rng, rec):
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(layers, params, CFG, batch=2, recorder=rec)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    return layers, params, prog, x
+
+
+def test_program_records_one_span_per_layer_and_valid_trace():
+    """The ISSUE acceptance: a whole-network forward with a recorder exports
+    a valid Chrome trace whose per-layer span count equals the layer count."""
+    rng = np.random.default_rng(17)
+    rec = Recorder()
+    layers, params, prog, x = _compiled(rng, rec)
+    prog(x, interpret=True)
+    layer_spans = [
+        e for e in rec.events if e["ph"] == "X" and e["name"].startswith("layer/")
+    ]
+    assert len(layer_spans) == len(layers)
+    assert [e["name"] for e in layer_spans] == [f"layer/{l.name}" for l in layers]
+    assert {e["args"]["kind"] for e in layer_spans} <= {"conv", "fc"}
+    validate_chrome_trace(rec.chrome_trace())
+    # one program/call wrapping span; one program/lower from compile
+    names = [e["name"] for e in rec.events if e["ph"] == "X"]
+    assert names.count("program/call") == 1 and names.count("program/lower") == 1
+    assert rec.counters["program/calls"] == 1.0
+    assert rec.counters["program/lowerings"] == 1.0
+    # second call: layer spans double, no new lowering
+    prog(x, interpret=True)
+    assert (
+        len([e for e in rec.events if e["name"].startswith("layer/")])
+        == 2 * len(layers)
+    )
+    assert rec.counters["program/lowerings"] == 1.0
+
+
+def test_program_records_static_per_layer_and_per_core_metrics():
+    rng = np.random.default_rng(19)
+    rec = Recorder()
+    layers, params = toy_cnn(rng)
+    cores = 2
+    cfg = phantom.PhantomConfig(enabled=True, block=BLK, cores=cores)
+    phantom.compile(layers, params, cfg, batch=2, recorder=rec)
+    for l in layers:
+        lab = f"{{batch=2,layer={l.name}}}"
+        assert rec.gauges[f"layer/steps{lab}"] >= 0
+        assert rec.gauges[f"layer/dense_steps{lab}"] >= rec.gauges[f"layer/steps{lab}"]
+        assert rec.gauges[f"layer/makespan{lab}"] > 0
+        assert rec.gauges[f"layer/imbalance{lab}"] >= 1.0
+        work = [
+            rec.gauges[f"layer/core_work{{batch=2,core={c},layer={l.name}}}"]
+            for c in range(cores)
+        ]
+        assert rec.gauges[f"layer/imbalance{lab}"] == pytest.approx(
+            max(work) / (sum(work) / cores)
+        )
+
+
+def test_program_runtime_recorder_accounts_executed_steps():
+    """Recorder(runtime=True) adds the §10 per-call accounting — and the
+    numbers equal what stats(sample=...) reports for the same input."""
+    rng = np.random.default_rng(23)
+    layers, params = toy_cnn(rng)
+    cfg = phantom.PhantomConfig(enabled=True, block=BLK, lookahead=4)
+    rec = Recorder(runtime=True)
+    prog = phantom.compile(layers, params, cfg, batch=2, recorder=rec)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    prog(x, interpret=True)
+    ref = prog.stats(sample=x, interpret=True)
+    for l in layers:
+        assert (
+            rec.gauges[f"layer/executed_steps{{layer={l.name}}}"]
+            == ref[l.name]["executed_steps"]
+        )
+        assert rec.hists[f"layer/utilization{{layer={l.name}}}"] == [
+            pytest.approx(ref[l.name]["utilization"])
+        ]
+
+
+def test_recorder_attachment_never_changes_outputs():
+    rng = np.random.default_rng(29)
+    layers, params = toy_cnn(rng)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    plain = phantom.compile(layers, params, CFG, batch=2)
+    recd = phantom.compile(
+        layers, params, CFG, batch=2, recorder=Recorder(runtime=True)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(plain(x, interpret=True)), np.asarray(recd(x, interpret=True))
+    )
+
+
+# -- check_regression: the structural perf gate -------------------------------
+
+BASE_POINT = {
+    "direct_us": 8000.0,
+    "im2col_us": 9500.0,
+    "speedup_direct_over_im2col": 1.19,
+    "direct_patch_bytes": 0,
+    "im2col_patch_bytes": 451584,
+    "activation_bytes_ratio": 0.145,
+    "multicore_naive_makespan": 96,
+    "multicore_balanced_makespan": 52,
+    "multicore_naive_work_makespan": 96,
+    "multicore_balanced_work_makespan": 52,
+    "multicore_naive_imbalance": 3.2,
+    "multicore_balanced_imbalance": 1.733,
+    "multicore_balance_speedup": 1.846,
+    "lookahead": 8,
+    "lookahead_gated_us": 7700.0,
+    "lookahead_compacted_us": 7300.0,
+    "lookahead_queue_steps": 154,
+    "lookahead_executed_steps": 82,
+    "lookahead_step_reduction": 1.878,
+    "lookahead_utilization": 1.0,
+}
+
+
+def test_check_point_passes_on_identical_point():
+    failures, notes = check_regression.check_point(dict(BASE_POINT), BASE_POINT)
+    assert failures == []
+    assert any("multicore_balanced_work_makespan" in n for n in notes)
+
+
+def test_check_point_fails_on_balanced_makespan_regression():
+    """The ISSUE acceptance: a doctored balanced-makespan regression must
+    fail the gate."""
+    fresh = dict(BASE_POINT)
+    fresh["multicore_balanced_work_makespan"] = 96  # balance stopped working
+    fresh["multicore_balanced_makespan"] = 96
+    fresh["multicore_balance_speedup"] = 1.0
+    failures, _ = check_regression.check_point(fresh, BASE_POINT)
+    joined = "\n".join(failures)
+    assert "multicore_balanced_work_makespan: 52 -> 96" in joined
+    assert "multicore_balance_speedup" in joined
+
+
+def test_check_point_direction_and_band_semantics():
+    # improvements pass
+    better = dict(BASE_POINT, lookahead_executed_steps=60,
+                  multicore_balanced_work_makespan=40)
+    assert check_regression.check_point(better, BASE_POINT)[0] == []
+    # within-band noise passes (2% on a 5% band)
+    noisy = dict(BASE_POINT, lookahead_step_reduction=1.878 * 0.98)
+    assert check_regression.check_point(noisy, BASE_POINT)[0] == []
+    # beyond-band regression fails
+    worse = dict(BASE_POINT, lookahead_step_reduction=1.878 * 0.9)
+    assert len(check_regression.check_point(worse, BASE_POINT)[0]) == 1
+    # wall time is advisory: a 10x slowdown alone never fails the gate
+    slow = dict(BASE_POINT, direct_us=80000.0, lookahead_compacted_us=73000.0)
+    assert check_regression.check_point(slow, BASE_POINT)[0] == []
+    # losing the zero-patch-bytes property fails at zero tolerance
+    mat = dict(BASE_POINT, direct_patch_bytes=451584)
+    assert len(check_regression.check_point(mat, BASE_POINT)[0]) == 1
+    # a structural metric that vanishes from the fresh run fails
+    gone = dict(BASE_POINT)
+    del gone["lookahead_executed_steps"]
+    failures, _ = check_regression.check_point(gone, BASE_POINT)
+    assert failures and "missing" in failures[0]
+
+
+def test_check_regression_main_gates_doctored_baseline(tmp_path, monkeypatch, capsys):
+    """End-to-end gate flow without re-running the bench: fresh_point is
+    stubbed, baseline files are doctored on disk."""
+    fresh = dict(BASE_POINT)
+    monkeypatch.setattr(check_regression, "fresh_point", lambda: fresh)
+    base = tmp_path / "BENCH.json"
+    out = tmp_path / "fresh.json"
+    # healthy baseline → exit 0, metrics artifact written
+    base.write_text(json.dumps([BASE_POINT]))
+    rc = check_regression.main(["--baseline", str(base), "--out", str(out)])
+    assert rc == 0
+    assert json.loads(out.read_text()) == json.loads(json.dumps(fresh))
+    # doctored baseline whose balanced makespan was better → fresh run is a
+    # regression → exit 1 and the failing metric is named
+    doctored = dict(BASE_POINT, multicore_balanced_work_makespan=40,
+                    multicore_balanced_makespan=40)
+    base.write_text(json.dumps([BASE_POINT, doctored]))  # gate uses last point
+    rc = check_regression.main(["--baseline", str(base)])
+    assert rc == 1
+    assert "multicore_balanced_work_makespan" in capsys.readouterr().out
+
+
+# -- check_durations: the per-test time budget --------------------------------
+
+PYTEST_LOG = """\
+============================= slowest durations ==============================
+12.34s call     tests/test_program.py::test_save_load_fresh_process
+0.50s setup    tests/test_obs.py::test_percentiles_nearest_rank
+0.01s teardown tests/test_obs.py::test_percentiles_nearest_rank
+(0.00 durations hidden.  Use -vv to show these durations.)
+=========================== short test summary info ===========================
+"""
+
+
+def test_parse_durations_extracts_phases():
+    rows = check_durations.parse_durations(PYTEST_LOG)
+    assert rows == [
+        (12.34, "call", "tests/test_program.py::test_save_load_fresh_process"),
+        (0.50, "setup", "tests/test_obs.py::test_percentiles_nearest_rank"),
+        (0.01, "teardown", "tests/test_obs.py::test_percentiles_nearest_rank"),
+    ]
+    assert check_durations.parse_durations("no durations here") == []
+
+
+def test_check_durations_main_budget(tmp_path, capsys):
+    log = tmp_path / "pytest.log"
+    log.write_text(PYTEST_LOG)
+    assert check_durations.main([str(log), "--budget", "60"]) == 0
+    assert check_durations.main([str(log), "--budget", "10"]) == 1
+    assert "OVER BUDGET 12.34s call" in capsys.readouterr().out
+    log.write_text("nothing parseable")
+    assert check_durations.main([str(log)]) == 1

@@ -315,6 +315,55 @@ def test_save_load_preserves_spec_field_types(tmp_path):
     )
 
 
+def test_save_is_identical_with_recorder_attached(tmp_path):
+    """A Recorder is a runtime-only sink (DESIGN.md §11): attaching one —
+    even with runtime accounting on, after real calls — changes nothing the
+    program persists.  Saved manifests and every array payload are identical
+    to the recorder-free program's, the reloaded program has no recorder,
+    and stats(sample=...) is unchanged."""
+    from repro.obs import Recorder
+
+    rng = np.random.default_rng(41)
+    layers, params = toy_cnn(rng)
+    cfg = phantom.PhantomConfig(enabled=True, block=BLK, lookahead=4)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)).astype(np.float32))
+    plain = phantom.compile(layers, params, cfg, batch=2)
+    rec = Recorder(runtime=True)
+    recd = phantom.compile(layers, params, cfg, batch=2, recorder=rec)
+    y = np.asarray(plain(x, interpret=True))
+    np.testing.assert_array_equal(np.asarray(recd(x, interpret=True)), y)
+    assert rec.events  # the recorder did observe the call...
+    plain.save(str(tmp_path / "plain"))
+    recd.save(str(tmp_path / "recd"))
+    # ...but the persisted artifacts are identical, bit for bit.
+    dirs = {}
+    for name in ("plain", "recd"):
+        (step_dir,) = [
+            p for p in (tmp_path / name).iterdir() if p.name.startswith("step_")
+        ]
+        dirs[name] = step_dir
+    a, b = dirs["plain"], dirs["recd"]
+    assert sorted(p.name for p in a.iterdir()) == sorted(p.name for p in b.iterdir())
+    import json as _json
+
+    ma = _json.loads((a / "manifest.json").read_text())
+    mb = _json.loads((b / "manifest.json").read_text())
+    ma.pop("time"), mb.pop("time")  # wall-clock stamp is the only delta
+    assert ma == mb
+    with np.load(a / "arrays.npz") as za, np.load(b / "arrays.npz") as zb:
+        assert sorted(za.files) == sorted(zb.files)
+        for k in za.files:
+            np.testing.assert_array_equal(za[k], zb[k])
+    # round-trip: loaded program carries no recorder, runs bit-identically,
+    # and the runtime accounting (stats with a sample) is unchanged
+    loaded = phantom.PhantomProgram.load(str(tmp_path / "recd"))
+    assert loaded.recorder is None and loaded.lowerings == 0
+    np.testing.assert_array_equal(np.asarray(loaded(x, interpret=True)), y)
+    st_plain = plain.stats(sample=x, interpret=True)
+    st_loaded = loaded.stats(sample=x, interpret=True)
+    assert st_plain == st_loaded
+
+
 def test_serve_engine_threads_program_to_model():
     """ServeEngine passes the program to models whose decode_step opts in."""
     import jax

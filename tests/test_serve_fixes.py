@@ -101,6 +101,117 @@ def test_continuous_batching_output_unchanged():
         assert r.output == [(r.prompt[0] + j) % VOCAB for j in (1, 2, 3)]
 
 
+# -- serving metrics (DESIGN.md §11): edge cases on the recorder surface ------
+
+
+class _Tick:
+    """Deterministic engine clock: every read advances by 1 second."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+def _recorded_engine(batch_size=3, max_len=32):
+    from repro.obs import Recorder
+
+    rec = Recorder(clock=_Tick())
+    eng = ServeEngine(
+        _CountModel(), {}, batch_size=batch_size, max_len=max_len, recorder=rec
+    )
+    return eng, rec
+
+
+def test_single_request_batch_records_latency_and_steps():
+    """One request alone in the batch: latency is recorder-clock positive,
+    p50 == p95 == p99 (a single sample), steps-per-request equals the decode
+    steps the request actually consumed (prefill + generation)."""
+    eng, rec = _recorded_engine(batch_size=3)
+    req = eng.submit([3], max_new_tokens=2)
+    assert rec.counters["serve/submitted"] == 1.0
+    assert rec.gauges["serve/queue_depth"] == 1.0
+    done = eng.run()
+    assert done == [req]
+    assert rec.counters["serve/completed"] == 1.0
+    (lat,) = rec.hists["serve/request_latency_s"]
+    assert lat > 0.0  # clock at completion − clock at submit, both fake
+    p = rec.percentiles("serve/request_latency_s")
+    assert p["p50"] == p["p95"] == p["p99"] == lat
+    # prompt [3] is fed in the same step that generates token 4, then one
+    # more step generates token 5: index reached 2
+    assert rec.hists["serve/steps_per_request"] == [2.0]
+    assert rec.counters["serve/decode_steps"] == 2.0
+    # one live slot out of 3 on both steps
+    assert rec.hists["serve/slot_occupancy"] == [1 / 3, 1 / 3]
+    assert rec.gauges["serve/queue_depth"] == 0.0
+
+
+def test_empty_prompt_rejection_is_counted():
+    eng, rec = _recorded_engine()
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    assert rec.counters["serve/rejected_empty_prompt"] == 1.0
+    assert "serve/submitted" not in rec.counters  # rejected ≠ submitted
+    eng.submit([1], max_new_tokens=1)
+    eng.run()
+    assert rec.counters["serve/submitted"] == 1.0
+    assert rec.counters["serve/completed"] == 1.0
+
+
+def test_max_steps_exhaustion_is_counted():
+    eng, rec = _recorded_engine(batch_size=1)
+    eng.submit([1, 2, 3], max_new_tokens=8)
+    eng.submit([1], max_new_tokens=8)
+    with pytest.raises(RuntimeError, match="incomplete"):
+        eng.run(max_steps=2)
+    assert rec.counters["serve/exhausted_runs"] == 1.0
+    assert "serve/completed" not in rec.counters
+    eng.run()  # finishing the work afterwards does not re-count exhaustion
+    assert rec.counters["serve/exhausted_runs"] == 1.0
+    assert rec.counters["serve/completed"] == 2.0
+    # every recorded latency is positive and the histogram is complete
+    assert [v > 0 for v in rec.hists["serve/request_latency_s"]] == [True, True]
+
+
+def test_cnn_engine_records_batch_spans_and_rejections():
+    from conftest import toy_cnn
+
+    import phantom
+    from repro.obs import Recorder
+    from repro.serve import CnnServeEngine
+
+    rng = np.random.default_rng(43)
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(
+        layers, params, phantom.PhantomConfig(enabled=True, block=(16, 16, 16)),
+        batch=2,
+    )
+    rec = Recorder(clock=_Tick())
+    eng = CnnServeEngine(program=prog, batch_size=2, interpret=True, recorder=rec)
+    assert prog.recorder is rec  # engine shares its sink with the program
+    with pytest.raises(ValueError, match="expected"):
+        eng.submit(np.zeros((4, 4, 3), np.float32))
+    assert rec.counters["serve_cnn/rejected_shape"] == 1.0
+    imgs = rng.standard_normal((3, 8, 8, 3)).astype(np.float32)
+    for im in imgs:
+        eng.submit(im)
+    eng.run()
+    assert rec.counters["serve_cnn/submitted"] == 3.0
+    assert rec.counters["serve_cnn/completed"] == 3.0
+    assert rec.hists["serve_cnn/slot_occupancy"] == [1.0, 0.5]  # full, then half
+    assert all(v > 0 for v in rec.hists["serve_cnn/request_latency_s"])
+    # one serve_cnn/batch span per engine step, each wrapping the program's
+    # per-layer spans on the same timeline
+    batch_spans = [e for e in rec.events if e["name"] == "serve_cnn/batch"]
+    assert len(batch_spans) == 2
+    assert [e["args"]["live"] for e in batch_spans] == [2, 1]
+    layer_spans = [e for e in rec.events if e["name"].startswith("layer/")]
+    assert len(layer_spans) == 2 * len(layers)
+
+
 # -- kernel-layer guard: mismatched batch fails fast --------------------------
 
 
