@@ -4,8 +4,15 @@
     prog = phantom.compile(layers, params, phantom.PhantomConfig(enabled=True), batch=8)
     logits = prog(x)
 
-Thin alias over :mod:`repro.program` so user code does not spell the repro
-package layout; see DESIGN.md §8.
+Autotuning (DESIGN.md §12) rides on the same call:
+
+    prog = phantom.compile(layers, params, cfg, batch=8, tune="search")
+    # later / elsewhere: zero re-search, same per-layer configs
+    prog = phantom.compile(layers, params, cfg, batch=8, tune="cached")
+
+Thin alias over :mod:`repro.program` (plus the :class:`TuneCache` handle
+from :mod:`repro.tune`) so user code does not spell the repro package
+layout; see DESIGN.md §8.
 """
 from repro.program import (  # noqa: F401
     SERVE_DEFAULT,
@@ -15,6 +22,7 @@ from repro.program import (  # noqa: F401
     compile,
     register_layer_kind,
 )
+from repro.tune import TuneCache  # noqa: F401
 
 __all__ = [
     "PhantomConfig",
@@ -23,4 +31,5 @@ __all__ = [
     "SERVE_DEFAULT",
     "LayerKind",
     "register_layer_kind",
+    "TuneCache",
 ]

@@ -70,6 +70,28 @@ class PhantomConfig:
     def jnp_dtype(self):
         return jnp.dtype(self.dtype)
 
+    def with_overrides(self, **fields) -> "PhantomConfig":
+        """A copy of this config with ``fields`` replaced — the per-layer
+        override application point of the autotuner (DESIGN.md §12).
+
+        Accepts exactly the dataclass field names; ``block`` may arrive as a
+        JSON list (tune-cache entries and saved programs round-trip through
+        JSON) and is normalised back to a tuple so configs stay hashable.
+        Unknown field names raise instead of being silently dropped — a
+        stale cache entry must fail loudly, not mis-tune.
+        """
+        if not fields:
+            return self
+        known = {f.name for f in dataclasses.fields(self)}
+        bad = sorted(set(fields) - known)
+        if bad:
+            raise ValueError(
+                f"unknown PhantomConfig override field(s) {bad}; known: {sorted(known)}"
+            )
+        if "block" in fields and fields["block"] is not None:
+            fields["block"] = tuple(fields["block"])
+        return dataclasses.replace(self, **fields)
+
 
 PHANTOM_DISABLED = PhantomConfig(enabled=False)
 

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import types
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,7 @@ __all__ = [
     "build_multicore_queues",
     "pack_multicore_blocks",
     "stitch_core_outputs",
+    "cost_artifact",
     "activation_tile_bits",
     "element_mask_tile_bits",
     "phantom_matmul",
@@ -399,6 +401,67 @@ def prepare_weight(
         w_bmask=bmask,
         lookahead=lookahead,
         cmeta=compaction.compaction_meta(start) if lookahead else None,
+    )
+
+
+def cost_artifact(
+    bmask: np.ndarray,
+    m_tiles: int,
+    *,
+    cores: int = 1,
+    balance: str = "full",
+    interleave: bool = True,
+    conv: dict | None = None,
+):
+    """Queue-only artifact for the autotuner's analytic cost model
+    (:mod:`repro.tune.cost`, DESIGN.md §12).
+
+    Runs the *same* queue construction as :func:`prepare_weight` /
+    ``phantom_conv._prepare_direct`` — partition, compaction, §3.8
+    zero-writes, makespan padding — but never packs a weight payload, so a
+    candidate configuration can be costed (via :func:`lookahead_stats` on
+    the returned artifact) without touching the kernel path.  Because the
+    queue code is shared, the predicted ``queue_steps`` / ``executed_steps``
+    / ``makespan`` equal the real plan's exactly; the tuner's "never worse
+    than the default on the deterministic metrics" guarantee rests on that
+    equality.
+
+    ``conv={"kw": ..., "ct": ...}`` costs the coordinate-carrying direct-conv
+    queue (same switch as :func:`build_multicore_queues`).
+    """
+    bmask = np.asarray(bmask, dtype=bool)
+    kt, nt = bmask.shape
+    interleave = interleave and bs.balance_interleaves(balance)
+    if cores > 1:
+        _, q2d, meta = build_multicore_queues(
+            bmask, m_tiles, cores, balance, interleave=interleave, conv=conv
+        )
+        return types.SimpleNamespace(
+            flat_ak=q2d["mi"] * kt + q2d["ki"],
+            valid=q2d["valid"],
+            start=q2d["start"],
+            cores=cores,
+            core_steps=meta["core_steps"],
+            core_cost=meta["core_cost"],
+            grid_tiles=(m_tiles, kt, nt),
+            lookahead=0,
+        )
+    if conv is None:
+        q = bs.build_work_queue(bmask, m_tiles, interleave=interleave)
+    else:
+        q = bs.build_conv_work_queue(
+            bmask, m_tiles, kw=conv["kw"], ct=conv["ct"], interleave=interleave
+        )
+    mi, ni, ki, wq, start, last, valid = append_empty_steps(q)
+    return types.SimpleNamespace(
+        flat_ak=mi * kt + ki,
+        valid=valid,
+        start=start,
+        cores=1,
+        core_steps=np.asarray([len(mi)], dtype=np.int64),
+        core_cost=np.asarray([int(bmask.sum())], dtype=np.int64),
+        grid_tiles=(m_tiles, kt, nt),
+        lookahead=0,
     )
 
 

@@ -139,12 +139,20 @@ class Recorder:
         )
 
     # -- readout -------------------------------------------------------------
-    def percentiles(self, name: str, qs=(50, 95, 99), **labels) -> dict[str, float]:
+    def percentiles(
+        self, name: str, qs=(50, 95, 99), **labels
+    ) -> dict[str, float] | None:
         """``{"p50": ..., "p95": ..., "p99": ...}`` over a histogram's
-        samples (nearest-rank on the sorted samples; exact for small n)."""
+        samples (nearest-rank on the sorted samples; exact for small n).
+
+        Returns ``None`` when the histogram has no samples (unknown name or
+        observed zero times) — readout code polls histograms that may simply
+        not have fired yet (a serve engine before its first request, a tuner
+        with an empty shortlist), and that is an absence, not an error.
+        """
         samples = sorted(self.hists.get(_key(name, labels), ()))
         if not samples:
-            raise KeyError(f"no samples for histogram {_key(name, labels)!r}")
+            return None
         n = len(samples)
         out = {}
         for q in qs:

@@ -137,6 +137,17 @@ class ConvKind:
     def mask_out(self, x, act_threshold):
         return (x > act_threshold).astype(x.dtype)
 
+    def tune_signature(self, spec: ConvSpec, batch: int) -> str:
+        """Tune-cache signature (DESIGN.md §12): the geometry that shapes
+        the candidate cost landscape — identically-shaped convs share
+        tunings regardless of their display names."""
+        oh, ow = spec.out_hw
+        return (
+            f"conv[{spec.in_ch}x{spec.in_h}x{spec.in_w}->{spec.out_ch}x{oh}x{ow}"
+            f",k{spec.kh}x{spec.kw},s{spec.stride[0]}x{spec.stride[1]}"
+            f"{',dw' if spec.depthwise else ''},pad={spec.pad}]@b{batch}"
+        )
+
     def tile_bits(self, x, plan, *, mask, act_threshold):
         """The [Mt, Kt] activation tile bits :meth:`apply` would gate on —
         recomputed host-visibly so :meth:`runtime_stats` can account the
@@ -204,6 +215,11 @@ class FCKind:
     def mask_out(self, x, act_threshold):
         return (x > act_threshold).astype(x.dtype)
 
+    def tune_signature(self, spec: FCSpec, batch: int) -> str:
+        """Tune-cache signature: the matmul shape alone — the inter-layer
+        pooling glue (``pool``) never changes this layer's own schedule."""
+        return f"fc[{spec.in_dim}->{spec.out_dim}]@b{batch}"
+
     def tile_bits(self, x, plan, *, mask, act_threshold):
         """See :meth:`ConvKind.tile_bits` — same contract for FC layers."""
         bm, bk, _ = plan.block
@@ -247,24 +263,46 @@ class LayerNode:
     ``activation`` is the epilogue the walk applies after ``kind.apply``
     (the last layer's logits stay linear — decided here, at compile time,
     by position in ``layers``, never by dict order).
+
+    ``cfg`` is this node's *effective* :class:`PhantomConfig` when it
+    differs from the program's base config (``None`` = use the base) — the
+    resolved form of the autotuner's / caller's per-layer override diff
+    (DESIGN.md §12).  ``prepare`` must lower with it, which is why it lives
+    on the node: the runtime walk and plan cache stay override-agnostic.
     """
 
     name: str
     spec: Any
     pre: tuple[str, ...]
     activation: str  # "relu" | "none"
+    cfg: Any = None  # PhantomConfig | None
 
 
-def build_nodes(layers) -> tuple[LayerNode, ...]:
+def build_nodes(layers, cfg=None, overrides=None) -> tuple[LayerNode, ...]:
     """Shape-walk the layer list once and emit the node sequence.
 
     All glue decisions (inter-conv max-pool, pool5, GAP, flatten) are made
     here from static spec geometry, so :func:`run_prepared` is a pure
     dispatch loop.  Raises at compile time on geometry the old forwards
     would only have crashed on at trace time.
+
+    ``overrides`` (``{layer name: partial PhantomConfig field dict}``)
+    resolves each named layer's effective config against the base ``cfg``
+    via :meth:`PhantomConfig.with_overrides`; an override naming a layer
+    not in ``layers`` is a compile-time error (a silently-ignored tuning
+    would defeat the never-worse guarantee).
     """
     if not layers:
         raise ValueError("cannot compile an empty layer list")
+    overrides = dict(overrides or {})
+    if overrides and cfg is None:
+        raise ValueError("build_nodes(overrides=...) requires the base cfg")
+    unknown = sorted(set(overrides) - {spec.name for spec in layers})
+    if unknown:
+        raise KeyError(
+            f"config override(s) for unknown layer(s) {unknown}; "
+            f"layers: {[spec.name for spec in layers]}"
+        )
     nodes = []
     spatial = isinstance(layers[0], ConvSpec)
     hw = layers[0].in_h if spatial else None
@@ -297,12 +335,14 @@ def build_nodes(layers) -> tuple[LayerNode, ...]:
                     pre.append("flatten")
                 spatial = False
             activation = "relu" if i < last else "none"
+        ov = overrides.get(spec.name)
         nodes.append(
             LayerNode(
                 name=spec.name,
                 spec=spec,
                 pre=tuple(pre),
                 activation=activation,
+                cfg=cfg.with_overrides(**ov) if ov else None,
             )
         )
     return tuple(nodes)

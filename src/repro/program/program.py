@@ -60,12 +60,20 @@ class PhantomProgram:
         params,
         cfg: PhantomConfig | None = None,
         *,
+        overrides: dict | None = None,
         recorder=None,
     ):
         self.layers = list(layers)
         self.cfg = cfg or SERVE_DEFAULT
         self.params = params
-        self.nodes = build_nodes(self.layers)
+        #: per-layer partial PhantomConfig diffs (``{layer name: {field:
+        #: value}}``, DESIGN.md §12) — the autotuner's output, or explicit
+        #: caller tunings.  Normalised (block lists → tuples, empty diffs
+        #: dropped), validated against the layer list and the config's field
+        #: set, and serialised by :meth:`save` so a loaded program lowers
+        #: new batch sizes with the same per-layer configs.
+        self.overrides = _normalize_overrides(overrides, self.layers, self.cfg)
+        self.nodes = build_nodes(self.layers, cfg=self.cfg, overrides=self.overrides)
         self._plans: dict[int, dict] = {}  # batch -> {layer name: plan}
         #: number of weight-load-time lowerings actually performed by this
         #: object (cache hits and checkpoint loads do not count).
@@ -95,7 +103,8 @@ class PhantomProgram:
             with cm:
                 self._plans[batch] = {
                     node.name: kind_for(node.spec).prepare(
-                        node.spec, self.params[node.name], batch, self.cfg
+                        node.spec, self.params[node.name], batch,
+                        node.cfg or self.cfg,
                     )
                     for node in self.nodes
                 }
@@ -124,6 +133,15 @@ class PhantomProgram:
     @property
     def batch_sizes(self) -> tuple[int, ...]:
         return tuple(sorted(self._plans))
+
+    def effective_cfg(self, name: str) -> PhantomConfig:
+        """The config layer ``name`` actually lowers with: the base config
+        plus that layer's override diff, if any."""
+        for node in self.nodes:
+            if node.name == name:
+                return node.cfg or self.cfg
+        raise KeyError(f"no layer named {name!r}; layers: "
+                       f"{[n.name for n in self.nodes]}")
 
     # -- execution -----------------------------------------------------------
     def __call__(
@@ -223,6 +241,8 @@ class PhantomProgram:
             node.name: kind_for(node.spec).stats(prepared[node.name], node.spec, batch)
             for node in self.nodes
         }
+        for name, ov in self.overrides.items():
+            out[name]["override"] = dict(ov)
         if sample is not None:
             if sample.shape[0] != batch:
                 raise ValueError(
@@ -265,7 +285,8 @@ class PhantomProgram:
         }
         meta = {
             "format": _FORMAT_VERSION,
-            "cfg": dataclasses.asdict(self.cfg),
+            "cfg": serialize.pack_config(self.cfg),
+            "overrides": {k: dict(v) for k, v in self.overrides.items()},
             "layers": [
                 {"type": type(l).__name__, "fields": dataclasses.asdict(l)}
                 for l in self.layers
@@ -283,9 +304,7 @@ class PhantomProgram:
         arrays, meta = CheckpointManager(path).restore_flat()
         if meta.get("format") != _FORMAT_VERSION:
             raise ValueError(f"unsupported program format: {meta.get('format')!r}")
-        cfg_d = dict(meta["cfg"])
-        cfg_d["block"] = tuple(cfg_d["block"])
-        cfg = PhantomConfig(**cfg_d)
+        cfg = serialize.unpack_config(meta["cfg"])
         layers = [
             _build_spec(spec_class(entry["type"]), entry["fields"])
             for entry in meta["layers"]
@@ -297,13 +316,43 @@ class PhantomProgram:
             for p in parts[:-1]:
                 tree = tree.setdefault(p, {})
             tree[parts[-1]] = jnp.asarray(serialize.unpack(node, arrays))
-        prog = cls(layers, params, cfg)
+        prog = cls(layers, params, cfg, overrides=meta.get("overrides"))
         for b_str, per_layer in meta["plans"].items():
             prog._plans[int(b_str)] = {
                 name: serialize.unpack(node, arrays) for name, node in per_layer.items()
             }
         prog.lowerings = 0
         return prog
+
+
+def _normalize_overrides(overrides, layers, cfg: PhantomConfig) -> dict:
+    """Validated, normalised per-layer override diffs.
+
+    Every diff must name a real layer and only real :class:`PhantomConfig`
+    fields (checked by resolving it through ``with_overrides``); ``block``
+    lists from JSON become tuples so a save→load round trip is
+    value-identical; empty diffs are dropped.  Stored sorted by layer name
+    so two programs with the same tunings serialise identically regardless
+    of how the dict was assembled.
+    """
+    if not overrides:
+        return {}
+    names = {spec.name for spec in layers}
+    unknown = sorted(set(overrides) - names)
+    if unknown:
+        raise KeyError(
+            f"config override(s) for unknown layer(s) {unknown}; "
+            f"layers: {sorted(names)}"
+        )
+    out: dict[str, dict] = {}
+    for name in sorted(overrides):
+        ov = dict(overrides[name])
+        cfg.with_overrides(**ov)  # raises on unknown/invalid fields
+        if ov.get("block") is not None and "block" in ov:
+            ov["block"] = tuple(ov["block"])
+        if ov:
+            out[name] = ov
+    return out
 
 
 def _wants_tuple(hint) -> bool:
@@ -342,6 +391,9 @@ def compile(
     *,
     batch: int | tuple[int, ...] = 1,
     recorder=None,
+    overrides: dict | None = None,
+    tune: str = "off",
+    tune_cache=None,
 ) -> PhantomProgram:
     """Compile a network onto the Phantom core: one weight-load-time pass
     per batch size, reused for every inference.
@@ -356,8 +408,54 @@ def compile(
     :class:`repro.obs.Recorder` metrics sink — lowering, per-call and
     per-layer timing land there (DESIGN.md §11; never serialised by
     :meth:`PhantomProgram.save`).
+
+    Autotuning (DESIGN.md §12): ``overrides`` is an explicit per-layer
+    partial-config dict (``{layer name: {field: value}}``); ``tune`` selects
+    the :mod:`repro.tune` integration —
+
+    * ``"off"``   (default) — no tuner involvement;
+    * ``"cached"`` — consult the persistent tune cache only; cache misses
+      fall back to the base config and **zero searches run** (asserted by
+      CI on ``TuneCache.searches``), so compile latency stays flat;
+    * ``"search"`` — cache misses trigger the cost-model search and the
+      winners are persisted for the next compile.
+
+    ``tune_cache`` is a :class:`repro.tune.TuneCache` instance (lets callers
+    inspect hit/search counters) or a path for one (default
+    ``checkpoint/tune_cache.json``).  Tuning keys off the *first* batch
+    size; explicit ``overrides`` win over tuned ones per layer.
     """
-    prog = PhantomProgram(layers, params, cfg, recorder=recorder)
+    if tune not in ("off", "cached", "search"):
+        raise ValueError(
+            f"tune must be 'off', 'cached' or 'search', got {tune!r}"
+        )
+    cfg = cfg or SERVE_DEFAULT
+    merged = dict(overrides or {})
+    if tune != "off":
+        # Deferred import: the program layer must stay importable (and
+        # cycle-free) without the tuner, and vice versa.
+        from repro.tune import TuneCache, tune_overrides
+        if isinstance(tune_cache, TuneCache):
+            cache = tune_cache
+        elif tune_cache is None:
+            cache = TuneCache()
+        else:
+            cache = TuneCache(tune_cache)
+        first_batch = batch if isinstance(batch, int) else tuple(batch)[0]
+        tuned = tune_overrides(
+            layers,
+            params,
+            first_batch,
+            cfg,
+            cache=cache,
+            mode="cached" if tune == "cached" else "search",
+            recorder=recorder,
+        )
+        for name, ov in tuned.items():
+            merged.setdefault(name, ov)
+    prog = PhantomProgram(
+        layers, params, cfg, overrides=merged, recorder=recorder
+    )
     for b in (batch,) if isinstance(batch, int) else tuple(batch):
         prog.at_batch(b)
     return prog

@@ -17,6 +17,13 @@ methods, all shape-static — so adding a new Phantom-eligible layer family
 * ``stats(plan, spec, batch) -> dict`` — steps / density / valid_macs for
   the engine↔simulator consistency contract (DESIGN.md §5).
 
+Kinds may additionally define ``tune_signature(spec, batch) -> str``
+(optional, DESIGN.md §12): the geometry part of the autotuner's cache key.
+Defining it lets identically-shaped layers share cached tunings regardless
+of display-name / cosmetic spec fields; kinds without it fall back to the
+spec's full dataclass-field dump (always correct, occasionally
+over-specific).
+
 Registration is keyed by the spec *type* (e.g.
 :class:`repro.core.dataflow.ConvSpec`); the class-name index lets
 :meth:`PhantomProgram.load` reconstruct specs in a fresh process.  Spec

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["pack", "unpack", "register_plan_class"]
+__all__ = ["pack", "unpack", "pack_config", "unpack_config", "register_plan_class"]
 
 _PLAN_CLASSES: dict[str, type] = {}
 
@@ -37,6 +37,28 @@ def _register_builtins():
 
     for cls in (PhantomWeight, PhantomConvWeight, DirectConvPlan):
         register_plan_class(cls)
+
+
+def pack_config(cfg) -> dict:
+    """:class:`~repro.core.phantom_linear.PhantomConfig` → JSON-able dict.
+
+    JSON turns the ``block`` tuple into a list; :func:`unpack_config` is the
+    inverse that restores it, so configs — and the per-node override diffs
+    ``PhantomProgram`` saves next to them — round-trip with equal types.
+    """
+    return dataclasses.asdict(cfg)
+
+
+def unpack_config(d: dict):
+    """Inverse of :func:`pack_config` (also accepts partial override dicts
+    via ``PhantomConfig.with_overrides`` at the call site — this function is
+    only for full configs)."""
+    from repro.core.phantom_linear import PhantomConfig
+
+    d = dict(d)
+    if d.get("block") is not None:
+        d["block"] = tuple(d["block"])
+    return PhantomConfig(**d)
 
 
 def pack(obj, path: str, arrays: dict, memo: dict | None = None) -> dict:

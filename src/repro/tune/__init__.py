@@ -1,0 +1,50 @@
+"""Autotuning subsystem (DESIGN.md §12): per-layer PhantomConfig search.
+
+One layer, one best config: the global :class:`~repro.core.phantom_linear.
+PhantomConfig` a network compiles under is rarely optimal for *every* layer
+— a skewed-density conv wants more cores and inter-core balancing, a tiny FC
+wants one core and zero lookahead.  This package searches the scheduling
+knobs (``cores`` / ``balance`` / ``conv_mode`` / ``lookahead`` / ``block``)
+per layer:
+
+* :mod:`repro.tune.space`  — candidate enumeration + structural pruning;
+* :mod:`repro.tune.cost`   — the analytic TDS/makespan cost model that
+  rejects most candidates without compiling anything;
+* :mod:`repro.tune.search` — the engine: cost phase, optional measured
+  shortlist on the real kernel path, never worse than the default;
+* :mod:`repro.tune.cache`  — the persistent, versioned result cache that
+  makes search a once-per-fleet cost.
+
+Entry points: ``phantom.compile(..., tune="cached"|"search")`` for
+programs, ``python -m repro.tune`` for the end-to-end CLI.
+"""
+from .cache import (
+    TUNE_SCHEMA,
+    TuneCache,
+    backend_fingerprint,
+    density_bucket,
+    layer_signature,
+)
+from .cost import candidate_cost, eligible, layer_grid, synth_act_bits
+from .search import Trial, TuneResult, search_layer, tune_overrides
+from .space import BENCH_SPACE, DEFAULT_SPACE, SearchSpace, candidates
+
+__all__ = [
+    "TUNE_SCHEMA",
+    "TuneCache",
+    "backend_fingerprint",
+    "density_bucket",
+    "layer_signature",
+    "candidate_cost",
+    "eligible",
+    "layer_grid",
+    "synth_act_bits",
+    "Trial",
+    "TuneResult",
+    "search_layer",
+    "tune_overrides",
+    "BENCH_SPACE",
+    "DEFAULT_SPACE",
+    "SearchSpace",
+    "candidates",
+]

@@ -1,0 +1,221 @@
+"""Persistent tuning cache: per-layer config overrides, keyed and versioned.
+
+The search phase (:mod:`repro.tune.search`) is the expensive part of
+autotuning — the cache makes it a once-per-fleet cost, exactly like the
+program checkpoint makes lowering one (DESIGN.md §8/§12).  One JSON file
+(default ``checkpoint/tune_cache.json``) holds ``{key: entry}`` where
+
+* **key** = ``layer signature ⊕ density bucket ⊕ backend fingerprint``:
+
+  - the *layer signature* captures everything that changes the candidate
+    cost landscape at weight-load time: spec type + geometry fields, the
+    batch size (queues bake in the M-tile count), and the non-searched base
+    config knobs (block/dtype/act_threshold/...);
+  - the *density bucket* coarsens the measured weight element density to a
+    fixed grid so retrained weights at similar sparsity reuse each other's
+    tunings, while a density shift big enough to change the best schedule
+    lands in a new bucket (a miss, not a stale hit);
+  - the *backend fingerprint* (platform + device kind + jax version) scopes
+    measured-phase results to the hardware they were measured on.
+
+* **entry** = the winning override fields (partial ``PhantomConfig`` diff,
+  JSON-able) plus the cost-model metrics it won with.
+
+**Invalidation**: the file stamps ``schema = TUNE_SCHEMA``; a bump discards
+every entry at load (counted in :attr:`TuneCache.invalidations`).  Key
+mismatches (density bucket moved, different backend, different geometry)
+are ordinary misses.  Writes are atomic (tmp + ``os.replace``), mirroring
+the checkpoint writer's crash-safety contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+__all__ = [
+    "TUNE_SCHEMA",
+    "TuneCache",
+    "backend_fingerprint",
+    "density_bucket",
+    "layer_signature",
+]
+
+#: Bump on any change to the entry layout, the cost model's metrics, or the
+#: candidate space semantics — cached winners from an older scheme must be
+#: re-searched, not trusted.
+TUNE_SCHEMA = 1
+
+#: Weight element-density bucket edges: an entry tuned at density d is reused
+#: for any density in the same half-open bucket [lo, hi).
+DENSITY_EDGES = (0.0, 0.05, 0.1, 0.2, 0.3, 0.45, 0.6, 0.8, 1.01)
+
+
+def backend_fingerprint() -> str:
+    """``platform:device_kind:jax<version>`` — the hardware scope of
+    measured-phase results (cost-model metrics are machine-independent, but
+    the shortlist measurement is not)."""
+    import jax
+
+    dev = jax.devices()[0]
+    return f"{jax.default_backend()}:{dev.device_kind}:jax{jax.__version__}"
+
+
+def density_bucket(density: float) -> str:
+    """The half-open bucket ``[lo, hi)`` containing ``density``, as a stable
+    string key component (e.g. ``d0.20-0.30``)."""
+    d = float(density)
+    for lo, hi in zip(DENSITY_EDGES, DENSITY_EDGES[1:]):
+        if lo <= d < hi:
+            return f"d{lo:g}-{hi:g}"
+    return f"d{DENSITY_EDGES[-2]:g}-{DENSITY_EDGES[-1]:g}"
+
+
+#: Base-config fields that are *searched* — excluded from the signature so a
+#: cache entry keyed under one base config is found again regardless of which
+#: searched values the base happened to hold.
+_SEARCHED_FIELDS = ("cores", "balance", "conv_mode", "lookahead", "block")
+
+
+def layer_signature(spec, batch: int, base_cfg) -> str:
+    """Deterministic signature of (layer geometry, batch, non-searched base
+    knobs).  Layer kinds may refine it by defining ``tune_signature(spec,
+    batch)`` (see :mod:`repro.program.registry`); the fallback is the spec's
+    dataclass fields minus its display name, so two identically-shaped
+    layers share tunings."""
+    sig = None
+    try:  # registry import is optional: the cache works on bare specs too
+        from repro.program.registry import kind_for
+
+        kind = kind_for(spec)
+        ts = getattr(kind, "tune_signature", None)
+        if ts is not None:
+            sig = ts(spec, batch)
+    except Exception:
+        sig = None
+    if sig is None:
+        fields = {
+            f.name: getattr(spec, f.name)
+            for f in dataclasses.fields(spec)
+            if f.name != "name"
+        }
+        parts = [f"{k}={fields[k]}" for k in sorted(fields)]
+        sig = f"{type(spec).__name__}({','.join(parts)})@b{batch}"
+    base = ";".join(
+        f"{f.name}={getattr(base_cfg, f.name)}"
+        for f in dataclasses.fields(base_cfg)
+        if f.name not in _SEARCHED_FIELDS
+    )
+    return f"{sig}|{base}"
+
+
+class TuneCache:
+    """The persistent per-layer tuning cache (see module docstring).
+
+    Counters (``hits`` / ``misses`` / ``searches`` / ``invalidations``) are
+    per-instance and cumulative — the zero-re-search acceptance check
+    (``compile(tune="cached")`` on a warm cache ⇒ ``searches == 0``) asserts
+    directly on them.
+    """
+
+    def __init__(
+        self,
+        path: str = "checkpoint/tune_cache.json",
+        *,
+        schema: int = TUNE_SCHEMA,
+        backend: str | None = None,
+    ):
+        self.path = str(path)
+        self.schema = int(schema)
+        self.backend = backend_fingerprint() if backend is None else str(backend)
+        self.hits = 0
+        self.misses = 0
+        self.searches = 0
+        self.invalidations = 0
+        self._entries: dict[str, dict] = {}
+        self._load()
+
+    # -- persistence ---------------------------------------------------------
+    def _load(self) -> None:
+        if not os.path.exists(self.path):
+            return
+        try:
+            data = json.loads(open(self.path).read())
+        except (OSError, json.JSONDecodeError):
+            self.invalidations += 1  # unreadable file == schema-invalid file
+            return
+        if not isinstance(data, dict) or data.get("schema") != self.schema:
+            # Schema bump: every entry was produced under different
+            # semantics — drop them all (the file is rewritten on next save).
+            self.invalidations += 1
+            return
+        self._entries = dict(data.get("entries", {}))
+
+    def save(self) -> str:
+        """Atomically persist the cache (tmp + rename; never half-written)."""
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(
+                {"schema": self.schema, "entries": self._entries},
+                f,
+                indent=2,
+                sort_keys=True,
+            )
+            f.write("\n")
+        os.replace(tmp, self.path)
+        return self.path
+
+    # -- keys ----------------------------------------------------------------
+    def key_for(self, spec, batch: int, base_cfg, *, w_density: float) -> str:
+        """The full cache key: signature ⊕ density bucket ⊕ backend."""
+        return "|".join(
+            (
+                layer_signature(spec, batch, base_cfg),
+                density_bucket(w_density),
+                self.backend,
+            )
+        )
+
+    @staticmethod
+    def weight_density(w) -> float:
+        """Element density of a weight tensor — the quantity bucketed into
+        the key (block density depends on the searched block size, so it
+        cannot key the cache)."""
+        w = np.asarray(w)
+        return float(np.count_nonzero(w)) / max(1, w.size)
+
+    # -- lookup / store ------------------------------------------------------
+    def get(self, key: str) -> dict | None:
+        """The cached entry for ``key`` (``{"override": ..., ...}``), or
+        ``None`` on a miss.  Counts hits/misses."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        return entry
+
+    def put(self, key: str, override: dict, **info) -> dict:
+        """Store a search winner.  ``override`` is the partial PhantomConfig
+        field diff; ``info`` (costs, measured µs, ...) rides along for
+        reporting.  Not persisted until :meth:`save`."""
+        entry = {"override": dict(override), **info}
+        self._entries[key] = entry
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def counters(self) -> dict:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "searches": self.searches,
+            "invalidations": self.invalidations,
+            "entries": len(self._entries),
+        }

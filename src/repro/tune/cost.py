@@ -1,0 +1,175 @@
+"""Analytic cost model: score a candidate config without touching the kernel.
+
+The pre-filter of the search engine (DESIGN.md §12).  For one layer and one
+candidate :class:`~repro.core.phantom_linear.PhantomConfig` it predicts the
+deterministic schedule metrics the runtime would exhibit:
+
+* ``queue_steps``     — padded per-core queue length (the gated grid bound);
+* ``executed_makespan`` — grid steps actually executed per §4.6 lock-step
+  slot: per-core max of the §3.4 TDS cycle count under the layer's
+  activation tile bits (``lookahead`` compaction included via
+  :func:`repro.core.tds.batch_cycles`);
+* ``work_makespan``   — per-core max MAC-block work, the §4.2 balance metric
+  (:func:`repro.core.balance.inter_core_schedule` on the per-column costs);
+* ``weight_bytes``    — packed payload HBM traffic;
+* ``cost``            — the scalar the search minimises:
+  ``executed_makespan × macs-per-grid-step``.  Normalising by the per-step
+  MAC volume makes candidates with *different* block sizes / conv lowerings
+  comparable (a smaller tile needs more steps, each moving less work).
+
+Exactness: the queue construction is shared with the real weight-load path
+(:func:`repro.kernels.ops.cost_artifact` calls the same builders
+``prepare_weight`` / ``_prepare_direct`` use), so for a fixed block size the
+predicted step counts equal the prepared plan's — which is what lets the
+tuner guarantee "never worse than the default" on these metrics: the
+default config is always in the candidate set and the winner is the argmin.
+
+Activation bits: callers pass the real tile bits of a calibration batch
+(``act_bits``) when they have one; otherwise a deterministic low-discrepancy
+pattern at ``act_density`` stands in (same pattern for every candidate, so
+the comparison stays apples-to-apples).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core import balance as cbalance
+from repro.core import blocksparse as bs
+from repro.core.dataflow import ConvSpec, FCSpec
+from repro.kernels import ops, phantom_conv
+
+__all__ = ["layer_grid", "synth_act_bits", "candidate_cost", "eligible"]
+
+
+def eligible(spec) -> bool:
+    """Whether the cost model understands this spec type (Conv/FC today —
+    a new layer kind opts in by subclassing either spec or extending
+    :func:`layer_grid`)."""
+    return isinstance(spec, (ConvSpec, FCSpec))
+
+
+def layer_grid(spec, w: np.ndarray, batch: int, cfg):
+    """The (bmask, m_tiles, conv, macs_per_step) grid a config induces.
+
+    Mirrors the real lowerings exactly: FC and im2col conv tile M by
+    ``cfg.block[0]``; direct conv tiles M per output row (one ``[ow, bk]``
+    gather per step), with the weight tap-aligned so no k-tile straddles a
+    filter tap.  ``conv`` is the ``{"kw", "ct"}`` dict the direct-conv queue
+    builder needs (``None`` for matmul-shaped queues).
+    """
+    bm, bk, bn = cfg.block
+    w = np.asarray(w)
+    if isinstance(spec, FCSpec):
+        bmask = bs.block_mask_from_dense(w, (bk, bn)).mask
+        mt = math.ceil(batch / bm)
+        return bmask, mt, None, bm * bk * bn
+    if not isinstance(spec, ConvSpec):
+        raise TypeError(f"cost model does not understand {type(spec).__name__}")
+    groups = spec.in_ch if spec.depthwise else 1
+    kh, kw = spec.kh, spec.kw
+    cin = spec.in_ch
+    oh, ow = spec.out_hw
+    w2d = (
+        w.reshape(kh * kw * cin, spec.out_ch)
+        if groups == 1
+        else phantom_conv.grouped_weight_matrix(w, groups)
+    )
+    if cfg.conv_mode == "direct":
+        ct = math.ceil(cin / bk)
+        cp = ct * bk
+        w3 = np.zeros((kh * kw, cp, spec.out_ch), dtype=w2d.dtype)
+        w3[:, :cin] = w2d.reshape(kh * kw, cin, spec.out_ch)
+        bmask = bs.block_mask_from_dense(w3.reshape(kh * kw * cp, spec.out_ch), (bk, bn)).mask
+        return bmask, batch * oh, {"kw": kw, "ct": ct}, ow * bk * bn
+    bmask = bs.block_mask_from_dense(w2d, (bk, bn)).mask
+    mt = math.ceil(batch * oh * ow / bm)
+    return bmask, mt, None, bm * bk * bn
+
+
+def synth_act_bits(m_tiles: int, k_tiles: int, density: float) -> np.ndarray:
+    """Deterministic int32 [Mt, Kt] tile bits at ≈``density`` live tiles.
+
+    Golden-ratio low-discrepancy over the flat (mi, ki) index: live tiles
+    spread uniformly, the same pattern for every candidate at the same grid
+    shape, no RNG state.  ``density >= 1`` short-circuits to all-live (the
+    conservative default when no calibration sample exists).
+    """
+    d = float(density)
+    n = m_tiles * k_tiles
+    if d >= 1.0:
+        return np.ones((m_tiles, k_tiles), dtype=np.int32)
+    phase = (np.arange(n, dtype=np.float64) * 0.6180339887498949) % 1.0
+    return (phase < d).astype(np.int32).reshape(m_tiles, k_tiles)
+
+
+def candidate_cost(
+    spec,
+    w: np.ndarray,
+    batch: int,
+    cfg,
+    *,
+    act_bits: np.ndarray | None = None,
+    act_density: float = 1.0,
+) -> dict:
+    """Deterministic schedule metrics for running ``spec`` under ``cfg``.
+
+    ``act_bits`` (int [Mt, Kt] for *this candidate's* grid) overrides the
+    synthetic pattern — only usable when every candidate shares the grid
+    shape (fixed block + conv_mode); the search engine enforces that.
+    """
+    bmask, mt, conv, macs_per_step = layer_grid(spec, w, batch, cfg)
+    kt, nt = bmask.shape
+    cores = max(1, int(cfg.cores))
+    if cores > nt:
+        raise ValueError(
+            f"{cores} cores over {nt} output tile-columns: empty cores are "
+            f"pure overhead (prune this candidate upstream)"
+        )
+    la = int(cfg.lookahead or 0)
+    art = ops.cost_artifact(
+        bmask,
+        mt,
+        cores=cores,
+        balance=cfg.balance,
+        interleave=cfg.interleave,
+        conv=conv,
+    )
+    bits = (
+        synth_act_bits(mt, kt, act_density)
+        if act_bits is None
+        else np.asarray(act_bits, dtype=np.int32)
+    )
+    if bits.shape != (mt, kt):
+        raise ValueError(
+            f"act_bits shape {bits.shape} does not match this candidate's "
+            f"grid ({mt}, {kt}) — calibration bits only transfer between "
+            f"candidates sharing block/conv_mode"
+        )
+    st = ops.lookahead_stats(art, bits, lookahead=la)
+    # §4.2 work makespan on the same per-column block costs the partitioner
+    # sees; capacity-capped like partition_columns so the two agree.
+    col_cost = bmask.sum(axis=0).astype(np.float64)
+    if cores > 1:
+        sched = cbalance.inter_core_schedule(
+            col_cost,
+            cores,
+            balanced=cfg.balance in ("inter", "full"),
+            capacity=math.ceil(nt / cores),
+        )
+        work_makespan = int(sched.makespan) * mt
+    else:
+        work_makespan = int(col_cost.sum()) * mt
+    bk, bn = cfg.block[1], cfg.block[2]
+    itemsize = np.dtype(cfg.dtype).itemsize
+    return {
+        "queue_steps": int(st["queue_steps"]),
+        "executed_makespan": int(st["executed_steps"]),
+        "work_makespan": int(work_makespan),
+        "utilization": float(st["utilization"]),
+        "weight_bytes": int(bmask.sum()) * bk * bn * itemsize,
+        "macs_per_step": int(macs_per_step),
+        "cores": cores,
+        "cost": float(st["executed_steps"]) * float(macs_per_step),
+    }

@@ -1,0 +1,268 @@
+"""The per-layer config search engine (DESIGN.md §12).
+
+Two-phase, cheap-first:
+
+1. **Cost phase** — every candidate from :mod:`repro.tune.space` is scored
+   by the analytic TDS/makespan model (:mod:`repro.tune.cost`): pure
+   host-side queue construction, no kernel compile, no device work.  The
+   candidates are ranked by ``(cost, work_makespan, weight_bytes,
+   cores, lookahead)`` — minimise the executed-makespan MAC volume first,
+   then prefer less total work, less HBM traffic, and the simpler config.
+2. **Measured phase** (optional, ``measure > 0``) — the top ``measure``
+   candidates *that are not cost-worse than the default* are prepared on
+   the real kernel path and timed with :func:`repro.obs.timeit` on a seeded
+   input; the fastest measured candidate wins.  Restricting the shortlist
+   to cost-ties-or-better keeps the deterministic never-worse guarantee
+   even when wall time disagrees with the model.
+
+``tune_overrides`` is the cache-integrated network-level entry point that
+``phantom.compile(tune=...)`` consumes; it performs **zero** searches in
+``"cached"`` mode (misses fall back to the base config), which the CI smoke
+and the tune tests assert via the :class:`~repro.tune.cache.TuneCache`
+counters.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import numpy as np
+
+from repro.core.phantom_linear import PhantomConfig
+
+from . import cost as cost_mod
+from .cache import TuneCache
+from .space import DEFAULT_SPACE, SearchSpace, candidates
+
+__all__ = ["Trial", "TuneResult", "search_layer", "tune_overrides"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    """One costed candidate: the override diff + its deterministic metrics
+    (+ measured wall µs when the measured phase ran it)."""
+
+    override: dict
+    metrics: dict
+    measured_us: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one layer's search."""
+
+    name: str
+    override: dict  # winning partial-config diff ({} = keep the default)
+    best: dict  # winner's cost metrics
+    default: dict  # base config's cost metrics
+    trials: tuple[Trial, ...]
+
+    @property
+    def cost_improvement(self) -> float:
+        """default cost / tuned cost (≥ 1.0 by construction)."""
+        return self.default["cost"] / self.best["cost"] if self.best["cost"] else 1.0
+
+
+def _rank_key(trial: Trial, base_cfg):
+    m = trial.metrics
+    eff = base_cfg.with_overrides(**trial.override)
+    return (
+        m["cost"],
+        m["work_makespan"],
+        m["weight_bytes"],
+        eff.cores,
+        int(eff.lookahead or 0),
+    )
+
+
+def _measure_candidate(spec, params, batch, cfg, *, reps, interpret):
+    """Wall-time one candidate on the real kernel path (registry prepare +
+    apply on a seeded input) — the expensive signal, shortlist only."""
+    import jax.numpy as jnp
+
+    from repro.obs import timeit
+    from repro.program.registry import kind_for
+
+    kind = kind_for(spec)
+    plan = kind.prepare(spec, params, batch, cfg)
+    rng = np.random.default_rng(0)
+    shape = (
+        (batch, spec.in_h, spec.in_w, spec.in_ch)
+        if hasattr(spec, "in_h")
+        else (batch, spec.in_dim)
+    )
+    x = jnp.asarray(np.maximum(rng.standard_normal(shape), 0).astype(np.float32))
+    _, us = timeit(
+        lambda: kind.apply(
+            x, plan, params, mask=None,
+            act_threshold=cfg.act_threshold, interpret=interpret,
+        ),
+        reps=reps,
+        warmup=1,
+    )
+    return us
+
+
+def search_layer(
+    spec,
+    params: dict,
+    batch: int,
+    base_cfg: PhantomConfig,
+    *,
+    space: SearchSpace = DEFAULT_SPACE,
+    act_bits: np.ndarray | None = None,
+    act_density: float = 1.0,
+    measure: int = 0,
+    measure_reps: int = 3,
+    interpret: bool | None = None,
+    recorder=None,
+) -> TuneResult:
+    """Search one layer's candidate space; returns the winning override.
+
+    ``act_bits`` (real calibration tile bits, base-grid-shaped) is only
+    consulted for candidates sharing the base grid (block + conv_mode);
+    other candidates fall back to the deterministic ``act_density`` pattern.
+    ``measure`` > 0 wall-times that many cost-shortlisted candidates on the
+    real kernel path.  ``recorder`` receives one ``tune/trial`` span per
+    costed candidate plus per-layer best/default cost gauges.
+    """
+    w = np.asarray(params["w"])
+    trials: list[Trial] = []
+    base_grid = (tuple(base_cfg.block), base_cfg.conv_mode)
+    for i, ov in enumerate(candidates(spec, base_cfg, space)):
+        cfg = base_cfg.with_overrides(**ov)
+        cm = (
+            recorder.span("tune/trial", layer=spec.name, candidate=i)
+            if recorder is not None
+            else contextlib.nullcontext()
+        )
+        with cm:
+            bits = (
+                act_bits
+                if act_bits is not None
+                and (tuple(cfg.block), cfg.conv_mode) == base_grid
+                else None
+            )
+            m = cost_mod.candidate_cost(
+                spec, w, batch, cfg, act_bits=bits, act_density=act_density
+            )
+        trials.append(Trial(override=ov, metrics=m))
+        if recorder is not None:
+            recorder.inc("tune/trials")
+    default = trials[0].metrics  # candidate 0 is always the base config
+    ranked = sorted(trials, key=lambda t: _rank_key(t, base_cfg))
+    if measure > 0:
+        # Shortlist: cost-model winners that are ties-or-better than the
+        # default — measurement picks among them, so it can refine but never
+        # break the deterministic never-worse guarantee.
+        short = [t for t in ranked if t.metrics["cost"] <= default["cost"]][:measure]
+        measured: list[Trial] = []
+        for t in short:
+            cfg = base_cfg.with_overrides(**t.override)
+            us = _measure_candidate(
+                spec, params, batch, cfg, reps=measure_reps, interpret=interpret
+            )
+            measured.append(dataclasses.replace(t, measured_us=us))
+            if recorder is not None:
+                recorder.inc("tune/measured")
+                recorder.observe("tune/measured_us", us, layer=spec.name)
+        best = min(measured, key=lambda t: (t.measured_us, _rank_key(t, base_cfg)))
+        trials = [t for t in ranked if t not in short] + measured
+    else:
+        best = ranked[0]
+    if recorder is not None:
+        recorder.gauge("tune/default_cost", default["cost"], layer=spec.name)
+        recorder.gauge("tune/best_cost", best.metrics["cost"], layer=spec.name)
+    return TuneResult(
+        name=spec.name,
+        override=dict(best.override),
+        best=best.metrics,
+        default=default,
+        trials=tuple(trials),
+    )
+
+
+def tune_overrides(
+    layers,
+    params,
+    batch: int,
+    base_cfg: PhantomConfig,
+    *,
+    cache: TuneCache,
+    mode: str = "search",
+    space: SearchSpace = DEFAULT_SPACE,
+    act_density=None,
+    measure: int = 0,
+    interpret: bool | None = None,
+    recorder=None,
+    results: list | None = None,
+) -> dict[str, dict]:
+    """Per-layer overrides for a network, through the persistent cache.
+
+    ``mode="cached"``: lookups only — a miss falls back to the base config
+    and no search runs (``cache.searches`` stays 0).  ``mode="search"``:
+    misses trigger :func:`search_layer` and the winners are persisted.
+    ``act_density`` is a per-layer-name dict (or one float) of expected
+    activation tile density for the cost model's synthetic bits.
+    ``results`` (a list, appended in place) collects per-layer
+    :class:`TuneResult`/cache-entry reports for CLI tables.
+    """
+    if mode not in ("cached", "search"):
+        raise ValueError(f"tune mode must be 'cached' or 'search', got {mode!r}")
+    overrides: dict[str, dict] = {}
+    wrote = False
+    for spec in layers:
+        if not cost_mod.eligible(spec):
+            continue
+        w = params[spec.name]["w"]
+        key = cache.key_for(
+            spec, batch, base_cfg, w_density=TuneCache.weight_density(w)
+        )
+        entry = cache.get(key)
+        if entry is not None:
+            if entry["override"]:
+                overrides[spec.name] = dict(entry["override"])
+            if results is not None:
+                results.append({"name": spec.name, "source": "cache", **entry})
+            continue
+        if mode == "cached":
+            if recorder is not None:
+                recorder.inc("tune/cache_miss_fallback")
+            if results is not None:
+                results.append({"name": spec.name, "source": "miss", "override": {}})
+            continue
+        d = (
+            act_density.get(spec.name, 1.0)
+            if isinstance(act_density, dict)
+            else (1.0 if act_density is None else float(act_density))
+        )
+        res = search_layer(
+            spec,
+            params[spec.name],
+            batch,
+            base_cfg,
+            space=space,
+            act_density=d,
+            measure=measure,
+            interpret=interpret,
+            recorder=recorder,
+        )
+        cache.searches += 1
+        if recorder is not None:
+            recorder.inc("tune/searches")
+        cache.put(
+            key,
+            res.override,
+            cost=res.best["cost"],
+            default_cost=res.default["cost"],
+            executed_makespan=res.best["executed_makespan"],
+            default_executed_makespan=res.default["executed_makespan"],
+        )
+        wrote = True
+        if res.override:
+            overrides[spec.name] = res.override
+        if results is not None:
+            results.append({"name": spec.name, "source": "search", "result": res})
+    if wrote:
+        cache.save()
+    return overrides

@@ -1,0 +1,119 @@
+"""Candidate enumeration + pruning for the per-layer config search.
+
+The knob surface (DESIGN.md §12) is the scheduling subset of
+:class:`~repro.core.phantom_linear.PhantomConfig`: ``block`` (tile shape),
+``cores`` (virtual-core partition width), ``balance`` (partition policy),
+``conv_mode`` (lowering) and ``lookahead`` (runtime compaction window).
+Candidates are *partial field dicts* — the same representation the tune
+cache stores and ``PhantomProgram`` carries per node — resolved against the
+layer's base config with :meth:`PhantomConfig.with_overrides`.
+
+Pruning is structural, not heuristic: a candidate that cannot differ from
+another already-emitted candidate (``balance`` with one core, ``conv_mode``
+on an FC layer, more cores than output tile-columns) is dropped before
+costing, so the cost model only sees configurations that could actually win.
+The empty override ``{}`` — the base config itself — is always candidate 0:
+the search can therefore never return something worse than the default on
+the cost metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+
+from repro.core.dataflow import ConvSpec
+
+__all__ = ["SearchSpace", "DEFAULT_SPACE", "BENCH_SPACE", "candidates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpace:
+    """Value pools per searched knob.  ``None`` pools mean "keep the base
+    config's value" (the knob is not searched)."""
+
+    cores: tuple[int, ...] | None = (1, 2, 4)
+    balance: tuple[str, ...] | None = ("none", "full")
+    lookahead: tuple[int, ...] | None = (0, 8)
+    conv_mode: tuple[str, ...] | None = ("direct", "im2col")
+    #: Extra block shapes besides the base config's.  Off by default in the
+    #: bench space: cross-block costs compare normalised MAC volume rather
+    #: than raw step counts, so keep the deterministic step-count acceptance
+    #: comparisons single-block.
+    blocks: tuple[tuple[int, int, int], ...] | None = None
+
+
+DEFAULT_SPACE = SearchSpace()
+#: Single-grid space used by the kernel-bench acceptance row: every
+#: candidate shares the base block and lowering, so raw makespan / executed
+#: steps are directly comparable across candidates.
+BENCH_SPACE = SearchSpace(conv_mode=None, blocks=None)
+
+
+def _pool(space_val, base_val):
+    if space_val is None:
+        return (base_val,)
+    vals = list(space_val)
+    if base_val not in vals:
+        vals.insert(0, base_val)
+    return tuple(vals)
+
+
+def candidates(spec, base_cfg, space: SearchSpace = DEFAULT_SPACE) -> list[dict]:
+    """Enumerate pruned override dicts for ``spec`` under ``base_cfg``.
+
+    Always returns ``[{}, ...]`` — the base config first, then every
+    structurally-distinct variant.  Override dicts carry only the fields
+    that differ from the base, so cache entries stay readable and a saved
+    program's ``overrides`` metadata shows exactly what the tuner changed.
+    """
+    is_conv = isinstance(spec, ConvSpec)
+    pools = {
+        "cores": _pool(space.cores, base_cfg.cores),
+        "balance": _pool(space.balance, base_cfg.balance),
+        "lookahead": _pool(space.lookahead, int(base_cfg.lookahead or 0)),
+        "conv_mode": _pool(space.conv_mode if is_conv else None, base_cfg.conv_mode),
+        "block": _pool(
+            tuple(space.blocks) if space.blocks else None, tuple(base_cfg.block)
+        ),
+    }
+    base_key = (
+        base_cfg.cores,
+        base_cfg.balance,
+        int(base_cfg.lookahead or 0),
+        base_cfg.conv_mode,
+        tuple(base_cfg.block),
+    )
+    seen: set[tuple] = {base_key}
+    out: list[dict] = [{}]  # the base config is always candidate 0
+    for cores, bal, la, cm, blk in itertools.product(
+        pools["cores"], pools["balance"], pools["lookahead"],
+        pools["conv_mode"], pools["block"],
+    ):
+        nt = math.ceil((spec.out_ch if is_conv else spec.out_dim) / blk[2])
+        if cores > max(1, nt):
+            continue  # more cores than output tile-columns: empty cores
+        if cores == 1 and bal != base_cfg.balance:
+            # balance only affects the inter-core partition; with one core
+            # the only side effect (interleave gating) never changes step
+            # counts — identical cost, prune.
+            continue
+        resolved = (cores, bal if cores > 1 else base_cfg.balance, la, cm, blk)
+        if resolved in seen:
+            continue
+        seen.add(resolved)
+        ov: dict = {}
+        if cores != base_cfg.cores:
+            ov["cores"] = cores
+        if cores > 1 and bal != base_cfg.balance:
+            ov["balance"] = bal
+        if la != int(base_cfg.lookahead or 0):
+            ov["lookahead"] = la
+        if is_conv and cm != base_cfg.conv_mode:
+            ov["conv_mode"] = cm
+        if blk != tuple(base_cfg.block):
+            ov["block"] = blk
+        out.append(ov)
+    # Deterministic order with the base first: the search's sort is stable,
+    # so ties break toward earlier (simpler) candidates.
+    return out

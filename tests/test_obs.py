@@ -85,8 +85,18 @@ def test_percentiles_nearest_rank():
     assert p == {"p50": 50.0, "p95": 95.0, "p99": 99.0}
     rec.observe("one", 7.0)
     assert rec.percentiles("one") == {"p50": 7.0, "p95": 7.0, "p99": 7.0}
-    with pytest.raises(KeyError, match="no samples"):
-        rec.percentiles("missing")
+
+
+def test_percentiles_empty_histogram_returns_none():
+    # Absence is not an error: readout code polls histograms that may not
+    # have fired yet (serve engine before its first request).
+    rec = Recorder(clock=FakeClock())
+    assert rec.percentiles("missing") is None
+    rec.observe("lat", 1.0, engine="cnn")
+    assert rec.percentiles("lat") is None  # same name, different labels
+    assert rec.percentiles("lat", engine="cnn") == {
+        "p50": 1.0, "p95": 1.0, "p99": 1.0,
+    }
 
 
 def test_snapshot_to_json_and_clear(tmp_path):

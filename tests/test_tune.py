@@ -1,0 +1,347 @@
+"""Autotuning subsystem (DESIGN.md §12): search, cost model, cache, compile.
+
+The contracts under test:
+
+* **candidate space** — the base config is always candidate 0, overrides
+  are minimal diffs, structural pruning never drops a distinct schedule;
+* **cost model exactness** — predicted queue/executed steps equal the real
+  prepared plan's (same queue builders), which is what makes the
+  never-worse guarantee provable rather than statistical;
+* **cache keying** — hits on identical geometry, misses (not stale hits)
+  on density-bucket / backend changes, full invalidation on a schema bump;
+* **compile integration** — ``tune="cached"`` with a warm cache performs
+  zero searches and compiles *bit-identically* to passing the same
+  overrides explicitly; programs with overrides save/load/serve
+  bit-identically;
+* **never-worse acceptance** — on the skewed bench layer set the tuned
+  executed makespan is ≤ the default on every layer, < on at least one
+  (asserted inside ``kernel_bench.autotune_rows``, exercised here).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import phantom
+from repro.core.dataflow import ConvSpec, FCSpec
+from repro.core.phantom_linear import PhantomConfig
+from repro.core.sparsity import block_prune
+from repro.kernels import ops
+from repro.tune import (
+    BENCH_SPACE,
+    DEFAULT_SPACE,
+    TUNE_SCHEMA,
+    SearchSpace,
+    TuneCache,
+    candidate_cost,
+    candidates,
+    density_bucket,
+    search_layer,
+    synth_act_bits,
+    tune_overrides,
+)
+
+CFG = PhantomConfig(enabled=True, block=(16, 16, 16))
+SPEC = ConvSpec("c1", in_ch=16, out_ch=64, in_h=14, in_w=14, kh=3, kw=3)
+
+
+def pruned_w(shape, density, rng, block=(16, 16)):
+    w = rng.standard_normal(shape).astype(np.float32)
+    w2 = w.reshape(-1, shape[-1])
+    return (w2 * block_prune(w2, density, block)).reshape(shape)
+
+
+@pytest.fixture()
+def conv_params():
+    return {"w": pruned_w((3, 3, 16, 64), 0.3, np.random.default_rng(0))}
+
+
+# -- candidate space ----------------------------------------------------------
+
+
+def test_candidates_base_config_is_always_first():
+    for base in (CFG, CFG.with_overrides(cores=4, lookahead=8)):
+        cands = candidates(SPEC, base, DEFAULT_SPACE)
+        assert cands[0] == {}  # the never-worse anchor
+        assert len(cands) == len({json.dumps(c, sort_keys=True) for c in cands})
+
+
+def test_candidates_overrides_are_minimal_diffs():
+    base = CFG.with_overrides(cores=2)
+    for ov in candidates(SPEC, base, DEFAULT_SPACE):
+        eff = base.with_overrides(**ov)
+        for field, val in ov.items():
+            assert getattr(eff, field) == val
+            assert getattr(base, field) != val  # diff fields only
+
+
+def test_candidates_prunes_impossible_and_degenerate():
+    # 64 out_ch / bn=16 → nt=4: cores=8 impossible; cores=1 balance variants
+    # cannot differ from the base.
+    space = SearchSpace(cores=(1, 8), balance=("none", "inter", "full"),
+                        lookahead=None, conv_mode=None)
+    cands = candidates(SPEC, CFG, space)
+    assert cands == [{}]
+    # FC specs never get conv_mode overrides
+    fc = FCSpec("f", 64, 64)
+    assert all("conv_mode" not in ov
+               for ov in candidates(fc, CFG, DEFAULT_SPACE))
+
+
+def test_with_overrides_validates_fields():
+    assert CFG.with_overrides() is CFG
+    assert CFG.with_overrides(block=[32, 32, 32]).block == (32, 32, 32)
+    with pytest.raises(ValueError, match="unknown PhantomConfig override"):
+        CFG.with_overrides(corez=4)
+
+
+# -- cost model ---------------------------------------------------------------
+
+
+def test_cost_model_matches_real_plan_steps(conv_params):
+    """The pre-filter shares the real queue builders: predicted queue steps
+    equal the prepared plan's for both lowerings, single- and multi-core."""
+    from repro.kernels import phantom_conv
+
+    for ov in ({}, {"conv_mode": "im2col"}, {"cores": 2}, {"cores": 4}):
+        cfg = CFG.with_overrides(**ov)
+        m = candidate_cost(SPEC, conv_params["w"], 1, cfg)
+        pcw = phantom_conv.prepare_conv_weight(
+            np.asarray(conv_params["w"]), batch=1, in_hw=(14, 14), config=cfg
+        )
+        art = pcw.pw if pcw.pw is not None else pcw.plan
+        # single core: the queue length; multi-core: the per-core max (the
+        # §4.6 lock-step makespan), while plan.steps sums across cores.
+        real = (int(art.core_steps.max()) if getattr(art, "cores", 1) > 1
+                else pcw.steps)
+        assert m["queue_steps"] == real, ov
+        # Dense activations: every queue step executes.
+        assert m["executed_makespan"] == real, ov
+
+
+def test_cost_model_lookahead_reduces_executed_steps(conv_params):
+    dense = candidate_cost(SPEC, conv_params["w"], 1, CFG, act_density=0.5)
+    la = candidate_cost(
+        SPEC, conv_params["w"], 1, CFG.with_overrides(lookahead=8),
+        act_density=0.5,
+    )
+    assert la["executed_makespan"] < dense["executed_makespan"]
+    assert la["queue_steps"] == dense["queue_steps"]
+
+
+def test_synth_act_bits_density_and_determinism():
+    bits = synth_act_bits(8, 16, 0.5)
+    assert bits.shape == (8, 16)
+    assert abs(bits.mean() - 0.5) < 0.02  # low-discrepancy ≈ exact
+    np.testing.assert_array_equal(bits, synth_act_bits(8, 16, 0.5))
+    assert synth_act_bits(4, 4, 1.0).all()
+
+
+def test_cost_artifact_rejects_cores_exceeding_columns(conv_params):
+    with pytest.raises(ValueError, match="cores"):
+        candidate_cost(SPEC, conv_params["w"], 1, CFG.with_overrides(cores=8))
+
+
+# -- search -------------------------------------------------------------------
+
+
+def test_search_never_worse_and_improves_skewed_fc():
+    # The §4.2 skewed layer: heavy column every 4th position — a 4-core
+    # balanced schedule beats the single-core default ~4x.
+    rng = np.random.default_rng(0)
+    kt, nt, bk, bn = 12, 8, 16, 16
+    w = np.zeros((kt * bk, nt * bn), np.float32)
+    for c in range(nt):
+        kept = kt if c % 4 == 0 else 1
+        w[: kept * bk, c * bn : (c + 1) * bn] = rng.standard_normal(
+            (kept * bk, bn)
+        ).astype(np.float32)
+    spec = FCSpec("skew", kt * bk, nt * bn)
+    res = search_layer(spec, {"w": w}, 16, CFG, space=BENCH_SPACE)
+    assert res.best["cost"] <= res.default["cost"]
+    assert res.best["executed_makespan"] < res.default["executed_makespan"]
+    assert res.override.get("cores", 1) > 1
+    # candidate 0 of the trial list is the default config
+    assert res.trials[0].override == {} or res.default["cost"] >= min(
+        t.metrics["cost"] for t in res.trials
+    )
+
+
+def test_bench_layer_set_never_worse():
+    """The BENCH_conv.json acceptance row, executed directly: tuned
+    executed makespan ≤ default on every layer, < on at least one (the
+    asserts live inside autotune_rows)."""
+    from benchmarks import kernel_bench
+
+    _, result = kernel_bench.autotune_rows(np.random.default_rng(0))
+    assert result["layers_improved"] >= 1
+    assert result["tuned_cost"] <= result["default_cost"]
+    for name, r in result["layers"].items():
+        assert r["tuned_makespan"] <= r["default_makespan"], name
+
+
+# -- cache --------------------------------------------------------------------
+
+
+def test_cache_hit_miss_and_persistence(tmp_path, conv_params):
+    path = str(tmp_path / "tc.json")
+    cache = TuneCache(path, backend="cpu:test:jax0")
+    key = cache.key_for(SPEC, 1, CFG, w_density=0.3)
+    assert cache.get(key) is None and cache.misses == 1
+    cache.put(key, {"cores": 4}, cost=1.0)
+    assert cache.get(key)["override"] == {"cores": 4} and cache.hits == 1
+    cache.save()
+    warm = TuneCache(path, backend="cpu:test:jax0")
+    assert len(warm) == 1
+    assert warm.get(key)["override"] == {"cores": 4}
+
+
+def test_cache_schema_bump_invalidates(tmp_path):
+    path = str(tmp_path / "tc.json")
+    cache = TuneCache(path, backend="b")
+    cache.put("k", {"cores": 2})
+    cache.save()
+    stale = TuneCache(path, schema=TUNE_SCHEMA + 1, backend="b")
+    assert len(stale) == 0 and stale.invalidations == 1
+    assert stale.get("k") is None  # re-search, never trust old semantics
+    # an unreadable file is treated exactly like a schema mismatch
+    with open(path, "w") as f:
+        f.write("{not json")
+    broken = TuneCache(path, backend="b")
+    assert len(broken) == 0 and broken.invalidations == 1
+
+
+def test_cache_key_scopes_backend_and_density_bucket(conv_params):
+    a = TuneCache("unused.json", backend="cpu:A:jax1")
+    b = TuneCache("unused.json", backend="tpu:B:jax1")
+    ka = a.key_for(SPEC, 1, CFG, w_density=0.25)
+    assert ka != b.key_for(SPEC, 1, CFG, w_density=0.25)  # backend change
+    # same density bucket → same key; crossing a bucket edge → miss
+    assert ka == a.key_for(SPEC, 1, CFG, w_density=0.27)
+    assert ka != a.key_for(SPEC, 1, CFG, w_density=0.5)
+    assert density_bucket(0.25) == density_bucket(0.27) == "d0.2-0.3"
+    assert density_bucket(0.5) == "d0.45-0.6"
+    # batch and non-searched base knobs are part of the signature...
+    assert ka != a.key_for(SPEC, 2, CFG, w_density=0.25)
+    tau = CFG.with_overrides(act_threshold=0.1)
+    assert ka != a.key_for(SPEC, 1, tau, w_density=0.25)
+    # ...but searched fields are not: a base with different cores finds the
+    # same entry (the stored override supersedes them anyway).
+    assert ka == a.key_for(SPEC, 1, CFG.with_overrides(cores=4), w_density=0.25)
+
+
+def test_tune_overrides_cached_mode_never_searches(tmp_path, conv_params):
+    cache = TuneCache(str(tmp_path / "tc.json"), backend="b")
+    got = tune_overrides(
+        [SPEC], {"c1": conv_params}, 1, CFG, cache=cache, mode="cached"
+    )
+    assert got == {} and cache.searches == 0 and cache.misses == 1
+    assert not os.path.exists(cache.path)  # nothing searched, nothing saved
+    with pytest.raises(ValueError, match="tune mode"):
+        tune_overrides([SPEC], {"c1": conv_params}, 1, CFG,
+                       cache=cache, mode="bogus")
+
+
+# -- compile integration ------------------------------------------------------
+
+
+def toy_net(rng):
+    layers = [
+        ConvSpec("c1", 8, 32, 14, 14, 3, 3),
+        FCSpec("f1", 32 * 7 * 7, 16, pool="pool5"),
+    ]
+    params = {
+        "c1": {
+            "w": pruned_w((3, 3, 8, 32), 0.4, rng),
+            "b": np.zeros(32, np.float32),
+        },
+        "f1": {
+            "w": pruned_w((32 * 7 * 7, 16), 0.3, rng),
+            "b": np.zeros(16, np.float32),
+        },
+    }
+    return layers, params
+
+
+def test_compile_tune_search_then_cached_is_deterministic(tmp_path):
+    """The acceptance chain: search populates the cache; a warm-cache
+    ``tune="cached"`` compile performs ZERO searches and is bit-identical
+    to compiling with the same overrides passed explicitly."""
+    layers, params = toy_net(np.random.default_rng(1))
+    path = str(tmp_path / "tc.json")
+    x = np.maximum(
+        np.random.default_rng(2).standard_normal((2, 14, 14, 8)), 0
+    ).astype(np.float32)
+
+    cache = TuneCache(path)
+    prog = phantom.compile(layers, params, CFG, batch=2, tune="search",
+                           tune_cache=cache)
+    assert cache.searches == len(layers) and os.path.exists(path)
+    y = np.asarray(prog(x))
+
+    warm = TuneCache(path)
+    cached = phantom.compile(layers, params, CFG, batch=2, tune="cached",
+                             tune_cache=warm)
+    assert warm.searches == 0 and warm.misses == 0
+    assert warm.hits == len(layers)
+    assert cached.overrides == prog.overrides
+
+    explicit = phantom.compile(layers, params, CFG, batch=2,
+                               overrides=prog.overrides)
+    for name in ("c1", "f1"):
+        assert explicit.effective_cfg(name) == cached.effective_cfg(name)
+    np.testing.assert_array_equal(np.asarray(cached(x)), y)
+    np.testing.assert_array_equal(np.asarray(explicit(x)), y)
+
+
+def test_program_with_overrides_saves_loads_serves_bit_identically(tmp_path):
+    layers, params = toy_net(np.random.default_rng(3))
+    overrides = {"c1": {"cores": 2, "balance": "none", "lookahead": 8}}
+    prog = phantom.compile(layers, params, CFG, batch=2, overrides=overrides)
+    assert prog.effective_cfg("c1").cores == 2
+    assert prog.effective_cfg("f1") == CFG
+    assert prog.stats(2)["c1"]["override"] == overrides["c1"]
+    x = np.maximum(
+        np.random.default_rng(4).standard_normal((2, 14, 14, 8)), 0
+    ).astype(np.float32)
+    y = np.asarray(prog(x))
+
+    path = str(tmp_path / "prog")
+    prog.save(path)
+    loaded = phantom.PhantomProgram.load(path)
+    assert loaded.lowerings == 0
+    assert loaded.overrides == prog.overrides
+    np.testing.assert_array_equal(np.asarray(loaded(x)), y)
+    # a NEW batch size lowers with the per-layer configs, not the base
+    assert loaded.effective_cfg("c1").cores == 2
+    y3 = loaded(x[:1])
+    assert np.asarray(y3).shape == (1, 16)
+
+
+def test_override_outputs_match_default_config_outputs(tmp_path):
+    """Scheduling knobs are numerics-preserving: a multi-core + lookahead
+    override computes bit-identical outputs to the default schedule."""
+    layers, params = toy_net(np.random.default_rng(5))
+    x = np.maximum(
+        np.random.default_rng(6).standard_normal((2, 14, 14, 8)), 0
+    ).astype(np.float32)
+    base = phantom.compile(layers, params, CFG, batch=2)
+    tuned = phantom.compile(
+        layers, params, CFG, batch=2,
+        overrides={"c1": {"cores": 2, "lookahead": 8},
+                   "f1": {"cores": 2, "balance": "none"}},
+    )
+    np.testing.assert_array_equal(np.asarray(base(x)), np.asarray(tuned(x)))
+
+
+def test_compile_rejects_bad_tune_args():
+    layers, params = toy_net(np.random.default_rng(7))
+    with pytest.raises(ValueError, match="tune must be"):
+        phantom.compile(layers, params, CFG, batch=1, tune="always")
+    with pytest.raises(KeyError, match="unknown layer"):
+        phantom.compile(layers, params, CFG, batch=1,
+                        overrides={"nope": {"cores": 2}})
+    with pytest.raises(ValueError, match="unknown PhantomConfig override"):
+        phantom.compile(layers, params, CFG, batch=1,
+                        overrides={"c1": {"corez": 2}})
