@@ -487,6 +487,85 @@ def obs_overhead_rows(rng, *, trials=3, reps=5):
     ]
 
 
+def verify_rows(rng, *, trials=5):
+    """Verify-on-load overhead (DESIGN.md §13 acceptance: <5% of load
+    time).  Saves one compiled program, then times the verify stage a
+    default load runs (``verify_program(deep=False)``) directly against
+    ``load(verify=False)`` — the asserted budget covers what every load
+    pays.  Timing the stage beats differencing two whole loads: an ~8 ms
+    load jitters by more than the whole budget, so ``on/off`` ratios are
+    noise.  End-to-end loads for all three tiers (off / default /
+    ``"full"``) are still reported as advisory columns; the ``"full"``
+    tier (sha256 fingerprint + per-step scans) is CLI/CI-only and not
+    budgeted.  Min over trials; first call of each mode is untimed
+    warmup."""
+    import os
+    import tempfile
+
+    import phantom
+    from repro.core.dataflow import ConvSpec, FCSpec
+
+    layers = [
+        ConvSpec("c1", 3, 32, 28, 28),
+        ConvSpec("c2", 32, 64, 28, 28),
+        FCSpec("fc", 64, 10, pool="gap"),
+    ]
+    blk = (32, 32, 32)
+    params = {}
+    for l in layers:
+        shp = (
+            (l.kh, l.kw, l.in_ch, l.out_ch)
+            if isinstance(l, ConvSpec)
+            else (l.in_dim, l.out_dim)
+        )
+        w = rng.standard_normal(shp).astype(np.float32)
+        w2 = w.reshape(-1, shp[-1])
+        if w2.shape[0] >= blk[1]:
+            w2 *= sparsity.block_prune(w2, 0.3, blk[1:])
+        params[l.name] = {
+            "w": jnp.asarray(w2.reshape(shp)),
+            "b": jnp.asarray(np.zeros(shp[-1], np.float32)),
+        }
+    cfg = phantom.PhantomConfig(enabled=True, block=blk)
+    prog = phantom.compile(layers, params, cfg, batch=(1, 8))
+    with tempfile.TemporaryDirectory(prefix="phantom-bench-") as tmp:
+        path = os.path.join(tmp, "prog")
+        prog.save(path)
+
+        def measure(verify):
+            def load():
+                return phantom.PhantomProgram.load(path, verify=verify)
+
+            load()  # fs-cache / import warmup, untimed
+            return min(timeit(load, reps=1, warmup=0)[1] for _ in range(trials))
+
+        t_off = measure(False)
+        t_on = measure(True)
+        t_full = measure("full")
+
+        from repro.verify import verify_program
+
+        loaded = phantom.PhantomProgram.load(path, verify=False)
+        verify_program(loaded, deep=False)  # warmup, untimed
+        t_verify = min(
+            timeit(lambda: verify_program(loaded, deep=False),
+                   reps=1, warmup=0)[1]
+            for _ in range(trials)
+        )
+    ratio = t_verify / t_off
+    assert ratio < 0.05, (
+        f"verify-on-load stage costs {ratio:.1%} of load time, over the 5% "
+        f"budget (load={t_off:.0f}us verify={t_verify:.0f}us)"
+    )
+    return [
+        (
+            "verify/load_overhead", f"{t_verify:.0f}",
+            f"load_us={t_off:.0f};ratio={ratio:.3f};on_us={t_on:.0f};"
+            f"full_us={t_full:.0f}",
+        )
+    ]
+
+
 def run_multicore():
     """The multi-core balance rows alone (fast — printed by the CI tier-1
     job to keep the balanced-vs-naive makespans visible per commit)."""
@@ -542,6 +621,7 @@ def run():
     rows += obs_overhead_rows(rng)
     at_rows, at_result = autotune_rows(rng)
     rows += at_rows
+    rows += verify_rows(rng)
     return emit(rows), mode_result, mc_result, la_result, at_result
 
 

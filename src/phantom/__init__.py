@@ -10,9 +10,13 @@ Autotuning (DESIGN.md §12) rides on the same call:
     # later / elsewhere: zero re-search, same per-layer configs
     prog = phantom.compile(layers, params, cfg, batch=8, tune="cached")
 
+Every compile / load statically verifies the artifact by default
+(DESIGN.md §13); a rejected artifact raises :class:`VerifyError` naming
+the failed rule and layer.  Pass ``verify=False`` to opt out.
+
 Thin alias over :mod:`repro.program` (plus the :class:`TuneCache` handle
-from :mod:`repro.tune`) so user code does not spell the repro package
-layout; see DESIGN.md §8.
+from :mod:`repro.tune` and the verifier surface from :mod:`repro.verify`)
+so user code does not spell the repro package layout; see DESIGN.md §8.
 """
 from repro.program import (  # noqa: F401
     SERVE_DEFAULT,
@@ -23,6 +27,7 @@ from repro.program import (  # noqa: F401
     register_layer_kind,
 )
 from repro.tune import TuneCache  # noqa: F401
+from repro.verify import VerifyError, verify_program  # noqa: F401
 
 __all__ = [
     "PhantomConfig",
@@ -32,4 +37,6 @@ __all__ = [
     "LayerKind",
     "register_layer_kind",
     "TuneCache",
+    "VerifyError",
+    "verify_program",
 ]

@@ -82,6 +82,10 @@ class PhantomProgram:
         #: runtime sink: it is never serialised, so attaching one leaves
         #: :meth:`save` output byte-identical.
         self.recorder = recorder
+        #: when True, every fresh lowering in :meth:`at_batch` runs the
+        #: static verifier over the new plans (DESIGN.md §13).  Set by
+        #: ``compile(verify=...)`` / ``load(verify=...)``; never serialised.
+        self.verify = False
 
     # -- plan cache ----------------------------------------------------------
     def at_batch(self, batch: int) -> dict:
@@ -109,6 +113,14 @@ class PhantomProgram:
                     for node in self.nodes
                 }
             self.lowerings += 1
+            if self.verify:
+                # Deferred import (same cycle-freedom rule as the tuner):
+                # the verifier checks programs, programs must import clean
+                # without it.  Graph rules ran at compile/load time; only
+                # the freshly lowered plans need checking here.
+                from repro import verify as _verify
+
+                _verify.verify_program(self, batches=(batch,), graph=False)
             if rec is not None:
                 rec.inc("program/lowerings")
                 self._record_static(batch, rec)
@@ -294,34 +306,128 @@ class PhantomProgram:
             "plans": plan_meta,
             "params": params_meta,
         }
+        from repro import verify as _verify
+
+        # Content stamp (DESIGN.md §13): hashes the metadata plus every
+        # payload array, so load can reject bit-rot / truncation with a
+        # named rule before any plan is trusted.  Deterministic, so the
+        # recorder-attached-vs-plain byte-identity contract is preserved.
+        meta["verify"] = {
+            "schema": _verify.VERIFY_SCHEMA,
+            "fingerprint": _verify.artifact_fingerprint(meta, arrays),
+        }
         CheckpointManager(path, keep=1).save(0, arrays, extra=meta)
         return path
 
     @classmethod
-    def load(cls, path: str) -> "PhantomProgram":
+    def load(cls, path: str, *, verify=True) -> "PhantomProgram":
         """Rebuild a saved program in a fresh process — no re-lowering: the
-        plan cache is restored verbatim and :attr:`lowerings` stays 0."""
-        arrays, meta = CheckpointManager(path).restore_flat()
+        plan cache is restored verbatim and :attr:`lowerings` stays 0.
+
+        ``verify`` picks the tier (DESIGN.md §13):
+
+        * ``True`` (default) — the fast tier: stamp-schema check plus every
+          rule whose cost is independent of queue length (version, read
+          consistency, graph/mask-flow, overrides, geometry, partition,
+          gauges).  Payload bit-rot is already caught during the read
+          itself — the npz container checksums every member — so this tier
+          stays within the <5% load-overhead budget ``kernel_bench``
+          enforces.
+        * ``"full"`` — everything: the sha256 content fingerprint
+          round-trip plus the per-step queue scans (step classes, run
+          structure, coverage, bounds, inert tail, compaction-meta
+          re-derivation).  Used by ``python -m repro.verify`` and the
+          corruption test suite; cost is O(artifact bytes + steps).
+        * ``False`` — format-version check only; an artifact from a
+          different schema is still rejected with ``artifact/version``
+          (it cannot be deserialised meaningfully at all).
+
+        Violations raise :class:`~repro.verify.VerifyError` naming the
+        failing rule, layer and batch.
+        """
+        from repro import verify as _verify
+
+        deep = verify == "full"
+
+        try:
+            arrays, meta = CheckpointManager(path).restore_flat()
+        except FileNotFoundError:
+            raise  # "no checkpoint here" is not a corruption finding
+        except Exception as e:
+            raise _verify.VerifyError(
+                [_verify.Finding("artifact/read", f"checkpoint unreadable: {e}")],
+                path=path,
+            ) from e
         if meta.get("format") != _FORMAT_VERSION:
-            raise ValueError(f"unsupported program format: {meta.get('format')!r}")
-        cfg = serialize.unpack_config(meta["cfg"])
-        layers = [
-            _build_spec(spec_class(entry["type"]), entry["fields"])
-            for entry in meta["layers"]
-        ]
-        params: dict = {}
-        for key, node in meta["params"].items():
-            tree = params
-            parts = key.split("/")
-            for p in parts[:-1]:
-                tree = tree.setdefault(p, {})
-            tree[parts[-1]] = jnp.asarray(serialize.unpack(node, arrays))
-        prog = cls(layers, params, cfg, overrides=meta.get("overrides"))
-        for b_str, per_layer in meta["plans"].items():
-            prog._plans[int(b_str)] = {
-                name: serialize.unpack(node, arrays) for name, node in per_layer.items()
-            }
+            raise _verify.VerifyError(
+                [_verify.Finding(
+                    "artifact/version",
+                    f"unsupported program format: {meta.get('format')!r} "
+                    f"(this build reads schema version {_FORMAT_VERSION})",
+                )],
+                path=path,
+            )
+        if verify:
+            stamp = meta.get("verify")
+            if not isinstance(stamp, dict) or stamp.get("schema") != _verify.VERIFY_SCHEMA:
+                raise _verify.VerifyError(
+                    [_verify.Finding(
+                        "artifact/version",
+                        f"verification stamp missing or from another schema "
+                        f"({stamp!r}; this build checks verify schema "
+                        f"{_verify.VERIFY_SCHEMA}) — re-save the program",
+                    )],
+                    path=path,
+                )
+            if deep:
+                want = stamp.get("fingerprint")
+                got = _verify.artifact_fingerprint(meta, arrays)
+                if got != want:
+                    raise _verify.VerifyError(
+                        [_verify.Finding(
+                            "artifact/fingerprint",
+                            f"content fingerprint mismatch: stamped {want!r}, "
+                            f"recomputed {got!r} — metadata or payload arrays "
+                            f"changed since save",
+                        )],
+                        path=path,
+                    )
+        try:
+            cfg = serialize.unpack_config(meta["cfg"])
+            layers = [
+                _build_spec(spec_class(entry["type"]), entry["fields"])
+                for entry in meta["layers"]
+            ]
+            params: dict = {}
+            for key, node in meta["params"].items():
+                tree = params
+                parts = key.split("/")
+                for p in parts[:-1]:
+                    tree = tree.setdefault(p, {})
+                tree[parts[-1]] = jnp.asarray(serialize.unpack(node, arrays))
+            prog = cls(layers, params, cfg, overrides=meta.get("overrides"))
+            for b_str, per_layer in meta["plans"].items():
+                prog._plans[int(b_str)] = {
+                    name: serialize.unpack(node, arrays)
+                    for name, node in per_layer.items()
+                }
+        except KeyError as e:
+            # A metadata node pointing at a payload array that is not in
+            # the npz (or a missing metadata section) used to surface as a
+            # raw KeyError deep in serialize.unpack.
+            raise _verify.VerifyError(
+                [_verify.Finding(
+                    "artifact/read",
+                    f"serialized metadata references missing node/array "
+                    f"{e.args[0] if e.args else e!r} — artifact truncated "
+                    f"or metadata out of sync with arrays.npz",
+                )],
+                path=path,
+            ) from e
         prog.lowerings = 0
+        prog.verify = bool(verify)
+        if verify:
+            _verify.verify_program(prog, path=path, deep=deep)
         return prog
 
 
@@ -394,6 +500,7 @@ def compile(
     overrides: dict | None = None,
     tune: str = "off",
     tune_cache=None,
+    verify: bool = True,
 ) -> PhantomProgram:
     """Compile a network onto the Phantom core: one weight-load-time pass
     per batch size, reused for every inference.
@@ -424,6 +531,12 @@ def compile(
     inspect hit/search counters) or a path for one (default
     ``checkpoint/tune_cache.json``).  Tuning keys off the *first* batch
     size; explicit ``overrides`` win over tuned ones per layer.
+
+    ``verify`` (default True, DESIGN.md §13): statically verify the node
+    graph / overrides once up front and every lowered plan as it is built;
+    violations raise :class:`~repro.verify.VerifyError` naming the rule and
+    layer.  The returned program keeps verifying future ``at_batch``
+    lowerings until ``prog.verify`` is cleared.
     """
     if tune not in ("off", "cached", "search"):
         raise ValueError(
@@ -456,6 +569,13 @@ def compile(
     prog = PhantomProgram(
         layers, params, cfg, overrides=merged, recorder=recorder
     )
+    prog.verify = bool(verify)
+    if verify:
+        from repro import verify as _verify
+
+        # Graph-level rules once, before any lowering; per-batch plan rules
+        # run inside at_batch as each plan is built.
+        _verify.verify_program(prog, batches=(), graph=True)
     for b in (batch,) if isinstance(batch, int) else tuple(batch):
         prog.at_batch(b)
     return prog

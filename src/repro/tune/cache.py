@@ -134,6 +134,10 @@ class TuneCache:
         self.misses = 0
         self.searches = 0
         self.invalidations = 0
+        #: hits whose stored override fell outside the live search space and
+        #: were therefore discarded and re-searched (see tune_overrides) —
+        #: a stale entry is a cache defect, tracked separately from misses.
+        self.stale = 0
         self._entries: dict[str, dict] = {}
         self._load()
 
@@ -217,5 +221,6 @@ class TuneCache:
             "misses": self.misses,
             "searches": self.searches,
             "invalidations": self.invalidations,
+            "stale": self.stale,
             "entries": len(self._entries),
         }

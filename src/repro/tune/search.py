@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -32,7 +33,7 @@ from repro.core.phantom_linear import PhantomConfig
 
 from . import cost as cost_mod
 from .cache import TuneCache
-from .space import DEFAULT_SPACE, SearchSpace, candidates
+from .space import DEFAULT_SPACE, SearchSpace, candidates, override_in_space
 
 __all__ = ["Trial", "TuneResult", "search_layer", "tune_overrides"]
 
@@ -202,6 +203,10 @@ def tune_overrides(
     ``mode="cached"``: lookups only — a miss falls back to the base config
     and no search runs (``cache.searches`` stays 0).  ``mode="search"``:
     misses trigger :func:`search_layer` and the winners are persisted.
+    A *stale* hit — an entry whose override is no longer inside the live
+    search space (:func:`~repro.tune.space.override_in_space`) — is never
+    applied: it warns, counts under ``cache.stale``, and re-searches in
+    **both** modes (falling back to ``tune="search"`` for that layer).
     ``act_density`` is a per-layer-name dict (or one float) of expected
     activation tile density for the cost model's synthetic bits.
     ``results`` (a list, appended in place) collects per-layer
@@ -219,13 +224,34 @@ def tune_overrides(
             spec, batch, base_cfg, w_density=TuneCache.weight_density(w)
         )
         entry = cache.get(key)
+        stale = False
+        if entry is not None and not override_in_space(
+            entry.get("override") or {}, base_cfg, space
+        ):
+            # The cached winner can no longer be produced by a search over
+            # the live space — the space (or the config surface) moved since
+            # it was written.  Applying it would resurrect a retired config,
+            # so re-search instead (even under mode="cached": a stale entry
+            # is a cache *defect*, not a plain miss).
+            warnings.warn(
+                f"tune cache entry for layer {spec.name!r} carries override "
+                f"{entry.get('override')!r} outside the current search "
+                f"space; ignoring it and re-searching",
+                UserWarning,
+                stacklevel=2,
+            )
+            cache.hits -= 1  # get() counted a hit before validation
+            cache.misses += 1
+            cache.stale += 1
+            entry = None
+            stale = True
         if entry is not None:
             if entry["override"]:
                 overrides[spec.name] = dict(entry["override"])
             if results is not None:
                 results.append({"name": spec.name, "source": "cache", **entry})
             continue
-        if mode == "cached":
+        if mode == "cached" and not stale:
             if recorder is not None:
                 recorder.inc("tune/cache_miss_fallback")
             if results is not None:

@@ -24,7 +24,13 @@ import math
 
 from repro.core.dataflow import ConvSpec
 
-__all__ = ["SearchSpace", "DEFAULT_SPACE", "BENCH_SPACE", "candidates"]
+__all__ = [
+    "SearchSpace",
+    "DEFAULT_SPACE",
+    "BENCH_SPACE",
+    "candidates",
+    "override_in_space",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +63,43 @@ def _pool(space_val, base_val):
     if base_val not in vals:
         vals.insert(0, base_val)
     return tuple(vals)
+
+
+def override_in_space(override: dict, base_cfg, space: SearchSpace = DEFAULT_SPACE) -> bool:
+    """Whether a per-layer override diff is reachable by a search over
+    ``space`` under ``base_cfg``.
+
+    The membership contract behind two consumers: the tune cache treats an
+    entry whose override left the live space as *stale* (warn + re-search,
+    never apply), and the program verifier's ``config/overrides`` rule
+    flags out-of-space tunings at warn level.  Each knob's legal pool is
+    exactly :func:`candidates`'s pool — the space values plus the base
+    config's own value; unknown fields are by definition unreachable.
+    """
+    pools = {
+        "cores": _pool(space.cores, base_cfg.cores),
+        "balance": _pool(space.balance, base_cfg.balance),
+        "lookahead": _pool(space.lookahead, int(base_cfg.lookahead or 0)),
+        "conv_mode": _pool(space.conv_mode, base_cfg.conv_mode),
+        "block": _pool(
+            tuple(space.blocks) if space.blocks else None, tuple(base_cfg.block)
+        ),
+    }
+    for field, val in (override or {}).items():
+        if field not in pools:
+            return False
+        if field == "block":
+            try:
+                val = tuple(val)
+            except TypeError:
+                return False
+        elif field == "lookahead":
+            if val is not None and not isinstance(val, (int, bool)):
+                return False
+            val = int(val or 0)
+        if val not in pools[field]:
+            return False
+    return True
 
 
 def candidates(spec, base_cfg, space: SearchSpace = DEFAULT_SPACE) -> list[dict]:

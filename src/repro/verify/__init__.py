@@ -1,0 +1,34 @@
+"""Static program verifier for compiled Phantom artifacts (DESIGN.md §13).
+
+Public surface:
+
+- :class:`Finding` / :class:`VerifyError` — structured diagnostics naming
+  the failed rule, layer and batch.
+- :func:`check_artifact` / :func:`check_program` — pure rule runners that
+  return findings without raising.
+- :func:`verify_program` — the enforcement wrapper used by
+  ``phantom.compile(verify=True)`` and ``PhantomProgram.load``.
+- :func:`artifact_fingerprint` / :data:`VERIFY_SCHEMA` — the serialized
+  content-hash contract stamped by ``save`` and checked at load.
+- ``python -m repro.verify <artifact>`` / ``--self-check`` — the CI entry
+  points (see :mod:`repro.verify.__main__`).
+"""
+from repro.verify.rules import (
+    VERIFY_SCHEMA,
+    Finding,
+    VerifyError,
+    artifact_fingerprint,
+    check_artifact,
+    check_program,
+    verify_program,
+)
+
+__all__ = [
+    "VERIFY_SCHEMA",
+    "Finding",
+    "VerifyError",
+    "artifact_fingerprint",
+    "check_artifact",
+    "check_program",
+    "verify_program",
+]

@@ -1,0 +1,71 @@
+"""``python -m repro.verify`` — verify saved Phantom programs, or self-check.
+
+Two modes (DESIGN.md §13):
+
+* ``python -m repro.verify <path> [...]`` — load each saved program with
+  verification on and report per-path.  Findings print one per line as
+  ``<path>: [rule] layer=... : detail`` (the file:line-style output CI
+  surfaces); exit 1 on any finding.
+* ``python -m repro.verify --self-check`` — the tier-1 CI gate: the clean
+  compile grid (VGG16/MobileNet × conv_mode × cores × lookahead must
+  verify with zero findings) plus the seeded-mutation matrix (every rule
+  must catch its corruption — no dead rules).  ``--no-grid`` runs the
+  mutation matrix only (fast local iteration).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.verify", description=__doc__.split("\n")[0]
+    )
+    p.add_argument(
+        "paths", nargs="*",
+        help="saved program directories (PhantomProgram.save output)",
+    )
+    p.add_argument(
+        "--self-check", action="store_true",
+        help="run the clean compile grid + the seeded-mutation matrix",
+    )
+    p.add_argument(
+        "--no-grid", action="store_true",
+        help="with --self-check: skip the compile grid, mutation matrix only",
+    )
+    args = p.parse_args(argv)
+
+    if args.self_check:
+        from repro.verify.selfcheck import run_selfcheck
+
+        return run_selfcheck(full_grid=not args.no_grid)
+
+    if not args.paths:
+        p.error("pass saved program path(s), or --self-check")
+
+    from repro.program import PhantomProgram
+    from repro.verify import VerifyError
+
+    rc = 0
+    for path in args.paths:
+        try:
+            prog = PhantomProgram.load(path, verify="full")
+        except VerifyError as e:
+            rc = 1
+            for f in e.findings:
+                print(f"{path}: {f.format()}")
+        except FileNotFoundError as e:
+            rc = 1
+            print(f"{path}: [artifact/read] {e}")
+        else:
+            plans = sum(len(v) for v in prog._plans.values())
+            print(
+                f"{path}: OK ({len(prog.nodes)} layers, {plans} plans, "
+                f"batch sizes {list(prog.batch_sizes)})"
+            )
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,1040 @@
+"""Static invariant checking for compiled Phantom artifacts (DESIGN.md §13).
+
+A compiled :class:`~repro.program.PhantomProgram` is a web of scheduling
+invariants — §3.8 mask flow between layers, §3.4 TDS queue compaction,
+§4.2/§4.6 per-core partitioning and makespan padding — that the kernels
+*assume* rather than re-check.  A corrupted or stale artifact therefore
+fails as a shape error (or silent wrong answer) mid-kernel.  This module is
+the compiler-style verifier that closes that gap: every invariant is a
+**named rule** that re-derives the expected structure from first principles
+(the weight mask, the schedule in :mod:`repro.core.balance`, the compaction
+metadata in :mod:`repro.kernels.compaction`) and compares, without executing
+any kernel.
+
+Rule catalog (each individually mutation-tested in ``tests/test_verify.py``
+and ``python -m repro.verify --self-check``):
+
+==================== =======================================================
+``artifact/version``     serialized format tag matches this build's schema
+``artifact/read``        every metadata node's payload array exists
+``artifact/fingerprint`` content hash over metadata + arrays round-trips
+``queue/step-classes``   every step is MAC / zero-write / inert (§3.8, §4.6)
+``queue/run-structure``  (mi, ni) runs contiguous, k ascending, flags paired
+``queue/coverage``       every output tile flushed exactly once
+``queue/bounds``         indices in-bounds; ``wq`` equals the packed-payload
+                         id re-derived from the weight mask
+``queue/inert-tail``     makespan padding is inert and repeats the last real
+                         step (the tail-revisit contract)
+``cores/partition``      ``col_perm`` a true permutation; buckets disjoint,
+                         capacity-capped, prefix-packed; ``col_inv`` inverse
+``cores/gauges``         ``core_cost`` / ``core_steps`` / makespan equal an
+                         independent re-derivation (``inter_core_schedule``)
+``lookahead/cmeta``      compaction metadata equals ``compaction_meta``
+``plan/geometry``        artifact shapes equal the spec-derived geometry
+``graph/mask-flow``      node graph equals a rebuild (§3.8 glue, τ-at-
+                         producer, last-layer rule); kinds complete
+``config/overrides``     per-layer tune overrides name real layers/fields,
+                         hold legal values (error) from the live search
+                         space (warn)
+==================== =======================================================
+
+Findings carry a ``level``: ``"error"`` findings make
+:func:`verify_program` raise :class:`VerifyError`; ``"warn"`` findings (an
+override value outside the current tune search space — legal, but no longer
+reachable by ``tune="search"``) surface as a :class:`UserWarning`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import math
+import warnings
+
+import numpy as np
+
+__all__ = [
+    "VERIFY_SCHEMA",
+    "Finding",
+    "VerifyError",
+    "artifact_fingerprint",
+    "check_artifact",
+    "check_program",
+    "verify_program",
+]
+
+#: Bump on any change to the fingerprint recipe or the serialized-artifact
+#: verification contract; stamped into ``meta["verify"]`` by
+#: :meth:`PhantomProgram.save`.
+VERIFY_SCHEMA = 1
+
+#: Cap on repeated per-step findings from one rule on one artifact — the
+#: first offending index plus a count beats 10k identical lines.
+_MAX_PER_RULE = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verifier finding: the failed rule, where, and why."""
+
+    rule: str
+    detail: str
+    layer: str | None = None
+    batch: int | None = None
+    level: str = "error"  # "error" | "warn"
+
+    def format(self) -> str:
+        where = ""
+        if self.layer is not None:
+            where += f" layer={self.layer}"
+        if self.batch is not None:
+            where += f" batch={self.batch}"
+        return f"[{self.rule}]{where}: {self.detail}"
+
+
+class VerifyError(ValueError):
+    """Raised when verification finds error-level invariant violations.
+
+    Subclasses :class:`ValueError` so pre-verifier callers catching the old
+    ``load`` errors keep working.  ``findings`` holds the structured
+    :class:`Finding` list; ``path`` names the artifact when verification ran
+    at load time.
+    """
+
+    def __init__(self, findings, *, path: str | None = None):
+        self.findings = list(findings)
+        self.path = path
+        where = f" for {path}" if path else ""
+        lines = "\n".join("  " + f.format() for f in self.findings)
+        super().__init__(
+            f"Phantom program verification failed{where} "
+            f"({len(self.findings)} finding(s)):\n{lines}"
+        )
+
+
+def artifact_fingerprint(meta: dict, arrays: dict) -> str:
+    """Deterministic content hash of a serialized program.
+
+    Covers the JSON metadata (minus the ``verify`` block itself, so the
+    stamp does not hash its own output) and every payload array's name,
+    dtype, shape and bytes, in sorted key order.  Save stamps it into
+    ``meta["verify"]["fingerprint"]``; load recomputes and compares
+    (``artifact/fingerprint``).
+    """
+    h = hashlib.sha256()
+    clean = {k: v for k, v in meta.items() if k != "verify"}
+    h.update(json.dumps(clean, sort_keys=True, separators=(",", ":")).encode())
+    for key in sorted(arrays):
+        a = np.ascontiguousarray(np.asarray(arrays[key]))
+        h.update(key.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+# -- queue-level rules --------------------------------------------------------
+
+
+class _QView:
+    """Normalised view of a queue-carrying artifact (``PhantomWeight`` or
+    ``DirectConvPlan``): every queue array as int64 [cores, Qpad], plus the
+    derived quantities the rules share.  ``conv_ctx`` (when the artifact
+    came wrapped in a ``PhantomConvWeight``) carries the conv geometry the
+    offset re-derivation needs."""
+
+    def __init__(self, art, conv_ctx: dict | None):
+        self.art = art
+        self.conv_ctx = conv_ctx
+        self.cores = int(getattr(art, "cores", 1))
+        self.grid = tuple(int(v) for v in art.grid_tiles)
+        self.mt, self.kt, self.nt = self.grid
+        blk = tuple(art.block)
+        self.bk, self.bn = int(blk[-2]), int(blk[-1])
+        names = ["mi", "ni", "wq", "start", "last", "valid", "flat_ak"]
+        if hasattr(art, "ki"):
+            names.append("ki")
+        if hasattr(art, "ph"):
+            names += ["ph", "nb", "r0", "c0", "ch0"]
+        self._raw = {
+            n: np.atleast_2d(np.asarray(getattr(art, n))) for n in names
+        }
+        self._fields: dict | None = None
+        shapes = {f.shape for f in self._raw.values()}
+        self.consistent = len(shapes) == 1
+        self.q = next(iter(shapes))[-1] if self.consistent else 0
+        self.rows = next(iter(shapes))[0] if self.consistent else 0
+        if self.cores > 1:
+            self.width = int(art.local_nt)
+            self.reals = np.asarray(art.core_steps, dtype=np.int64)
+        else:
+            self.width = self.nt
+            self.reals = np.full(max(self.rows, 1), self.q, dtype=np.int64)
+        self.bmask = np.asarray(art.w_bmask, dtype=bool)
+
+    @property
+    def fields(self) -> dict:
+        """Queue arrays as int64 — converted on first access so the fast
+        (``deep=False``) tier, which only reads shapes, never pays the
+        O(steps) copies."""
+        if self._fields is None:
+            self._fields = {
+                n: a.astype(np.int64, copy=False)
+                for n, a in self._raw.items()
+            }
+        return self._fields
+
+    def buckets(self) -> list[np.ndarray]:
+        """Per-core global-column lists, re-derived from ``col_perm`` (the
+        single-core artifact owns every column)."""
+        if self.cores <= 1:
+            return [np.arange(self.nt, dtype=np.int64)]
+        perm = np.asarray(self.art.col_perm, dtype=np.int64)
+        w = self.width
+        return [
+            perm[c * w : (c + 1) * w][perm[c * w : (c + 1) * w] >= 0]
+            for c in range(self.cores)
+        ]
+
+
+def _capped(out: list, findings: list[Finding], rule: str):
+    """Append ``findings`` to ``out``, collapsing the overflow into a count."""
+    out.extend(findings[:_MAX_PER_RULE])
+    extra = len(findings) - _MAX_PER_RULE
+    if extra > 0:
+        f0 = findings[0]
+        out.append(
+            dataclasses.replace(
+                f0, detail=f"... and {extra} more {rule} finding(s)"
+            )
+        )
+
+
+def _rule_geometry(v: _QView, mk) -> list[Finding]:
+    out = []
+    if len(v.grid) != 3 or any(g < 1 for g in v.grid):
+        out.append(mk("plan/geometry", f"grid_tiles {v.grid} not 3 positive tile counts"))
+        return out
+    if v.bmask.shape != (v.kt, v.nt):
+        out.append(
+            mk("plan/geometry",
+               f"w_bmask shape {v.bmask.shape} != (Kt, Nt) = {(v.kt, v.nt)}")
+        )
+        return out
+    packed = np.asarray(v.art.packed)
+    if packed.ndim != 3 or packed.shape[1:] != (v.bk, v.bn):
+        out.append(
+            mk("plan/geometry",
+               f"packed shape {packed.shape} != [nnzb, {v.bk}, {v.bn}]")
+        )
+    if v.cores > 1:
+        missing = [
+            n for n in ("col_perm", "col_inv", "core_steps", "core_cost")
+            if getattr(v.art, n, None) is None
+        ]
+        if missing:
+            out.append(
+                mk("plan/geometry",
+                   f"multi-core artifact missing {missing} (cores={v.cores})")
+            )
+            return out
+        want_blocks = sum(
+            max(1, int(v.bmask[:, b].sum())) for b in v.buckets()
+        )
+    else:
+        want_blocks = max(1, int(v.bmask.sum()))
+    if not out and packed.shape[0] != want_blocks:
+        out.append(
+            mk("plan/geometry",
+               f"packed holds {packed.shape[0]} blocks, weight mask implies "
+               f"{want_blocks} (Σ per-core max(1, nnz))")
+        )
+    if not v.consistent:
+        shapes = {n: f.shape for n, f in v.fields.items()}
+        out.append(
+            mk("plan/geometry", f"queue arrays disagree on shape: {shapes}")
+        )
+    elif v.cores > 1 and v.rows != v.cores:
+        out.append(
+            mk("plan/geometry",
+               f"queue arrays have {v.rows} rows, artifact says cores={v.cores}")
+        )
+    return out
+
+
+def _rule_step_classes(v: _QView, mk) -> list[Finding]:
+    s, l, va = v.fields["start"], v.fields["last"], v.fields["valid"]
+    out, found = [], []
+    for name, arr in (("start", s), ("last", l), ("valid", va)):
+        bad = (arr != 0) & (arr != 1)
+        if bad.any():
+            r, t = np.argwhere(bad)[0]
+            found.append(
+                mk("queue/step-classes",
+                   f"{name} not 0/1 at core {r} step {t}: {arr[r, t]}")
+            )
+    # Legal classes: MAC (valid=1, any flags), zero-write (1,1,0), inert
+    # (0,0,0).  (1,0,0) / (0,1,0) would zero-without-flush / flush-stale.
+    illegal = (va == 0) & (s != l)
+    if illegal.any():
+        r, t = np.argwhere(illegal)[0]
+        found.append(
+            mk("queue/step-classes",
+               f"illegal step class (start={s[r, t]}, last={l[r, t]}, "
+               f"valid=0) at core {r} step {t}: a valid=0 step must be a "
+               f"zero-write (1,1,0) or inert (0,0,0)")
+        )
+    _capped(out, found, "step-class")
+    return out
+
+
+def _rule_run_structure(v: _QView, mk) -> list[Finding]:
+    found = []
+    for r in range(v.rows):
+        real = int(v.reals[r])
+        if real < 1 or real > v.q:
+            found.append(
+                mk("queue/run-structure",
+                   f"core {r}: real step count {real} outside [1, {v.q}]")
+            )
+            continue
+        s = v.fields["start"][r, :real]
+        l = v.fields["last"][r, :real]
+        if s[0] != 1:
+            found.append(
+                mk("queue/run-structure", f"core {r}: queue does not open a run (start[0]={s[0]})")
+            )
+        if l[-1] != 1:
+            found.append(
+                mk("queue/run-structure",
+                   f"core {r}: last real step does not flush (last[{real - 1}]={l[-1]})")
+            )
+        mism = np.flatnonzero(s[1:] != l[:-1])
+        if mism.size:
+            t = int(mism[0]) + 1
+            found.append(
+                mk("queue/run-structure",
+                   f"core {r} step {t}: start={s[t]} after last={l[t - 1]} — "
+                   f"accumulation runs must be contiguous")
+            )
+            continue  # derived run shape is unreliable past this point
+        cont = np.flatnonzero(s[1:] == 0) + 1  # within-run continuation steps
+        if cont.size:
+            mi, ni = v.fields["mi"][r], v.fields["ni"][r]
+            ki = v.fields.get("ki", [None])
+            ki = ki[r] if ki[0] is not None else (
+                v.fields["flat_ak"][r] - mi * v.kt
+            )
+            drift = (mi[cont] != mi[cont - 1]) | (ni[cont] != ni[cont - 1])
+            if drift.any():
+                t = int(cont[np.argmax(drift)])
+                found.append(
+                    mk("queue/run-structure",
+                       f"core {r} step {t}: (mi, ni) changed mid-run "
+                       f"({mi[t - 1]},{ni[t - 1]}) -> ({mi[t]},{ni[t]})")
+                )
+            nonasc = ki[cont] <= ki[cont - 1]
+            if nonasc.any():
+                t = int(cont[np.argmax(nonasc)])
+                found.append(
+                    mk("queue/run-structure",
+                       f"core {r} step {t}: k-tile not strictly ascending "
+                       f"within its run ({ki[t - 1]} -> {ki[t]})")
+                )
+    out = []
+    _capped(out, found, "run-structure")
+    return out
+
+
+def _rule_coverage(v: _QView, mk) -> list[Finding]:
+    found = []
+    for r in range(v.rows):
+        real = int(min(max(v.reals[r], 0), v.q))
+        l = v.fields["last"][r, :real]
+        mi = v.fields["mi"][r, :real][l == 1]
+        ni = v.fields["ni"][r, :real][l == 1]
+        flushed = np.sort(mi * v.width + ni)
+        want = np.arange(v.mt * v.width, dtype=np.int64)
+        if flushed.shape != want.shape or not np.array_equal(flushed, want):
+            cnt = np.bincount(
+                flushed[(flushed >= 0) & (flushed < v.mt * v.width)],
+                minlength=v.mt * v.width,
+            )
+            missing = int((cnt == 0).sum())
+            dupes = int((cnt > 1).sum())
+            found.append(
+                mk("queue/coverage",
+                   f"core {r}: output tiles not flushed exactly once "
+                   f"({len(flushed)} flushes for {v.mt}×{v.width} tiles; "
+                   f"{missing} missing, {dupes} duplicated)")
+            )
+    out = []
+    _capped(out, found, "coverage")
+    return out
+
+
+def _rule_bounds(v: _QView, mk) -> list[Finding]:
+    found = []
+    f = v.fields
+    nblocks = int(np.asarray(v.art.packed).shape[0])
+    ki_all = f["ki"] if "ki" in f else f["flat_ak"] - f["mi"] * v.kt
+    for name, arr, hi in (
+        ("mi", f["mi"], v.mt),
+        ("ni", f["ni"], v.width),
+        ("ki", ki_all, v.kt),
+        ("wq", f["wq"], nblocks),
+    ):
+        bad = (arr < 0) | (arr >= hi)
+        if bad.any():
+            r, t = np.argwhere(bad)[0]
+            found.append(
+                mk("queue/bounds",
+                   f"{name} out of range at core {r} step {t}: "
+                   f"{arr[r, t]} not in [0, {hi})")
+            )
+    mism = f["flat_ak"] != f["mi"] * v.kt + ki_all
+    if mism.any():
+        r, t = np.argwhere(mism)[0]
+        found.append(
+            mk("queue/bounds",
+               f"flat_ak inconsistent at core {r} step {t}: "
+               f"{f['flat_ak'][r, t]} != mi·Kt + ki = "
+               f"{f['mi'][r, t] * v.kt + ki_all[r, t]}")
+        )
+    if found:  # index fields unreliable: skip the wq / offset re-derivation
+        out = []
+        _capped(out, found, "bounds")
+        return out
+    # wq re-derivation: per-core packed-block ids in (ni-major, ki) order
+    # over the core's bucket sub-mask, plus the concatenation offset — the
+    # exact construction of pack_blocks / pack_multicore_blocks.
+    off = 0
+    for r, bucket in enumerate(v.buckets()):
+        sub = v.bmask[:, bucket]
+        wq_id = np.full(sub.shape, -1, dtype=np.int64)
+        wq_id.T[sub.T] = np.arange(int(sub.sum()), dtype=np.int64)
+        macs = f["valid"][r] == 1
+        ni_r, ki_r, wq_r = f["ni"][r][macs], ki_all[r][macs], f["wq"][r][macs]
+        dead = ni_r >= sub.shape[1]
+        if dead.any():
+            t = int(np.flatnonzero(macs)[np.argmax(dead)])
+            found.append(
+                mk("queue/bounds",
+                   f"core {r} step {t}: MAC step on padding column "
+                   f"ni={f['ni'][r, t]} (bucket holds {sub.shape[1]} columns)")
+            )
+        else:
+            want = np.where(sub.shape[1] > 0, -1, -1) * np.ones_like(wq_r)
+            if sub.shape[1]:
+                want = wq_id[ki_r, ni_r]
+            on_zero = want < 0
+            if on_zero.any():
+                t = int(np.flatnonzero(macs)[np.argmax(on_zero)])
+                found.append(
+                    mk("queue/bounds",
+                       f"core {r} step {t}: MAC step addresses a zero weight "
+                       f"tile (ki={ki_all[r, t]}, ni={f['ni'][r, t]})")
+                )
+            else:
+                mism = wq_r != want + off
+                if mism.any():
+                    t = int(np.flatnonzero(macs)[np.argmax(mism)])
+                    found.append(
+                        mk("queue/bounds",
+                           f"core {r} step {t}: wq={f['wq'][r, t]} but the "
+                           f"packed payload stores this tile at "
+                           f"{int(want[np.argmax(mism)]) + off}")
+                    )
+        off += max(1, int(sub.sum()))
+    if v.conv_ctx is not None:
+        found += _conv_offset_findings(v, ki_all, mk)
+    out = []
+    _capped(out, found, "bounds")
+    return out
+
+
+def _conv_offset_findings(v: _QView, ki_all, mk) -> list:
+    """Re-derive the direct-conv per-step source offsets from the k-index
+    decomposition ``ki = (ky·kw + kx)·ct + ci`` and the conv geometry —
+    exactly ``_prepare_direct``'s lowering."""
+    ctx = v.conv_ctx
+    kw, ct = ctx["kw"], ctx["ct"]
+    sh, sw, oh, bk = ctx["sh"], ctx["sw"], ctx["oh"], v.bk
+    f = v.fields
+    ky, kx, ci = ki_all // (kw * ct), (ki_all // ct) % kw, ki_all % ct
+    want = {
+        "ph": (ky % sh) * sw + kx % sw,
+        "nb": f["mi"] // oh,
+        "r0": f["mi"] % oh + ky // sh,
+        "c0": kx // sw,
+        "ch0": ci * bk,
+    }
+    found = []
+    for name, w in want.items():
+        mism = f[name] != w
+        if mism.any():
+            r, t = np.argwhere(mism)[0]
+            found.append(
+                mk("queue/bounds",
+                   f"conv offset {name} at core {r} step {t}: "
+                   f"{f[name][r, t]} != re-derived {w[r, t]}")
+            )
+    return found
+
+
+def _rule_inert_tail(v: _QView, mk) -> list[Finding]:
+    found = []
+    s, l, va = v.fields["start"], v.fields["last"], v.fields["valid"]
+    inert = (s == 0) & (l == 0) & (va == 0)
+    idx = np.arange(v.q)
+    for r in range(v.rows):
+        real = int(v.reals[r])
+        in_tail = idx >= real
+        early = inert[r] & ~in_tail
+        if early.any():
+            t = int(np.argmax(early))
+            found.append(
+                mk("queue/inert-tail",
+                   f"core {r} step {t}: inert step inside the real queue "
+                   f"(real length {real})")
+            )
+        live_tail = in_tail & ~inert[r]
+        if live_tail.any():
+            t = int(np.argmax(live_tail))
+            found.append(
+                mk("queue/inert-tail",
+                   f"core {r} step {t}: makespan-padding step is not inert "
+                   f"(start={s[r, t]}, last={l[r, t]}, valid={va[r, t]})")
+            )
+        if real < v.q and real >= 1:
+            for name, arr in v.fields.items():
+                if name in ("start", "last", "valid"):
+                    continue
+                drift = arr[r, real:] != arr[r, real - 1]
+                if drift.any():
+                    t = real + int(np.argmax(drift))
+                    found.append(
+                        mk("queue/inert-tail",
+                           f"core {r} step {t}: tail {name}={arr[r, t]} does "
+                           f"not repeat the last real step's {arr[r, real - 1]}"
+                           f" — a tail revisit would smear a stale buffer")
+                    )
+                    break
+    out = []
+    _capped(out, found, "inert-tail")
+    return out
+
+
+def _rule_cores(v: _QView, mk) -> list[Finding]:
+    if v.cores <= 1:
+        return []
+    from repro.core.balance import inter_core_schedule
+
+    out = []
+    perm = np.asarray(v.art.col_perm, dtype=np.int64)
+    inv = np.asarray(v.art.col_inv, dtype=np.int64)
+    w = v.width
+    want_w = max(1, math.ceil(v.nt / v.cores))
+    if w != want_w:
+        out.append(
+            mk("cores/partition",
+               f"local_nt={w} != ceil(Nt / cores) = {want_w}")
+        )
+    if perm.shape != (v.cores * w,):
+        out.append(
+            mk("cores/partition",
+               f"col_perm shape {perm.shape} != (cores·local_nt,) = "
+               f"({v.cores * w},)")
+        )
+        return out
+    if ((perm < -1) | (perm >= v.nt)).any():
+        out.append(
+            mk("cores/partition",
+               f"col_perm entries outside [-1, {v.nt}): "
+               f"{perm[(perm < -1) | (perm >= v.nt)][:4].tolist()}")
+        )
+        return out
+    live = perm >= 0
+    vals = np.sort(perm[live])
+    if not np.array_equal(vals, np.arange(v.nt)):
+        out.append(
+            mk("cores/partition",
+               f"live col_perm entries are not a permutation of the {v.nt} "
+               f"output tile-columns (got {vals.tolist()[:8]}...)")
+        )
+        return out
+    seg = live.reshape(v.cores, w)
+    ragged = seg[:, 1:] & ~seg[:, :-1]
+    if ragged.any():
+        c = int(np.argwhere(ragged)[0][0])
+        out.append(
+            mk("cores/partition",
+               f"core {c}: live columns not prefix-packed before the -1 "
+               f"padding slots")
+        )
+    if inv.shape != (v.nt,) or not np.array_equal(
+        inv[perm[live]], np.flatnonzero(live)
+    ):
+        out.append(
+            mk("cores/partition",
+               "col_inv is not the inverse of col_perm's live entries — the "
+               "output stitch would permute columns")
+        )
+    # Gauges + schedule legality: re-derive everything from the weight mask.
+    dens = v.bmask.sum(axis=0).astype(np.int64)
+    buckets = v.buckets()
+    core_cost = np.asarray(v.art.core_cost, dtype=np.int64)
+    core_steps = np.asarray(v.art.core_steps, dtype=np.int64)
+    for c, b in enumerate(buckets):
+        want_cost = int(dens[b].sum())
+        if int(core_cost[c]) != want_cost:
+            out.append(
+                mk("cores/gauges",
+                   f"core {c}: core_cost={int(core_cost[c])} != Σ column "
+                   f"popcounts {want_cost}")
+            )
+        zero_cols = int((dens[b] == 0).sum())
+        want_steps = v.mt * (want_cost + zero_cols + (w - len(b)))
+        if int(core_steps[c]) != want_steps:
+            out.append(
+                mk("cores/gauges",
+                   f"core {c}: core_steps={int(core_steps[c])} != re-derived "
+                   f"MACs + zero-writes + column padding = {want_steps}")
+            )
+    if v.consistent and int(core_steps.max(initial=0)) != v.q:
+        out.append(
+            mk("cores/gauges",
+               f"queue padded to {v.q} steps but max(core_steps) = "
+               f"{int(core_steps.max(initial=0))} — not makespan padding")
+        )
+    sched = inter_core_schedule(
+        dens.astype(np.float64), v.cores, balanced=True, capacity=w
+    )
+    lpt = all(
+        np.array_equal(np.asarray(a, dtype=np.int64), b)
+        for a, b in zip(sched.assignment, buckets)
+    )
+    naive = all(
+        np.array_equal(np.arange(c, v.nt, v.cores, dtype=np.int64), b)
+        for c, b in enumerate(buckets)
+    )
+    if not (lpt or naive):
+        out.append(
+            mk("cores/partition",
+               "column buckets match neither the balanced LPT schedule "
+               "(inter_core_schedule) nor the naive round-robin — unknown "
+               "partition policy")
+        )
+    return out
+
+
+def _rule_lookahead(v: _QView, mk, *, deep=True) -> list[Finding]:
+    from repro.kernels.compaction import compaction_meta
+
+    la = getattr(v.art, "lookahead", 0)
+    cmeta = getattr(v.art, "cmeta", None)
+    out = []
+    if not isinstance(la, (int, np.integer)) or int(la) < 0:
+        out.append(mk("lookahead/cmeta", f"lookahead={la!r} is not an int >= 0"))
+        return out
+    if int(la) == 0:
+        if cmeta is not None:
+            out.append(
+                mk("lookahead/cmeta",
+                   "artifact carries compaction metadata but lookahead=0 "
+                   "(the gated path never consumes it)")
+            )
+        return out
+    if not isinstance(cmeta, dict) or set(cmeta) != {"seg_base", "seg_end", "pad"}:
+        out.append(
+            mk("lookahead/cmeta",
+               f"lookahead={int(la)} but cmeta keys are "
+               f"{sorted(cmeta) if isinstance(cmeta, dict) else cmeta!r} "
+               f"(want seg_base/seg_end/pad)")
+        )
+        return out
+    if not deep:
+        # The O(steps) re-derivation below belongs to the deep tier; the
+        # presence/shape contract above is the always-on half.
+        return out
+    start = np.asarray(v.art.start)
+    if v.cores > 1:
+        want = compaction_meta(start, np.asarray(v.art.core_steps))
+    else:
+        want = compaction_meta(start)
+    for key in ("seg_base", "seg_end", "pad"):
+        got = np.asarray(cmeta[key])
+        if got.shape != np.asarray(want[key]).shape or not np.array_equal(
+            got, want[key]
+        ):
+            out.append(
+                mk("lookahead/cmeta",
+                   f"cmeta[{key!r}] differs from compaction_meta re-derivation"
+                   f" — runtime compaction would mis-place segments")
+            )
+    return out
+
+
+def _queue_findings(
+    art, *, conv_ctx=None, layer=None, batch=None, deep=True
+) -> list[Finding]:
+    """All queue/cores/lookahead/geometry rules over one queue artifact.
+
+    ``deep=False`` restricts to the rules whose cost is independent of the
+    queue length (geometry, partition, gauges, the static half of the
+    lookahead contract) — the verify-on-load tier, bounded < 5% of load
+    time by ``kernel_bench``.  ``deep=True`` adds the per-step scans
+    (step classes, run structure, coverage, bounds, inert tail, cmeta
+    re-derivation) — the compile-time / CLI / CI tier.
+    """
+
+    def mk(rule, detail, level="error"):
+        return Finding(rule, detail, layer=layer, batch=batch, level=level)
+
+    v = _QView(art, conv_ctx)
+    out = _rule_geometry(v, mk)
+    if not v.consistent:
+        # Shape-inconsistent queues would turn every later rule into a numpy
+        # broadcast crash; report the geometry finding and stop here.
+        return out
+    if deep:
+        out += _rule_step_classes(v, mk)
+        out += _rule_run_structure(v, mk)
+        out += _rule_coverage(v, mk)
+        out += _rule_bounds(v, mk)
+        out += _rule_inert_tail(v, mk)
+    out += _rule_cores(v, mk)
+    out += _rule_lookahead(v, mk, deep=deep)
+    return out
+
+
+# -- artifact dispatch --------------------------------------------------------
+
+
+def _conv_wrapper_findings(pcw, spec, batch, layer, *, deep=True) -> list[Finding]:
+    from repro.kernels.phantom_conv import conv_geometry
+
+    out = []
+
+    def err(rule, detail):
+        out.append(Finding(rule, detail, layer=layer, batch=batch))
+
+    if pcw.mode not in ("direct", "im2col"):
+        err("plan/geometry", f"unknown conv lowering mode {pcw.mode!r}")
+        return out
+    inner = pcw.plan if pcw.mode == "direct" else pcw.pw
+    other = pcw.pw if pcw.mode == "direct" else pcw.plan
+    if inner is None or other is not None:
+        err("plan/geometry",
+            f"mode={pcw.mode!r} but plan is {'set' if pcw.plan is not None else 'None'}"
+            f" and pw is {'set' if pcw.pw is not None else 'None'}")
+        return out
+    sh, sw = pcw.stride
+    try:
+        oh, ow, _ = conv_geometry(
+            pcw.in_hw[0], pcw.in_hw[1], pcw.kh, pcw.kw, (sh, sw), pcw.padding
+        )
+    except ValueError as e:
+        err("plan/geometry", f"conv geometry no longer resolves: {e}")
+        return out
+    if tuple(pcw.out_hw) != (oh, ow):
+        err("plan/geometry",
+            f"out_hw={tuple(pcw.out_hw)} != conv_geometry {(oh, ow)}")
+    if spec is not None and hasattr(spec, "kh"):
+        want_groups = spec.in_ch if getattr(spec, "depthwise", False) else 1
+        for name, got, want in (
+            ("kh", pcw.kh, spec.kh),
+            ("kw", pcw.kw, spec.kw),
+            ("stride", tuple(pcw.stride), tuple(spec.stride)),
+            ("in_ch", pcw.in_ch, spec.in_ch),
+            ("out_ch", pcw.out_ch, spec.out_ch),
+            ("groups", pcw.groups, want_groups),
+            ("in_hw", tuple(pcw.in_hw), (spec.in_h, spec.in_w)),
+            ("padding", pcw.padding, spec.pad.upper()),
+        ):
+            if got != want:
+                err("plan/geometry",
+                    f"conv artifact {name}={got!r} != spec's {want!r}")
+    if batch is not None and int(pcw.batch) != int(batch):
+        err("plan/geometry",
+            f"plan lowered for batch {pcw.batch} but cached under batch {batch}")
+    blk = tuple(inner.block)
+    bk, bn = int(blk[-2]), int(blk[-1])
+    if pcw.mode == "direct":
+        ct = int(inner.ct)
+        want_ct = math.ceil(pcw.in_ch / bk)
+        if ct != want_ct:
+            err("plan/geometry", f"ct={ct} != ceil(in_ch / bk) = {want_ct}")
+        want_grid = (
+            pcw.batch * oh,
+            pcw.kh * pcw.kw * ct,
+            math.ceil(pcw.out_ch / bn),
+        )
+        if tuple(inner.grid_tiles) != want_grid:
+            err("plan/geometry",
+                f"direct grid_tiles {tuple(inner.grid_tiles)} != "
+                f"(B·oh, kh·kw·ct, Nt) = {want_grid}")
+        want_phase = (
+            sh * sw, pcw.batch, oh + (pcw.kh - 1) // sh,
+            ow + (pcw.kw - 1) // sw, ct * bk,
+        )
+        if tuple(inner.phase_shape) != want_phase:
+            err("plan/geometry",
+                f"phase_shape {tuple(inner.phase_shape)} != {want_phase}")
+        ctx = dict(kw=pcw.kw, ct=ct, sh=sh, sw=sw, oh=oh)
+        out += _queue_findings(
+            inner, conv_ctx=ctx, layer=layer, batch=batch, deep=deep
+        )
+    else:
+        k_rows = pcw.kh * pcw.kw * pcw.in_ch
+        if tuple(inner.shape) != (k_rows, pcw.out_ch):
+            err("plan/geometry",
+                f"im2col pw.shape {tuple(inner.shape)} != "
+                f"(kh·kw·Cin, Cout) = {(k_rows, pcw.out_ch)}")
+        bm = int(inner.block[0])
+        want_grid = (
+            math.ceil(pcw.batch * oh * ow / bm),
+            math.ceil(k_rows / bk),
+            math.ceil(pcw.out_ch / bn),
+        )
+        if tuple(inner.grid_tiles) != want_grid:
+            err("plan/geometry",
+                f"im2col grid_tiles {tuple(inner.grid_tiles)} != {want_grid}")
+        out += _queue_findings(inner, layer=layer, batch=batch, deep=deep)
+    return out
+
+
+def check_artifact(
+    art, *, spec=None, batch=None, layer=None, deep=True
+) -> list[Finding]:
+    """Run every applicable rule over one prepared plan artifact.
+
+    Dispatches on the artifact type (``PhantomConvWeight`` wrapper,
+    ``PhantomWeight`` / ``DirectConvPlan`` queue artifacts, dicts of them —
+    the FFN kind); unknown plan types are skipped (custom kinds verify what
+    they register).  ``spec`` enables the spec-aware geometry cross-checks.
+    ``deep=False`` skips the O(steps) queue scans (see ``_queue_findings``).
+    Returns findings; raises nothing.
+    """
+    from repro.kernels.ops import PhantomWeight
+    from repro.kernels.phantom_conv import DirectConvPlan, PhantomConvWeight
+
+    if isinstance(art, PhantomConvWeight):
+        return _conv_wrapper_findings(art, spec, batch, layer, deep=deep)
+    if isinstance(art, (PhantomWeight, DirectConvPlan)):
+        out = []
+        if (
+            isinstance(art, PhantomWeight)
+            and spec is not None
+            and hasattr(spec, "in_dim")
+        ):
+            bm, bk, bn = (int(b) for b in art.block)
+            if tuple(art.shape) != (spec.in_dim, spec.out_dim):
+                out.append(Finding(
+                    "plan/geometry",
+                    f"fc pw.shape {tuple(art.shape)} != "
+                    f"(in_dim, out_dim) = {(spec.in_dim, spec.out_dim)}",
+                    layer=layer, batch=batch,
+                ))
+            elif batch is not None:
+                want = (
+                    math.ceil(int(batch) / bm),
+                    math.ceil(spec.in_dim / bk),
+                    math.ceil(spec.out_dim / bn),
+                )
+                if tuple(art.grid_tiles) != want:
+                    out.append(Finding(
+                        "plan/geometry",
+                        f"fc grid_tiles {tuple(art.grid_tiles)} != {want}",
+                        layer=layer, batch=batch,
+                    ))
+        return out + _queue_findings(art, layer=layer, batch=batch, deep=deep)
+    if isinstance(art, dict):
+        out = []
+        for key, sub in art.items():
+            if isinstance(sub, (PhantomWeight, DirectConvPlan, PhantomConvWeight, dict)):
+                out += check_artifact(
+                    sub, batch=batch,
+                    layer=f"{layer}/{key}" if layer else str(key),
+                    deep=deep,
+                )
+        return out
+    return []
+
+
+# -- program-level rules ------------------------------------------------------
+
+
+def _graph_findings(prog) -> list[Finding]:
+    from repro.program.plans import build_nodes
+    from repro.program.registry import kind_for
+
+    out = []
+    try:
+        rebuilt = build_nodes(prog.layers, cfg=prog.cfg, overrides=prog.overrides)
+    except Exception as e:
+        return [Finding(
+            "graph/mask-flow",
+            f"node graph no longer rebuilds from (layers, cfg, overrides): {e}",
+        )]
+    if len(rebuilt) != len(prog.nodes):
+        out.append(Finding(
+            "graph/mask-flow",
+            f"program holds {len(prog.nodes)} nodes but the layer list "
+            f"rebuilds to {len(rebuilt)}",
+        ))
+    else:
+        for i, (got, want) in enumerate(zip(prog.nodes, rebuilt)):
+            if got != want:
+                diffs = [
+                    f.name for f in dataclasses.fields(got)
+                    if getattr(got, f.name) != getattr(want, f.name)
+                ]
+                out.append(Finding(
+                    "graph/mask-flow",
+                    f"node {i} diverges from the §3.8 rebuild in {diffs} "
+                    f"(glue / τ-at-producer / last-layer contract)",
+                    layer=getattr(got, "name", None),
+                ))
+    for node in prog.nodes:
+        try:
+            kind = kind_for(node.spec)
+        except KeyError as e:
+            out.append(Finding("graph/mask-flow", str(e), layer=node.name))
+            continue
+        missing = [
+            m for m in ("prepare", "apply", "mask_out", "stats")
+            if not callable(getattr(kind, m, None))
+        ]
+        if missing or not isinstance(getattr(kind, "name", None), str):
+            out.append(Finding(
+                "graph/mask-flow",
+                f"layer kind {type(kind).__name__} does not implement the "
+                f"full LayerKind protocol (missing: "
+                f"{missing + ([] if isinstance(getattr(kind, 'name', None), str) else ['name'])})",
+                layer=node.name,
+            ))
+    return out
+
+
+def _override_findings(prog) -> list[Finding]:
+    from repro.core.blocksparse import BALANCE_MODES
+
+    out = []
+    names = {spec.name for spec in prog.layers}
+    for lname, ov in prog.overrides.items():
+        def err(detail, level="error"):
+            out.append(Finding("config/overrides", detail, layer=lname, level=level))
+
+        if lname not in names:
+            err(f"override names unknown layer {lname!r}")
+            continue
+        if not isinstance(ov, dict):
+            err(f"override is {type(ov).__name__}, not a field dict")
+            continue
+        try:
+            prog.cfg.with_overrides(**ov)
+        except (TypeError, ValueError) as e:
+            err(f"override does not resolve against PhantomConfig: {e}")
+            continue
+        for field, val in ov.items():
+            if field == "balance" and val not in BALANCE_MODES:
+                err(f"balance={val!r} not in {BALANCE_MODES}")
+            elif field == "conv_mode" and val not in ("direct", "im2col"):
+                err(f"conv_mode={val!r} not in ('direct', 'im2col')")
+            elif field == "cores" and (
+                not isinstance(val, (int, np.integer)) or val < 1
+            ):
+                err(f"cores={val!r} is not an int >= 1")
+            elif field == "lookahead" and val is not None and (
+                not isinstance(val, (int, np.integer)) or val < 0
+            ):
+                err(f"lookahead={val!r} is not None or an int >= 0")
+            elif field == "block" and (
+                len(tuple(val)) != 3
+                or any(not isinstance(b, (int, np.integer)) or b < 1
+                       for b in tuple(val))
+            ):
+                err(f"block={val!r} is not a 3-tuple of positive tile sizes")
+            elif field == "mode" and val not in ("dense", "masked", "kernel", "auto"):
+                err(f"mode={val!r} not in ('dense', 'masked', 'kernel', 'auto')")
+        # Live-search-space membership is advisory (warn): explicit caller
+        # overrides may legitimately sit outside what tune="search" explores,
+        # but a *tuned* program drifting out of the space means the cache or
+        # the space moved — surface it.
+        try:
+            from repro.tune.space import override_in_space
+
+            if not override_in_space(ov, prog.cfg):
+                err(
+                    f"override {ov!r} is outside the live tune search space "
+                    f"(repro.tune.space.DEFAULT_SPACE): tune='search' can no "
+                    f"longer reproduce this config",
+                    level="warn",
+                )
+        except ImportError:  # pragma: no cover - tuner is an optional layer
+            pass
+    return out
+
+
+def check_program(
+    prog, *, batches=None, graph: bool = True, deep: bool = True
+) -> list[Finding]:
+    """Run the full rule set over a program; returns findings, raises nothing.
+
+    ``batches``: iterable of lowered batch sizes to check (default: all
+    cached plans; pass ``()`` for graph-only).  ``graph=False`` skips the
+    graph/override rules (used by the per-batch hook in ``at_batch``, which
+    verified the graph at compile time already).  ``deep=False`` keeps only
+    the rules whose cost is independent of queue length — the fast
+    verify-on-load tier (see ``_queue_findings``).
+    """
+    findings: list[Finding] = []
+    if graph:
+        findings += _graph_findings(prog)
+        findings += _override_findings(prog)
+    plans = prog._plans
+    if batches is None:
+        sel = dict(plans)
+    else:
+        sel = {int(b): plans[int(b)] for b in batches if int(b) in plans}
+    node_names = {node.name for node in prog.nodes}
+    for b in sorted(sel):
+        prepared = sel[b]
+        for node in prog.nodes:
+            if node.name not in prepared:
+                findings.append(Finding(
+                    "plan/geometry", "layer has no prepared plan",
+                    layer=node.name, batch=b,
+                ))
+                continue
+            findings += check_artifact(
+                prepared[node.name], spec=node.spec, batch=b, layer=node.name,
+                deep=deep,
+            )
+        for extra in sorted(set(prepared) - node_names):
+            findings.append(Finding(
+                "plan/geometry", "prepared plan for a layer not in the graph",
+                layer=extra, batch=b,
+            ))
+    return findings
+
+
+def verify_program(
+    prog, *, path=None, batches=None, graph: bool = True, deep: bool = True
+):
+    """Verify and enforce: raise :class:`VerifyError` on error findings,
+    emit one :class:`UserWarning` for warn findings.  Returns the findings
+    (all of them) when no error-level finding exists."""
+    findings = check_program(prog, batches=batches, graph=graph, deep=deep)
+    warns = [f for f in findings if f.level == "warn"]
+    errors = [f for f in findings if f.level != "warn"]
+    if warns:
+        warnings.warn(
+            "phantom verify: " + "; ".join(f.format() for f in warns),
+            UserWarning,
+            stacklevel=2,
+        )
+    if errors:
+        raise VerifyError(errors, path=path)
+    return findings

@@ -1,0 +1,341 @@
+"""Verifier self-check: clean grid + seeded-mutation matrix (DESIGN.md §13).
+
+Two halves, both required by the tier-1 CI step
+``python -m repro.verify --self-check``:
+
+1. **Clean grid** — the verifier must pass with zero findings on
+   ``phantom.compile`` of the paper's §5.1 evaluation networks (VGG16 and
+   MobileNetV1, reduced resolution) across the full
+   ``{conv_mode} × {cores=1,4} × {lookahead=0,L}`` grid.  A false positive
+   here means a rule misstates an invariant the real pipeline establishes.
+
+2. **Mutation matrix** — one seeded corruption per verifier rule, applied
+   to a known-good compiled program (or its saved artifact), each asserting
+   the *specific* rule catches it.  A rule that catches nothing is dead
+   code; the matrix is the liveness proof, re-run on every CI build so a
+   future scheduling change cannot silently lobotomise a rule.
+
+The mutation program is crafted, not random: the conv layer's column
+blocks carry unequal densities (1/3/5/7 of 9 k-tiles) so the 4-core
+partition has a guaranteed inert makespan tail, and the FC layer has a
+fully-zero column block so zero-write steps exist.  Shared with
+``tests/test_verify.py`` so pytest and the CLI exercise the same matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.verify.rules import (
+    VerifyError,
+    artifact_fingerprint,
+    check_program,
+)
+
+__all__ = [
+    "build_mutation_program",
+    "clean_grid",
+    "mutation_matrix",
+    "restamp_fingerprint",
+    "run_selfcheck",
+]
+
+
+# -- clean grid ---------------------------------------------------------------
+
+#: (model, conv_mode, cores, lookahead) — the acceptance grid.
+GRID = [
+    (model, conv_mode, cores, la)
+    for model in ("vgg16", "mobilenet")
+    for conv_mode in ("direct", "im2col")
+    for cores in (1, 4)
+    for la in (0, 4)
+]
+
+
+def clean_grid(input_hw: int = 32, batch: int = 1, block: int = 32):
+    """Compile VGG16 + MobileNet across the grid with ``verify=True``.
+
+    Yields ``(label, error-or-None)`` per grid point — compile itself runs
+    the verifier at every lowering, so a yielded ``None`` means zero
+    error-level findings on every layer's plan.
+    """
+    import phantom
+    from repro.core.phantom_linear import PhantomConfig
+    from repro.tune.__main__ import _MODELS, build_params
+
+    for model, conv_mode, cores, la in GRID:
+        make, wd, _ = _MODELS[model]
+        layers = make(include_fc=True, input_hw=input_hw)
+        cfg = PhantomConfig(
+            enabled=True,
+            block=(block,) * 3,
+            conv_mode=conv_mode,
+            cores=cores,
+            lookahead=la,
+        )
+        params = build_params(layers, wd, cfg, seed=0)
+        label = f"{model}/{conv_mode}/cores={cores}/lookahead={la}"
+        try:
+            phantom.compile(layers, params, cfg, batch=batch, verify=True)
+        except VerifyError as e:
+            yield label, e
+        else:
+            yield label, None
+
+
+# -- mutation matrix ----------------------------------------------------------
+
+
+def build_mutation_program():
+    """A small known-good program with every structure the rules exercise:
+    a 4-core direct conv with lookahead (unequal column densities → inert
+    tail, padding columns), plus a single-core FC with a zero column block
+    (zero-write steps).  Compiled with ``verify=False`` so mutations are
+    applied to an unchecked object."""
+    import phantom
+    from repro.core.dataflow import ConvSpec, FCSpec
+    from repro.core.phantom_linear import PhantomConfig
+
+    layers = [
+        ConvSpec("c1", in_ch=16, out_ch=64, in_h=12, in_w=12, kh=3, kw=3),
+        FCSpec("fc", in_dim=64, out_dim=48, pool="gap"),
+    ]
+    cfg = PhantomConfig(enabled=True, block=(16, 16, 16))
+    rng = np.random.default_rng(0)
+    # conv: K = 3·3·16 = 144 rows → 9 k-tiles; 4 column blocks with
+    # 1/3/5/7 live k-tiles → per-core costs 1,3,5,7 under cores=4.
+    wc = rng.standard_normal((144, 64)).astype(np.float32) * 0.05
+    for j in range(4):
+        wc[(2 * j + 1) * 16 :, j * 16 : (j + 1) * 16] = 0.0
+    # fc: 4 k-tiles × 3 column blocks; the last column block is all-zero,
+    # so its output tiles are covered by §3.8 zero-write steps.
+    wf = rng.standard_normal((64, 48)).astype(np.float32) * 0.05
+    wf[:, 32:] = 0.0
+    params = {
+        "c1": {"w": wc.reshape(3, 3, 16, 64), "b": np.zeros(64, np.float32)},
+        "fc": {"w": wf, "b": np.zeros(48, np.float32)},
+    }
+    overrides = {"c1": {"cores": 4, "lookahead": 8, "balance": "full"}}
+    return phantom.compile(
+        layers, params, cfg, batch=2, overrides=overrides, verify=False
+    )
+
+
+def _conv_plan(prog):
+    return prog._plans[2]["c1"].plan
+
+
+def _fc_pw(prog):
+    return prog._plans[2]["fc"]
+
+
+def _mut_step_classes(prog):
+    pw = _fc_pw(prog)
+    s, l, v = map(np.asarray, (pw.start, pw.last, pw.valid))
+    t = int(np.flatnonzero((s == 1) & (l == 0))[0])
+    v[t] = 0  # (1, 0, 0): zeroes the accumulator mid-run without a flush
+
+
+def _mut_run_structure(prog):
+    np.asarray(_fc_pw(prog).start)[0] = 0  # queue no longer opens a run
+
+
+def _mut_coverage(prog):
+    pw = _fc_pw(prog)
+    s, l, v, ni = map(np.asarray, (pw.start, pw.last, pw.valid, pw.ni))
+    # retarget a zero-write (single-step run: start=last=1, valid=0) onto a
+    # column another run already flushes → duplicate + missing tile
+    t = int(np.flatnonzero((s == 1) & (l == 1) & (v == 0))[0])
+    ni[t] = 0
+
+
+def _mut_bounds(prog):
+    pw = _fc_pw(prog)
+    t = int(np.flatnonzero(np.asarray(pw.valid) == 1)[0])
+    np.asarray(pw.wq)[t] = np.asarray(pw.packed).shape[0] + 3
+
+
+def _mut_inert_tail(prog):
+    plan = _conv_plan(prog)
+    c = int(np.argmin(np.asarray(plan.core_steps)))
+    wq = np.asarray(plan.wq)
+    # an in-range wq change on a padding step: invisible to every range /
+    # MAC re-derivation check (valid=0 there), but a tail revisit would
+    # prefetch the wrong payload block
+    wq[c, -1] = (wq[c, -1] + 1) % np.asarray(plan.packed).shape[0]
+
+
+def _mut_partition(prog):
+    cp = np.asarray(_conv_plan(prog).col_perm)
+    cp[0], cp[1] = cp[1].copy(), cp[0].copy()
+
+
+def _mut_gauges(prog):
+    np.asarray(_conv_plan(prog).core_cost)[0] += 1
+
+
+def _mut_cmeta(prog):
+    np.asarray(_conv_plan(prog).cmeta["seg_end"]).reshape(-1)[0] += 1
+
+
+def _mut_geometry(prog):
+    prog._plans[2]["c1"].batch += 1
+
+
+def _mut_graph(prog):
+    nodes = list(prog.nodes)  # last FC: activation "none" by the §3.8 rule
+    nodes[-1] = dataclasses.replace(nodes[-1], activation="relu")
+    prog.nodes = type(prog.nodes)(nodes)
+
+
+def _mut_overrides(prog):
+    prog.overrides["fc"] = {"balance": "sideways"}
+
+
+#: rule → in-memory corruption of a compiled program.
+PROGRAM_MUTATIONS = [
+    ("queue/step-classes", _mut_step_classes),
+    ("queue/run-structure", _mut_run_structure),
+    ("queue/coverage", _mut_coverage),
+    ("queue/bounds", _mut_bounds),
+    ("queue/inert-tail", _mut_inert_tail),
+    ("cores/partition", _mut_partition),
+    ("cores/gauges", _mut_gauges),
+    ("lookahead/cmeta", _mut_cmeta),
+    ("plan/geometry", _mut_geometry),
+    ("graph/mask-flow", _mut_graph),
+    ("config/overrides", _mut_overrides),
+]
+
+
+# -- file-level mutations -----------------------------------------------------
+
+
+def _step_dir(path: str) -> str:
+    (name,) = [
+        n for n in os.listdir(path)
+        if n.startswith("step_") and not n.endswith(".tmp")
+    ]
+    return os.path.join(path, name)
+
+
+def restamp_fingerprint(path: str) -> None:
+    """Recompute and rewrite the fingerprint stamp for a (doctored) saved
+    program, so targeted corruption tests get past the ``artifact/
+    fingerprint`` gate and hit the structural rule they aim at."""
+    d = _step_dir(path)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    meta = manifest["extra"]
+    meta.setdefault("verify", {})["fingerprint"] = artifact_fingerprint(
+        meta, arrays
+    )
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def _file_mut_version(path):
+    d = _step_dir(path)
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    manifest["extra"]["format"] = 99
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def _file_mut_fingerprint(path):
+    d = _step_dir(path)
+    npz = os.path.join(d, "arrays.npz")
+    with np.load(npz) as z:
+        arrays = {k: z[k] for k in z.files}
+    key = next(k for k in sorted(arrays) if arrays[k].size)
+    flat = arrays[key].reshape(-1)
+    flat[0] = flat[0] + 1 if flat[0] == 0 else 0  # bit-rot one element
+    np.savez(npz, **arrays)  # fingerprint NOT re-stamped
+
+
+def _file_mut_read(path):
+    d = _step_dir(path)
+    npz = os.path.join(d, "arrays.npz")
+    with np.load(npz) as z:
+        arrays = {k: z[k] for k in z.files}
+    victim = next(k for k in sorted(arrays) if k.startswith("plans/"))
+    del arrays[victim]  # truncation: metadata now points at a missing array
+    np.savez(npz, **arrays)
+    restamp_fingerprint(path)
+
+
+#: rule → on-disk corruption of a saved program (load must raise the rule).
+FILE_MUTATIONS = [
+    ("artifact/version", _file_mut_version),
+    ("artifact/fingerprint", _file_mut_fingerprint),
+    ("artifact/read", _file_mut_read),
+]
+
+
+def mutation_matrix():
+    """Run every mutation; yield ``(rule, mutation name, caught, detail)``.
+
+    ``caught`` is True when the targeted rule appears among the error-level
+    findings (in-memory mutations) / in the raised :class:`VerifyError`
+    (file-level mutations).  Other rules co-firing is fine — corruptions
+    overlap — but the *named* rule must fire or it is dead code.
+    """
+    from repro.program import PhantomProgram
+
+    for rule, mut in PROGRAM_MUTATIONS:
+        prog = build_mutation_program()
+        mut(prog)
+        findings = check_program(prog)
+        hit = [f for f in findings if f.rule == rule and f.level == "error"]
+        yield rule, mut.__name__, bool(hit), (
+            hit[0].format() if hit else f"{len(findings)} other finding(s)"
+        )
+    for rule, mut in FILE_MUTATIONS:
+        prog = build_mutation_program()
+        with tempfile.TemporaryDirectory(prefix="phantom-verify-") as tmp:
+            path = os.path.join(tmp, "prog")
+            prog.save(path)
+            mut(path)
+            try:
+                PhantomProgram.load(path, verify="full")
+            except VerifyError as e:
+                hit = [f for f in e.findings if f.rule == rule]
+                yield rule, mut.__name__, bool(hit), (
+                    hit[0].format() if hit
+                    else f"raised for {[f.rule for f in e.findings]}"
+                )
+            except Exception as e:  # raw KeyError etc. = the old failure mode
+                yield rule, mut.__name__, False, f"unstructured {type(e).__name__}: {e}"
+            else:
+                yield rule, mut.__name__, False, "load accepted the corrupted artifact"
+
+
+def run_selfcheck(full_grid: bool = True) -> int:
+    """CI entry: clean grid + mutation matrix; 0 iff both halves pass."""
+    failures = 0
+    if full_grid:
+        print("== clean grid (compile + verify, zero findings expected) ==")
+        for label, err in clean_grid():
+            if err is None:
+                print(f"  ok    {label}")
+            else:
+                failures += 1
+                print(f"  FAIL  {label}\n{err}")
+    print("== mutation matrix (each rule must catch its corruption) ==")
+    for rule, name, caught, detail in mutation_matrix():
+        if caught:
+            print(f"  CAUGHT  {rule:<22} {name}")
+        else:
+            failures += 1
+            print(f"  DEAD    {rule:<22} {name}: {detail}")
+    if failures:
+        print(f"self-check: {failures} failure(s)")
+        return 1
+    print("self-check: OK (grid clean, no dead rules)")
+    return 0

@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""AST-based repo lint for Phantom codebase rules (DESIGN.md §13).
+
+Three rules, each reported as ``path:line: [PHxxx] message`` (exit 1 on any
+finding — the CI tier-1 step fails the build):
+
+* **PH001** — no hand-rolled timing outside the observability layer.
+  Wall-clock reads (``time.perf_counter`` / ``time.time`` /
+  ``time.monotonic`` / ``timeit.default_timer`` calls) belong in
+  ``repro.obs.timeit`` and the span recorder; ad-hoc timing loops elsewhere
+  measure without warmup/`block_until_ready` discipline and rot into
+  pseudo-benchmarks.  Allowlisted: ``repro/obs/``, ``repro/checkpoint/``
+  (manifest timestamps), ``repro/launch/``.
+
+* **PH002** — no nondeterminism in cost models or the verifier
+  (``repro/tune/``, ``repro/verify/``): wall-clock-dependent values
+  (``datetime.now`` etc.), the global ``random`` module, or an *unseeded*
+  ``numpy`` ``default_rng()``.  Tuning decisions and verification verdicts
+  must be replayable bit-for-bit; seeded generators are fine.
+
+* **PH003** — a class registered via ``register_layer_kind`` in the same
+  module must implement the full ``LayerKind`` protocol (``prepare`` /
+  ``apply`` / ``mask_out`` / ``stats`` and a ``name`` attribute).  The
+  registry's ``runtime_checkable`` isinstance check only sees the methods
+  at call time, one missing hook = one runtime crash per hook.
+
+Usage::
+
+    python tools/lint_phantom.py src/
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import sys
+
+TIMING_ALLOW = ("repro/obs/", "repro/checkpoint/", "repro/launch/")
+TIMING_FUNCS = {
+    "time": {"time", "time_ns", "perf_counter", "perf_counter_ns",
+             "monotonic", "monotonic_ns", "process_time"},
+    "timeit": {"default_timer"},
+}
+DETERMINISTIC_DIRS = ("repro/tune/", "repro/verify/")
+PROTOCOL = ("prepare", "apply", "mask_out", "stats")
+
+
+def _dotted(node) -> str | None:
+    """``a.b.c`` for a pure attribute chain rooted at a Name, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _call_target(node: ast.Call):
+    """``(base, attr)`` for ``base.attr(...)`` calls (``base`` may be dotted,
+    e.g. ``np.random`` for ``np.random.default_rng()``), ``(None, name)``
+    for bare ``name(...)`` calls, else ``(None, None)``."""
+    f = node.func
+    if isinstance(f, ast.Attribute):
+        return _dotted(f.value), f.attr
+    if isinstance(f, ast.Name):
+        return None, f.id
+    return None, None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, relpath: str):
+        self.relpath = relpath
+        self.findings: list[tuple[int, str, str]] = []
+        self.timing_scope = not any(p in relpath for p in TIMING_ALLOW)
+        self.det_scope = any(p in relpath for p in DETERMINISTIC_DIRS)
+        # names imported straight into the module namespace
+        self.from_time: set[str] = set()
+        self.from_random: set[str] = set()
+        self.classes: dict[str, ast.ClassDef] = {}
+        self.registered: list[tuple[int, str]] = []  # (line, class name)
+
+    def add(self, line: int, code: str, msg: str):
+        self.findings.append((line, code, msg))
+
+    # -- imports --------------------------------------------------------------
+    def visit_ImportFrom(self, node: ast.ImportFrom):
+        names = {a.asname or a.name for a in node.names}
+        if node.module == "time":
+            self.from_time |= names & TIMING_FUNCS["time"]
+        elif node.module == "timeit":
+            self.from_time |= names & TIMING_FUNCS["timeit"]
+        elif node.module == "random":
+            self.from_random |= names
+        self.generic_visit(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.classes[node.name] = node
+        self.generic_visit(node)
+
+    # -- calls ----------------------------------------------------------------
+    def visit_Call(self, node: ast.Call):
+        base, attr = _call_target(node)
+        if self.timing_scope and (
+            (base in TIMING_FUNCS and attr in TIMING_FUNCS[base])
+            or (base is None and attr in self.from_time)
+        ):
+            self.add(
+                node.lineno, "PH001",
+                f"hand-rolled timing call {attr}(); use repro.obs.timeit / "
+                f"Recorder.span (allowlisted: {', '.join(TIMING_ALLOW)})",
+            )
+        if self.det_scope:
+            if base == "random" or (base is None and attr in self.from_random):
+                self.add(
+                    node.lineno, "PH002",
+                    f"global-random call {attr}() in deterministic code; "
+                    f"use a seeded np.random.default_rng",
+                )
+            elif attr in ("now", "utcnow", "today") and base is not None and (
+                base.split(".")[-1] in ("datetime", "date", "dt")
+            ):
+                self.add(
+                    node.lineno, "PH002",
+                    f"wall-clock value {base}.{attr}() in deterministic "
+                    f"code; thread timestamps in as arguments",
+                )
+            elif attr == "default_rng" and not node.args and not node.keywords:
+                self.add(
+                    node.lineno, "PH002",
+                    "unseeded default_rng() in deterministic code; pass an "
+                    "explicit seed",
+                )
+        if attr == "register_layer_kind" and len(node.args) >= 2:
+            kind = node.args[1]
+            cls = None
+            if isinstance(kind, ast.Call) and isinstance(kind.func, ast.Name):
+                cls = kind.func.id
+            elif isinstance(kind, ast.Name):
+                cls = kind.id
+            if cls is not None:
+                self.registered.append((node.lineno, cls))
+        self.generic_visit(node)
+
+    # -- post-pass ------------------------------------------------------------
+    def check_registrations(self):
+        for line, cls in self.registered:
+            node = self.classes.get(cls)
+            if node is None:
+                continue  # class defined elsewhere: out of AST scope
+            have = set()
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    have.add(item.name)
+                elif isinstance(item, ast.Assign):
+                    have |= {
+                        t.id for t in item.targets if isinstance(t, ast.Name)
+                    }
+                elif isinstance(item, ast.AnnAssign) and isinstance(
+                    item.target, ast.Name
+                ):
+                    have.add(item.target.id)
+            missing = [m for m in PROTOCOL if m not in have]
+            if "name" not in have:
+                missing.append("name")
+            if missing:
+                self.add(
+                    line, "PH003",
+                    f"{cls} registered as a LayerKind but does not define "
+                    f"{missing} (full protocol: name + "
+                    f"{'/'.join(PROTOCOL)})",
+                )
+
+
+def lint_file(path: pathlib.Path, root: pathlib.Path) -> list[str]:
+    rel = path.as_posix()
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [f"{rel}:{e.lineno or 0}: [PH000] syntax error: {e.msg}"]
+    linter = _Linter(rel)
+    linter.visit(tree)
+    linter.check_registrations()
+    return [
+        f"{rel}:{line}: [{code}] {msg}"
+        for line, code, msg in sorted(linter.findings)
+    ]
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    p.add_argument("targets", nargs="+", help="files or directories to lint")
+    args = p.parse_args(argv)
+    files: list[pathlib.Path] = []
+    for t in args.targets:
+        path = pathlib.Path(t)
+        if path.is_dir():
+            files += sorted(path.rglob("*.py"))
+        else:
+            files.append(path)
+    findings = []
+    for f in files:
+        findings += lint_file(f, pathlib.Path("."))
+    for line in findings:
+        print(line)
+    if findings:
+        print(f"lint_phantom: {len(findings)} finding(s) in {len(files)} files")
+        return 1
+    print(f"lint_phantom: OK ({len(files)} files clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
