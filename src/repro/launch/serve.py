@@ -5,11 +5,22 @@
 
 ``--phantom`` enables the paper's technique: FFN/o-proj weights block-pruned
 to the configured density and executed through the masked block-sparse path.
+
+Fault-tolerant serving (DESIGN.md §14): ``--faults smoke`` (or an explicit
+``transient_rate=0.2,latency_rate=0.1,...`` spec) runs the same workload
+under a seeded :class:`repro.serve.FaultPlan` with a
+:class:`repro.serve.ServePolicy` (deadlines/retries/degradation knobs via
+``--deadline`` / ``--retries`` / ``--max-queue``).  A fault run is a *chaos
+smoke*: the driver exits nonzero unless every request completed and at
+least one retry actually fired (otherwise the run proved nothing), and
+``--metrics-out`` writes the full recorder snapshot as JSON for the CI
+artifact.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import sys
 import time
 
 import jax
@@ -18,7 +29,8 @@ import numpy as np
 from repro import configs
 from repro.core.phantom_linear import PhantomConfig
 from repro.models.registry import build
-from repro.serve import ServeEngine
+from repro.obs import Recorder
+from repro.serve import FaultPlan, ServeEngine, ServePolicy
 
 
 def phantomize(model, params, density: float, block=(8, 8)):
@@ -50,6 +62,20 @@ def main():
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--phantom", action="store_true")
     ap.add_argument("--density", type=float, default=0.5)
+    ap.add_argument("--faults", default="none",
+                    help="fault plan: none | smoke | key=value,... "
+                         "(FaultPlan fields, e.g. transient_rate=0.2)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for the fault schedule and the prompt stream")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline in seconds (requires a policy "
+                         "run, i.e. --faults or --max-queue)")
+    ap.add_argument("--retries", type=int, default=8,
+                    help="ServePolicy.max_retries for fault runs")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue (RejectedError beyond it)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the recorder metrics snapshot JSON here")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get_config(args.arch)
@@ -66,19 +92,62 @@ def main():
     if args.phantom:
         params = phantomize(model, params, args.density)
 
-    eng = ServeEngine(model, params, batch_size=args.batch_size, max_len=args.max_len)
-    rng = np.random.default_rng(0)
+    plan = FaultPlan.parse(args.faults, seed=args.seed)
+    policy = None
+    if plan is not None or args.max_queue is not None or args.deadline is not None:
+        policy = ServePolicy(
+            faults=plan,
+            max_retries=args.retries,
+            max_queue=args.max_queue,
+            deadline_s=args.deadline,
+        )
+    rec = Recorder()
+    eng = ServeEngine(
+        model, params, batch_size=args.batch_size, max_len=args.max_len,
+        recorder=rec, policy=policy,
+    )
+    rng = np.random.default_rng(args.seed)
+    reqs = []
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(4, 12)).tolist()
-        eng.submit(prompt, max_new_tokens=args.max_new)
+        reqs.append(eng.submit(prompt, max_new_tokens=args.max_new))
     t0 = time.time()
     done = eng.run()
     dt = time.time() - t0
     toks = sum(len(r.output) for r in done)
     print(f"served {len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s){' [phantom]' if args.phantom else ''}")
+          f"({toks/dt:.1f} tok/s){' [phantom]' if args.phantom else ''}"
+          f"{' [faults=' + args.faults + ']' if plan is not None else ''}")
     for r in done[:3]:
         print(f"  req {r.rid}: prompt[:4]={r.prompt[:4]} -> out[:8]={r.output[:8]}")
+
+    if args.metrics_out:
+        rec.to_json(args.metrics_out)
+        print(f"metrics written to {args.metrics_out}")
+
+    if plan is not None:
+        # Chaos-smoke contract: the run only proves fault tolerance if
+        # every request completed AND the schedule actually exercised the
+        # retry path.  Either miss is a hard failure for CI.
+        incomplete = [r.rid for r in reqs if not r.done]
+        retries = int(rec.counters.get("serve/retries", 0))
+        injected = int(sum(
+            v for k, v in rec.counters.items()
+            if k.startswith("serve/faults_injected")
+        ))
+        print(f"chaos: injected={injected} retries={retries} "
+              f"degradations={int(rec.counters.get('serve/degradations', 0))} "
+              f"deadline_missed={int(rec.counters.get('serve/deadline_missed', 0))} "
+              f"incomplete={len(incomplete)}")
+        if incomplete:
+            print(f"FAIL: incomplete request rids {incomplete}", file=sys.stderr)
+            sys.exit(1)
+        if retries == 0:
+            print("FAIL: fault run injected no retryable fault — raise the "
+                  "rates or the request count; this run proved nothing",
+                  file=sys.stderr)
+            sys.exit(1)
+        print("chaos smoke OK: zero incomplete requests, retry path exercised")
 
 
 if __name__ == "__main__":

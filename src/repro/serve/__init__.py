@@ -3,8 +3,36 @@
 Both engines take a compiled :class:`repro.program.PhantomProgram` directly
 (``CnnServeEngine(program=...)``, ``ServeEngine(..., program=...)``) so
 weight-load-time lowering happens once per fleet — see DESIGN.md §8.
+
+Failure semantics (DESIGN.md §14) are opt-in via ``policy=``: a
+:class:`ServePolicy` adds per-request deadlines, a bounded admission queue
+(:class:`RejectedError`), retry-with-backoff for transient faults
+(:class:`TransientKernelError` / :class:`CorruptActivationError`), and
+graceful degradation to the ``lookahead=0``/``cores=1`` fallback program.
+:class:`FaultPlan` (:mod:`repro.serve.faults`) is the seeded, deterministic
+fault-injection harness that proves all of it in tier-1.
 """
 from .cnn import CnnRequest, CnnServeEngine, serve_cnn
-from .engine import ServeEngine, Request
+from .engine import Request, ServeEngine
+from .faults import (
+    CorruptActivationError,
+    FaultInjector,
+    FaultPlan,
+    TransientKernelError,
+)
+from .policy import FaultExhaustedError, RejectedError, ServePolicy
 
-__all__ = ["ServeEngine", "Request", "CnnRequest", "CnnServeEngine", "serve_cnn"]
+__all__ = [
+    "ServeEngine",
+    "Request",
+    "CnnRequest",
+    "CnnServeEngine",
+    "serve_cnn",
+    "ServePolicy",
+    "FaultPlan",
+    "FaultInjector",
+    "RejectedError",
+    "TransientKernelError",
+    "CorruptActivationError",
+    "FaultExhaustedError",
+]

@@ -40,6 +40,9 @@ from repro import program as program_mod
 from repro.core.dataflow import ConvSpec
 from repro.core.phantom_linear import PhantomConfig
 
+from . import faults as faults_mod
+from . import policy as policy_mod
+
 __all__ = ["CnnRequest", "CnnServeEngine", "serve_cnn"]
 
 
@@ -50,6 +53,10 @@ class CnnRequest:
     logits: Optional[np.ndarray] = None
     done: bool = False
     t_submit: float = 0.0  # engine-clock timestamp (observability)
+    #: absolute engine-clock deadline (None = no deadline, DESIGN.md §14)
+    deadline: Optional[float] = None
+    #: failure reason when the request was retired without completing
+    error: Optional[str] = None
 
 
 class CnnServeEngine:
@@ -74,6 +81,7 @@ class CnnServeEngine:
         act_threshold: float | None = None,
         interpret: bool | None = None,
         recorder=None,
+        policy: "policy_mod.ServePolicy | None" = None,
     ):
         if program is None:
             if params is None or layers is None:
@@ -104,6 +112,21 @@ class CnnServeEngine:
         self.interpret = interpret
         self.recorder = recorder
         self._clock = recorder.clock if recorder is not None else time.perf_counter
+        self.policy = policy
+        #: the program batches actually execute on — swapped for the
+        #: lookahead=0/cores=1 fallback by graceful degradation (§14)
+        self._active = program
+        self._rt = (
+            policy_mod.PolicyRuntime(
+                policy,
+                clock=self._clock,
+                recorder=recorder,
+                prefix="serve_cnn",
+                degrade=self._degrade_program,
+            )
+            if policy is not None
+            else None
+        )
         if recorder is not None and program.recorder is None:
             # Share the sink: the program's per-layer spans join the
             # engine's serving metrics on one timeline (DESIGN.md §11).
@@ -120,13 +143,43 @@ class CnnServeEngine:
         self.padded_slots = 0
 
     # -- client API ----------------------------------------------------------
-    def submit(self, image: np.ndarray) -> CnnRequest:
+    def _now(self) -> float:
+        """Engine time: the injected clock, plus fault/backoff skew when a
+        policy is active (exactly one clock read either way)."""
+        return self._rt.now() if self._rt is not None else self._clock()
+
+    def _degrade_program(self):
+        """Graceful degradation: serve from the ``lookahead=0``/``cores=1``
+        fallback program (bit-identical outputs by the §9/§10 parity
+        contracts); ``self.program`` keeps naming the original."""
+        self._active = policy_mod.fallback_program(self.program)
+        self._active.recorder = self.program.recorder
+        self._active.at_batch(self.b)
+
+    def submit(self, image: np.ndarray, *, deadline_s: float | None = None) -> CnnRequest:
         image = np.asarray(image, dtype=np.float32)
         if image.shape != self.in_shape:
             if self.recorder is not None:
                 self.recorder.inc("serve_cnn/rejected_shape")
             raise ValueError(f"image {image.shape} != expected {self.in_shape}")
-        req = CnnRequest(next(self._rid), image, t_submit=self._clock())
+        if deadline_s is not None and not deadline_s > 0:
+            if self.recorder is not None:
+                self.recorder.inc("serve_cnn/rejected_invalid_request")
+            raise ValueError(
+                f"deadline_s must be positive, got {deadline_s} (a "
+                f"non-positive deadline is already missed at submit)"
+            )
+        if deadline_s is not None and self._rt is None:
+            raise ValueError(
+                "deadline_s requires failure semantics: construct the "
+                "engine with policy=ServePolicy(...) to enable deadline "
+                "enforcement (DESIGN.md §14)"
+            )
+        if self._rt is not None:
+            self._rt.admit(len(self.queue))
+        req = CnnRequest(next(self._rid), image, t_submit=self._now())
+        if self._rt is not None:
+            req.deadline = self._rt.resolve_deadline(deadline_s, req.t_submit)
         self.queue.append(req)
         if self.recorder is not None:
             self.recorder.inc("serve_cnn/submitted")
@@ -135,9 +188,16 @@ class CnnServeEngine:
 
     def step(self) -> list[CnnRequest]:
         """Run one full batch: up to ``batch_size`` queued requests, padded
-        with zero images that the slot mask keeps gated off layer to layer."""
+        with zero images that the slot mask keeps gated off layer to layer.
+
+        With a policy, queued requests whose deadline has passed are failed
+        (``done=False``, ``error`` set) and returned ahead of this batch —
+        retired, never silently dropped."""
+        expired: list[CnnRequest] = []
+        if self._rt is not None:
+            self._expire_overdue(expired)
         if not self.queue:
-            return []
+            return expired
         rec = self.recorder
         reqs = [self.queue.popleft() for _ in range(min(self.b, len(self.queue)))]
         x = np.zeros((self.b,) + self.in_shape, dtype=np.float32)
@@ -150,12 +210,25 @@ class CnnServeEngine:
             rec.observe("serve_cnn/slot_occupancy", len(reqs) / self.b)
             sp = rec.span("serve_cnn/batch", live=len(reqs))
             sp.__enter__()
-        logits = self.program(
-            jnp.asarray(x),
-            slot_mask=jnp.asarray(slot),
-            act_threshold=self.act_threshold,
-            interpret=self.interpret,
-        )
+
+        def run_batch():
+            # self._active re-read per attempt: a mid-retry degradation
+            # swaps in the fallback program for the very next attempt.
+            return self._active(
+                jnp.asarray(x),
+                slot_mask=jnp.asarray(slot),
+                act_threshold=self.act_threshold,
+                interpret=self.interpret,
+            )
+
+        if self._rt is None:
+            logits = run_batch()
+        else:
+            logits = self._rt.attempt(
+                run_batch,
+                corrupt=faults_mod.corrupt_array,
+                check=faults_mod.check_activations,
+            )
         logits = np.asarray(logits)  # sync point: the batch is done here
         if rec is not None:
             sp.__exit__(None, None, None)
@@ -163,12 +236,38 @@ class CnnServeEngine:
             req.logits = logits[s]
             req.done = True
             if rec is not None:
+                t_done = self._now()
                 rec.inc("serve_cnn/completed")
-                rec.observe("serve_cnn/request_latency_s", self._clock() - req.t_submit)
+                rec.observe("serve_cnn/request_latency_s", t_done - req.t_submit)
+                if req.deadline is not None:
+                    # Completed late: keep the result, account the miss.
+                    if t_done > req.deadline:
+                        self._rt.record_miss(t_done - req.deadline)
+                    else:
+                        self._rt.record_met()
         self.batches_run += 1
         self.images_served += len(reqs)
         self.padded_slots += self.b - len(reqs)
-        return reqs
+        return expired + reqs
+
+    def _expire_overdue(self, retired: list):
+        """Fail queued requests whose deadline has passed.  Candidate scan
+        first, clock read second — a no-op policy reads no extra clock, so
+        it stays bit-identical to ``policy=None`` under a fake clock."""
+        if not any(r.deadline is not None for r in self.queue):
+            return
+        now = self._rt.now()
+        if not any(r.deadline is not None and now > r.deadline for r in self.queue):
+            return
+        keep: deque[CnnRequest] = deque()
+        for req in self.queue:
+            if req.deadline is not None and now > req.deadline:
+                req.error = policy_mod.DEADLINE_REASON
+                retired.append(req)
+                self._rt.record_miss(now - req.deadline)
+            else:
+                keep.append(req)
+        self.queue = keep
 
     def run(self) -> list[CnnRequest]:
         """Drain the queue; returns all completed requests in submit order."""
@@ -176,6 +275,11 @@ class CnnServeEngine:
         while self.queue:
             finished.extend(self.step())
         return finished
+
+    @property
+    def degraded(self) -> bool:
+        """True once graceful degradation swapped in the fallback program."""
+        return self._rt is not None and self._rt.degraded
 
     def stats(self) -> dict:
         """The program's per-layer steps/density/valid_macs at this engine's

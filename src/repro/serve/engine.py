@@ -24,6 +24,15 @@ engine publishes serving metrics: per-request latency
 ``recorder.percentiles``), queue depth and slot occupancy per decode step,
 steps-per-request, and counters for submissions, completions, empty-prompt
 rejections and ``run()`` exhaustions.
+
+With ``policy=`` (a :class:`repro.serve.policy.ServePolicy`, DESIGN.md §14)
+the engine gains failure semantics: per-request deadlines (overdue requests
+are *failed* with ``req.error`` set, never silently dropped), a bounded
+admission queue (:class:`~repro.serve.policy.RejectedError` beyond it),
+retry-with-exponential-backoff for transient decode faults, and graceful
+degradation to the ``lookahead=0``/``cores=1`` fallback program.
+``policy=None`` (the default) preserves the pre-policy behaviour
+bit-for-bit, recorder snapshots included.
 """
 from __future__ import annotations
 
@@ -39,6 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults as faults_mod
+from . import policy as policy_mod
+
 __all__ = ["Request", "ServeEngine"]
 
 
@@ -51,6 +63,12 @@ class Request:
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
     t_submit: float = 0.0  # engine-clock timestamp (observability)
+    #: absolute engine-clock deadline (None = no deadline); set from
+    #: ``submit(deadline_s=...)`` or the policy default (DESIGN.md §14)
+    deadline: Optional[float] = None
+    #: failure reason when the request left the engine without completing
+    #: (e.g. ``"deadline exceeded"``); ``done`` stays False then
+    error: Optional[str] = None
 
 
 def _accepts_program(fn) -> bool:
@@ -77,12 +95,26 @@ class ServeEngine:
         max_len: int,
         program=None,
         recorder=None,
+        policy: "policy_mod.ServePolicy | None" = None,
     ):
         self.model, self.params = model, params
         self.b, self.max_len = batch_size, max_len
         self.program = program
         self.recorder = recorder
         self._clock = recorder.clock if recorder is not None else time.perf_counter
+        self.policy = policy
+        self._rt = (
+            policy_mod.PolicyRuntime(
+                policy,
+                clock=self._clock,
+                recorder=recorder,
+                prefix="serve",
+                degrade=self._degrade_step,
+            )
+            if policy is not None
+            else None
+        )
+        self._fallback_program = None
         if recorder is not None and program is not None and program.recorder is None:
             # One timeline: the program's per-layer spans land in the same
             # trace as the engine's serving metrics (DESIGN.md §11).
@@ -99,7 +131,19 @@ class ServeEngine:
         self._step = jax.jit(step_fn)
 
     # -- client API ----------------------------------------------------------
-    def submit(self, prompt: list[int], max_new_tokens: int = 16, eos_id=None) -> Request:
+    def _now(self) -> float:
+        """Engine time: the injected clock, plus fault/backoff skew when a
+        policy is active (exactly one clock read either way)."""
+        return self._rt.now() if self._rt is not None else self._clock()
+
+    def submit(
+        self,
+        prompt: list[int],
+        max_new_tokens: int = 16,
+        eos_id=None,
+        *,
+        deadline_s: Optional[float] = None,
+    ) -> Request:
         prompt = list(prompt)
         if not prompt:
             if self.recorder is not None:
@@ -109,9 +153,34 @@ class ServeEngine:
                 "conditioning token (the engine would otherwise crash at "
                 "generation time reading prompt[-1])"
             )
+        if max_new_tokens < 1:
+            if self.recorder is not None:
+                self.recorder.inc("serve/rejected_invalid_request")
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {max_new_tokens}: a "
+                f"request allowed to generate nothing would complete after "
+                f"one spurious token — clamp upstream or drop the request"
+            )
+        if deadline_s is not None and not deadline_s > 0:
+            if self.recorder is not None:
+                self.recorder.inc("serve/rejected_invalid_request")
+            raise ValueError(
+                f"deadline_s must be positive, got {deadline_s} (a "
+                f"non-positive deadline is already missed at submit)"
+            )
+        if deadline_s is not None and self._rt is None:
+            raise ValueError(
+                "deadline_s requires failure semantics: construct the "
+                "engine with policy=ServePolicy(...) to enable deadline "
+                "enforcement (DESIGN.md §14)"
+            )
+        if self._rt is not None:
+            self._rt.admit(len(self.queue))
         req = Request(
-            next(self._rid), prompt, max_new_tokens, eos_id, t_submit=self._clock()
+            next(self._rid), prompt, max_new_tokens, eos_id, t_submit=self._now()
         )
+        if self._rt is not None:
+            req.deadline = self._rt.resolve_deadline(deadline_s, req.t_submit)
         self.queue.append(req)
         if self.recorder is not None:
             self.recorder.inc("serve/submitted")
@@ -124,9 +193,15 @@ class ServeEngine:
         Raises :class:`RuntimeError` if ``max_steps`` decode steps pass
         without draining the work — silently dropping undone requests would
         hand the caller a short list indistinguishable from success.
+
+        With a policy, requests whose deadline expires are *failed*
+        (``done=False``, ``error`` set) and still returned — a caller can
+        always account for every accepted request.
         """
         finished = []
         for _ in range(max_steps):
+            if self._rt is not None:
+                self._expire_overdue(finished)
             self._fill_slots()
             if all(r is None for r in self.slot_req):
                 break
@@ -144,7 +219,55 @@ class ServeEngine:
                 )
         return finished
 
+    @property
+    def degraded(self) -> bool:
+        """True once graceful degradation swapped in the fallback path."""
+        return self._rt is not None and self._rt.degraded
+
     # -- internals -------------------------------------------------------------
+    def _expire_overdue(self, finished: list):
+        """Fail every queued/in-slot request whose deadline has passed.
+
+        Candidate scan first, clock read second: when no live request has a
+        deadline this reads no clock at all, so a no-op policy stays
+        bit-identical to ``policy=None`` under the recorder's fake clock.
+        """
+        live = [r for r in self.slot_req if r is not None] + list(self.queue)
+        if not any(r.deadline is not None for r in live):
+            return
+        now = self._rt.now()
+        for s, req in enumerate(self.slot_req):
+            if req is not None and req.deadline is not None and now > req.deadline:
+                self.slot_req[s] = None
+                self._fail_deadline(req, now, finished)
+        if any(r.deadline is not None and now > r.deadline for r in self.queue):
+            keep: deque[Request] = deque()
+            for req in self.queue:
+                if req.deadline is not None and now > req.deadline:
+                    self._fail_deadline(req, now, finished)
+                else:
+                    keep.append(req)
+            self.queue = keep
+
+    def _fail_deadline(self, req: Request, now: float, finished: list):
+        req.error = policy_mod.DEADLINE_REASON
+        finished.append(req)
+        self._rt.record_miss(now - req.deadline)
+
+    def _degrade_step(self):
+        """Graceful degradation: re-jit the decode step onto the
+        ``lookahead=0``/``cores=1`` fallback program (bit-identical outputs
+        by the §9/§10 parity contracts).  Models that never opted into the
+        program contract keep their step — for them degradation only
+        disarms the fault injector."""
+        if self.program is None or not _accepts_program(self.model.decode_step):
+            return
+        self._fallback_program = policy_mod.fallback_program(self.program)
+        self._fallback_program.recorder = self.recorder
+        self._step = jax.jit(
+            functools.partial(self.model.decode_step, program=self._fallback_program)
+        )
+
     def _fill_slots(self):
         filled = []
         for s in range(self.b):
@@ -180,9 +303,21 @@ class ServeEngine:
                 tokens[s, 0] = req.output[-1]
             else:
                 tokens[s, 0] = req.prompt[-1]
-        logits, self.cache = self._step(
+        step_args = (
             self.params, self.cache, jnp.asarray(tokens), jnp.asarray(self.index)
         )
+        if self._rt is None:
+            logits, self.cache = self._step(*step_args)
+        else:
+            # The input cache is captured above: a retried attempt replays
+            # the identical computation (decode is functional), so outputs
+            # of completed requests are bit-identical to a fault-free run.
+            logits, new_cache = self._rt.attempt(
+                lambda: self._step(*step_args),
+                corrupt=lambda out: (faults_mod.corrupt_array(out[0]), out[1]),
+                check=lambda out: faults_mod.check_activations(out[0]),
+            )
+            self.cache = new_cache
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         for s, req in enumerate(self.slot_req):
             if req is None:
@@ -201,8 +336,13 @@ class ServeEngine:
                 finished.append(req)
                 self.slot_req[s] = None
                 if rec is not None:
+                    t_done = self._now()
                     rec.inc("serve/completed")
-                    rec.observe(
-                        "serve/request_latency_s", self._clock() - req.t_submit
-                    )
+                    rec.observe("serve/request_latency_s", t_done - req.t_submit)
                     rec.observe("serve/steps_per_request", int(self.index[s]))
+                    if req.deadline is not None:
+                        # Completed late: keep the result, account the miss.
+                        if t_done > req.deadline:
+                            self._rt.record_miss(t_done - req.deadline)
+                        else:
+                            self._rt.record_met()

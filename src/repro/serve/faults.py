@@ -1,0 +1,247 @@
+"""Deterministic fault injection for the serving layer (DESIGN.md §14).
+
+A :class:`FaultPlan` is a *pure function* from ``(seed, attempt index)`` to
+the faults injected at that decode attempt: step-latency spikes, transient
+kernel failures (:class:`TransientKernelError`), and corrupt-activation
+faults that the runtime activation check (:func:`check_activations`, a
+:mod:`repro.verify` hook) turns into :class:`CorruptActivationError`.  Every
+draw comes from ``np.random.default_rng([_STREAM, seed, attempt])`` — no
+global RNG, no wall clock — so a schedule is byte-identical across
+processes (:meth:`FaultPlan.schedule_bytes`) and every failure path the
+serve policy exercises is replayable bit-for-bit in tier-1 tests.
+
+Latency spikes never touch ``time.sleep``: the engines keep a *skew* clock
+(``PolicyRuntime.now() = clock() + skew``), and an injected spike simply
+advances the skew.  Deadlines, backoff, and latency metrics all read the
+skew clock, so fault timing composes with the injectable ``obs.Recorder``
+clock and tier-1 asserts exact durations.
+
+:class:`FaultInjector` is the stateful cursor an engine owns: one draw per
+decode *attempt* (so a retried step sees the next schedule entry, not the
+same one), a ``max_faults`` budget, and a ``disarm()`` switch the
+degradation path flips so a degraded engine is guaranteed to make progress.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "CorruptActivationError",
+    "FaultInjector",
+    "FaultPlan",
+    "StepFaults",
+    "TransientKernelError",
+    "check_activations",
+    "corrupt_array",
+]
+
+#: Domain separator for fault draws — keeps the fault schedule independent
+#: of every other seeded rng in the repo even at equal seeds.
+_STREAM = 0xFA017
+
+
+class TransientKernelError(RuntimeError):
+    """An injected (or detected) transient kernel failure.
+
+    Retryable by construction: it is raised *before* any engine state is
+    mutated (the decode step's functional outputs are discarded), so a
+    retry replays the identical computation.
+    """
+
+    def __init__(self, msg: str, *, attempt: int | None = None, kind: str = "transient"):
+        self.attempt = attempt
+        self.kind = kind
+        super().__init__(msg)
+
+
+class CorruptActivationError(TransientKernelError):
+    """Corrupt activations detected after a decode step.
+
+    Carries the structured :class:`repro.verify.Finding` list the runtime
+    activation check produced — the same diagnostic currency as the static
+    program verifier (DESIGN.md §13).  Subclasses
+    :class:`TransientKernelError` because the recovery is the same: discard
+    the step's outputs and retry.
+    """
+
+    def __init__(self, findings, *, attempt: int | None = None):
+        self.findings = list(findings)
+        detail = "; ".join(f.format() for f in self.findings) or "corrupt activations"
+        super().__init__(
+            f"corrupt activations detected by runtime verifier: {detail}",
+            attempt=attempt,
+            kind="corrupt",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class StepFaults:
+    """The faults drawn for one decode attempt."""
+
+    attempt: int
+    latency_s: float = 0.0
+    transient: bool = False
+    corrupt: bool = False
+
+    @property
+    def erroneous(self) -> bool:
+        return self.transient or self.corrupt
+
+    @property
+    def any(self) -> bool:
+        return self.erroneous or self.latency_s > 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A seeded, deterministic fault schedule.
+
+    Rates are per decode *attempt* (a retried step draws fresh faults).
+    ``max_faults`` bounds the total injected transient+corrupt faults — a
+    finite budget makes "every accepted request eventually completes"
+    unconditional even without degradation.
+    """
+
+    seed: int = 0
+    transient_rate: float = 0.0
+    corrupt_rate: float = 0.0
+    latency_rate: float = 0.0
+    latency_s: float = 0.005
+    max_faults: int | None = None
+
+    def __post_init__(self):
+        for name in ("transient_rate", "corrupt_rate", "latency_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultPlan.{name} must be in [0, 1], got {v}")
+        if self.latency_s < 0.0:
+            raise ValueError(f"FaultPlan.latency_s must be >= 0, got {self.latency_s}")
+        if self.max_faults is not None and self.max_faults < 0:
+            raise ValueError(f"FaultPlan.max_faults must be >= 0, got {self.max_faults}")
+
+    # -- the schedule --------------------------------------------------------
+    def at(self, attempt: int) -> StepFaults:
+        """The faults for decode attempt ``attempt`` — pure and
+        order-independent: each attempt gets its own seeded generator, so
+        the schedule does not depend on how many draws happened before."""
+        u = np.random.default_rng([_STREAM, self.seed, attempt]).random(3)
+        return StepFaults(
+            attempt,
+            latency_s=self.latency_s if u[0] < self.latency_rate else 0.0,
+            transient=bool(u[1] < self.transient_rate),
+            corrupt=bool(u[2] < self.corrupt_rate),
+        )
+
+    def schedule(self, n: int) -> list[StepFaults]:
+        return [self.at(i) for i in range(n)]
+
+    def schedule_bytes(self, n: int) -> bytes:
+        """A canonical byte encoding of the first ``n`` schedule entries —
+        the determinism-audit contract (same seed ⇒ identical bytes)."""
+        rows = np.zeros((n, 3), dtype=np.float64)
+        for i, f in enumerate(self.schedule(n)):
+            rows[i] = (f.latency_s, float(f.transient), float(f.corrupt))
+        return rows.tobytes()
+
+    # -- presets / CLI -------------------------------------------------------
+    @classmethod
+    def smoke(cls, seed: int = 0) -> "FaultPlan":
+        """The CI chaos-smoke preset: enough transient faults and latency
+        spikes to exercise every retry path on a short run, small enough
+        that default retry budgets absorb them."""
+        return cls(
+            seed=seed,
+            transient_rate=0.25,
+            latency_rate=0.25,
+            latency_s=0.002,
+        )
+
+    @classmethod
+    def parse(cls, spec: str, *, seed: int = 0) -> "FaultPlan | None":
+        """Build a plan from a CLI spec: ``none``, ``smoke``, or a
+        comma-separated ``key=value`` list over the dataclass fields, e.g.
+        ``transient_rate=0.2,latency_rate=0.1,latency_s=0.01``."""
+        spec = spec.strip()
+        if spec in ("", "none", "off"):
+            return None
+        if spec == "smoke":
+            return cls.smoke(seed)
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        kw: dict = {"seed": seed}
+        for part in spec.split(","):
+            if "=" not in part:
+                raise ValueError(
+                    f"bad --faults entry {part!r}: expected key=value "
+                    f"(keys: {sorted(fields)}), 'smoke', or 'none'"
+                )
+            k, v = (s.strip() for s in part.split("=", 1))
+            if k not in fields:
+                raise ValueError(
+                    f"unknown --faults key {k!r}; known: {sorted(fields)}"
+                )
+            kw[k] = None if v == "none" else (int(v) if k in ("seed", "max_faults") else float(v))
+        return cls(**kw)
+
+
+class FaultInjector:
+    """Stateful cursor over a :class:`FaultPlan`: one draw per attempt.
+
+    ``disarm()`` (flipped by the degradation path) stops transient/corrupt
+    injection while leaving latency spikes alone — the failure was
+    attributed to the aggressive config, so the degraded fallback must be
+    able to make progress.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.attempts = 0
+        self.injected = 0  # erroneous faults actually injected
+        self.armed = True
+
+    def next(self) -> StepFaults:
+        f = self.plan.at(self.attempts)
+        self.attempts += 1
+        budget = self.plan.max_faults
+        out_of_budget = budget is not None and self.injected >= budget
+        if f.erroneous and (not self.armed or out_of_budget):
+            f = dataclasses.replace(f, transient=False, corrupt=False)
+        if f.erroneous:
+            self.injected += 1
+        return f
+
+    def disarm(self) -> None:
+        self.armed = False
+
+
+def corrupt_array(x):
+    """The injected corruption: every element NaN (dtype-preserving) — the
+    loudest possible activation corruption, guaranteed to trip
+    :func:`check_activations` on any nonempty array."""
+    import jax.numpy as jnp
+
+    return jnp.full_like(x, jnp.nan)
+
+
+def check_activations(x, *, layer: str = "logits"):
+    """Runtime verifier hook: non-finite activations as structured findings.
+
+    Returns a list of :class:`repro.verify.Finding` (empty = clean), rule
+    ``runtime/activation-finite`` — the dynamic sibling of the static
+    artifact rules in DESIGN.md §13.  The serve policy raises the findings
+    as :class:`CorruptActivationError` and retries the step.
+    """
+    from repro import verify as _verify
+
+    arr = np.asarray(x)
+    bad = int(arr.size - np.isfinite(arr).sum())
+    if not bad:
+        return []
+    return [
+        _verify.Finding(
+            "runtime/activation-finite",
+            f"{bad}/{arr.size} non-finite activation value(s) in decode output",
+            layer=layer,
+        )
+    ]

@@ -1,0 +1,297 @@
+"""Failure semantics for the serve engines (DESIGN.md §14).
+
+:class:`ServePolicy` is the one knob surface: per-request deadlines, a
+bounded admission queue with structured rejection (:class:`RejectedError` —
+never a silent drop), retry-with-exponential-backoff for transient faults,
+and graceful degradation to the ``lookahead=0`` / ``cores=1`` fallback
+program after repeated failures.  ``policy=None`` (the default on both
+engines) preserves pre-policy behaviour bit-for-bit — no extra clock reads,
+no extra metrics, identical outputs (guarded by a parity test).
+
+:class:`PolicyRuntime` is the per-engine mutable half: the skew clock
+(injected fault latency and retry backoff advance ``skew`` instead of
+sleeping, so failure timing is deterministic under the recorder's fake
+clock), the fault injector cursor, and the retry/degradation state machine
+around one decode attempt (:meth:`PolicyRuntime.attempt`):
+
+    attempt fails (transient or corrupt)
+      ├─ failures ≥ degrade_after and not yet degraded → degrade, retry
+      ├─ failures ≤ max_retries → backoff (skew += b·f^(n-1)), retry
+      ├─ not yet degraded and degradation enabled → degrade, retry
+      └─ else → FaultExhaustedError (engine state untouched; run() again)
+
+Degradation disarms the injector's erroneous faults (the failure is
+attributed to the aggressive config), so a degraded engine always makes
+progress — with degradation enabled, *every* accepted request completes
+under any all-transient :class:`~repro.serve.faults.FaultPlan`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from .faults import (
+    CorruptActivationError,
+    FaultInjector,
+    FaultPlan,
+    TransientKernelError,
+    check_activations,
+)
+
+__all__ = [
+    "FaultExhaustedError",
+    "PolicyRuntime",
+    "RejectedError",
+    "ServePolicy",
+    "fallback_program",
+]
+
+#: `Request.error` reason for a deadline failure (stable string for tests).
+DEADLINE_REASON = "deadline exceeded"
+
+
+class RejectedError(RuntimeError):
+    """Structured admission rejection: the bounded queue is full.
+
+    Carries ``reason`` / ``queue_depth`` / ``max_queue`` so callers can
+    implement client-side backpressure instead of parsing a message.
+    """
+
+    def __init__(self, reason: str, *, queue_depth: int, max_queue: int):
+        self.reason = reason
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+        super().__init__(
+            f"request rejected ({reason}): admission queue at "
+            f"{queue_depth}/{max_queue}; drain with run()/step() or raise "
+            f"ServePolicy.max_queue"
+        )
+
+
+class FaultExhaustedError(RuntimeError):
+    """A decode step kept failing after every retry (and, if enabled, after
+    degradation).  Engine state is untouched — the caller may run() again."""
+
+    def __init__(self, failures: int, last: TransientKernelError):
+        self.failures = failures
+        self.last = last
+        super().__init__(
+            f"decode step failed {failures} time(s) and the retry budget is "
+            f"exhausted (last: {last}); raise ServePolicy.max_retries or "
+            f"enable degradation (degrade_after)"
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePolicy:
+    """Failure-semantics knobs for :class:`~repro.serve.ServeEngine` /
+    :class:`~repro.serve.CnnServeEngine`.
+
+    * ``max_queue`` — admission bound on *waiting* requests (in-slot work
+      does not count); ``submit`` raises :class:`RejectedError` beyond it.
+    * ``deadline_s`` — default per-request deadline (engine-clock seconds
+      from submit); overridable per request at ``submit(deadline_s=...)``.
+      A request whose deadline passes while waiting is failed
+      (``req.error``), never silently dropped.
+    * ``max_retries`` / ``backoff_s`` / ``backoff_factor`` — transient-fault
+      retry budget per decode step; the n-th retry waits
+      ``backoff_s · backoff_factor**(n-1)`` skew-clock seconds.
+    * ``degrade_after`` — consecutive failures of one step before the
+      engine swaps in the ``lookahead=0``/``cores=1`` fallback program
+      (bit-identical outputs by the §9/§10 parity contracts); ``None``
+      disables degradation.
+    * ``faults`` — an injected :class:`~repro.serve.faults.FaultPlan`
+      (tests / chaos runs); ``None`` serves fault-free.
+    """
+
+    max_queue: Optional[int] = None
+    deadline_s: Optional[float] = None
+    max_retries: int = 3
+    backoff_s: float = 0.001
+    backoff_factor: float = 2.0
+    degrade_after: Optional[int] = 2
+    faults: Optional[FaultPlan] = None
+
+    def __post_init__(self):
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {self.deadline_s} "
+                f"(a non-positive deadline is already missed at submit)"
+            )
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_s < 0:
+            raise ValueError(f"backoff_s must be >= 0, got {self.backoff_s}")
+        if self.backoff_factor < 1.0:
+            raise ValueError(
+                f"backoff_factor must be >= 1, got {self.backoff_factor}"
+            )
+        if self.degrade_after is not None and self.degrade_after < 1:
+            raise ValueError(f"degrade_after must be >= 1, got {self.degrade_after}")
+
+
+def fallback_program(program):
+    """The graceful-degradation target for ``program``: same layers and
+    params, ``lookahead=0`` / ``cores=1`` — the classic single-queue path
+    every multi-core / compacted plan is asserted bit-identical to
+    (DESIGN.md §9/§10), so degrading never changes served outputs."""
+    from repro import program as program_mod
+
+    cfg = program.cfg.with_overrides(lookahead=0, cores=1)
+    overrides = {}
+    for name, diff in program.overrides.items():
+        kept = {k: v for k, v in diff.items() if k not in ("lookahead", "cores")}
+        if kept:
+            overrides[name] = kept
+    return program_mod.PhantomProgram(
+        program.layers, program.params, cfg, overrides=overrides
+    )
+
+
+class PolicyRuntime:
+    """Per-engine policy state: skew clock, injector, retry state machine.
+
+    ``prefix`` namespaces the metrics (``serve`` / ``serve_cnn``);
+    ``degrade`` is the engine hook that swaps in the fallback execution
+    path (called at most once).
+    """
+
+    def __init__(
+        self,
+        policy: ServePolicy,
+        *,
+        clock: Callable[[], float],
+        recorder=None,
+        prefix: str = "serve",
+        degrade: Optional[Callable[[], None]] = None,
+    ):
+        self.policy = policy
+        self._clock = clock
+        self.recorder = recorder
+        self.prefix = prefix
+        self._degrade_cb = degrade
+        self.skew = 0.0
+        self.degraded = False
+        self.injector = FaultInjector(policy.faults) if policy.faults is not None else None
+
+    # -- clock ---------------------------------------------------------------
+    def now(self) -> float:
+        """Engine time: the injected clock plus accumulated fault/backoff
+        skew.  Exactly one underlying clock read — policy=None parity."""
+        return self._clock() + self.skew
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, queue_depth: int) -> None:
+        """Raise :class:`RejectedError` when the waiting queue is full."""
+        mq = self.policy.max_queue
+        if mq is not None and queue_depth >= mq:
+            if self.recorder is not None:
+                self.recorder.inc(f"{self.prefix}/rejected_queue_full")
+            raise RejectedError("queue_full", queue_depth=queue_depth, max_queue=mq)
+
+    def resolve_deadline(self, deadline_s: Optional[float], t_submit: float):
+        """Absolute engine-clock deadline for a request submitted at
+        ``t_submit`` (explicit per-request value wins over the policy
+        default); validates positivity."""
+        if deadline_s is None:
+            deadline_s = self.policy.deadline_s
+        if deadline_s is None:
+            return None
+        if not deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {deadline_s} (a "
+                f"non-positive deadline is already missed at submit)"
+            )
+        return t_submit + deadline_s
+
+    # -- deadline accounting -------------------------------------------------
+    def record_miss(self, overrun: float) -> None:
+        if self.recorder is not None:
+            self.recorder.inc(f"{self.prefix}/deadline_missed")
+            self._observe_overrun(overrun)
+
+    def record_met(self) -> None:
+        if self.recorder is not None:
+            self._observe_overrun(0.0)
+
+    def _observe_overrun(self, overrun: float) -> None:
+        rec = self.recorder
+        rec.observe(f"{self.prefix}/deadline_overrun_s", overrun)
+        p = rec.percentiles(f"{self.prefix}/deadline_overrun_s", qs=(99,))
+        rec.gauge(f"{self.prefix}/deadline_overrun_p99", p["p99"])
+
+    # -- the retry/degradation state machine ---------------------------------
+    def attempt(self, fn, *, corrupt=None, check=None):
+        """Run one decode step ``fn`` under the policy.
+
+        ``corrupt`` applies an injected corruption to the step's output
+        (engine-specific — e.g. only the logits half of a (logits, cache)
+        pair); ``check`` maps the output to verifier findings
+        (:func:`~repro.serve.faults.check_activations` shaped).  Both are
+        only consulted while an injector is active.
+
+        Returns the (clean) output of the successful attempt; raises
+        :class:`FaultExhaustedError` when the budget runs out.
+        """
+        pol, rec, inj = self.policy, self.recorder, self.injector
+        failures = 0
+        while True:
+            fault = inj.next() if inj is not None else None
+            if fault is not None and fault.latency_s > 0.0:
+                self.skew += fault.latency_s
+                if rec is not None:
+                    rec.inc(f"{self.prefix}/faults_injected", kind="latency")
+                    rec.observe(f"{self.prefix}/fault_latency_s", fault.latency_s)
+            try:
+                if fault is not None and fault.transient:
+                    if rec is not None:
+                        rec.inc(f"{self.prefix}/faults_injected", kind="transient")
+                    raise TransientKernelError(
+                        f"injected transient kernel fault (attempt {fault.attempt})",
+                        attempt=fault.attempt,
+                    )
+                out = fn()
+                if fault is not None and fault.corrupt and corrupt is not None:
+                    if rec is not None:
+                        rec.inc(f"{self.prefix}/faults_injected", kind="corrupt")
+                    out = corrupt(out)
+                if inj is not None and check is not None:
+                    findings = check(out)
+                    if findings:
+                        raise CorruptActivationError(
+                            findings,
+                            attempt=fault.attempt if fault is not None else None,
+                        )
+                return out
+            except TransientKernelError as e:
+                failures += 1
+                if rec is not None:
+                    rec.inc(f"{self.prefix}/step_failures", kind=e.kind)
+                da = pol.degrade_after
+                if da is not None and not self.degraded and failures >= da:
+                    self._degrade()
+                    continue
+                if failures <= pol.max_retries:
+                    delay = pol.backoff_s * pol.backoff_factor ** (failures - 1)
+                    self.skew += delay
+                    if rec is not None:
+                        rec.inc(f"{self.prefix}/retries")
+                        rec.observe(f"{self.prefix}/retry_backoff_s", delay)
+                    continue
+                if da is not None and not self.degraded:
+                    # Last resort before giving up: the retry budget is
+                    # gone but degradation has not been tried yet.
+                    self._degrade()
+                    continue
+                raise FaultExhaustedError(failures, e) from e
+
+    def _degrade(self) -> None:
+        self.degraded = True
+        if self.injector is not None:
+            self.injector.disarm()
+        if self._degrade_cb is not None:
+            self._degrade_cb()
+        if self.recorder is not None:
+            self.recorder.inc(f"{self.prefix}/degradations")

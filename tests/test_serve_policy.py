@@ -1,0 +1,269 @@
+"""Admission control and request validation (DESIGN.md §14).
+
+Properties under test:
+
+* the waiting queue never exceeds ``ServePolicy.max_queue`` — over-limit
+  submits raise a structured :class:`RejectedError` (reason / queue_depth /
+  max_queue attributes), never a silent drop;
+* rejection allocates no rid — accepted requests keep a gap-free FIFO
+  sequence, and completion order is submit order;
+* draining the queue restores admission;
+* invalid requests (``max_new_tokens < 1``, non-positive deadlines) are
+  refused at submit with ``ValueError`` plus a
+  ``rejected_invalid_request`` counter.
+
+A deterministic seeded interleaving of submit/drain operations runs in
+tier-1; the hypothesis stateful machine rides the slow tier (repo
+convention — hypothesis is an optional dev extra).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import toy_cnn
+
+import phantom
+from repro.obs import Recorder
+from repro.serve import (
+    CnnServeEngine,
+    FaultPlan,
+    RejectedError,
+    ServeEngine,
+    ServePolicy,
+)
+
+VOCAB = 16
+
+
+class _CountModel:
+    def init_cache(self, batch, max_len):
+        return {"k": jnp.zeros((1, batch, max_len, 2), jnp.float32)}
+
+    def decode_step(self, params, cache, tokens, index):
+        logits = jax.nn.one_hot((tokens + 1) % VOCAB, VOCAB)
+        b = cache["k"].shape[1]
+        k = cache["k"].at[0, jnp.arange(b), index, 0].set(
+            1.0 + tokens[:, 0].astype(jnp.float32)
+        )
+        return logits, {"k": k}
+
+
+def _engine(policy, *, batch_size=2, recorder=None):
+    return ServeEngine(
+        _CountModel(), {}, batch_size=batch_size, max_len=64,
+        policy=policy, recorder=recorder,
+    )
+
+
+# -- bounded admission --------------------------------------------------------
+
+
+def test_queue_bound_rejects_with_structured_error():
+    rec = Recorder()
+    eng = _engine(ServePolicy(max_queue=2), recorder=rec)
+    a = eng.submit([1], max_new_tokens=2)
+    b = eng.submit([2], max_new_tokens=2)
+    with pytest.raises(RejectedError) as ei:
+        eng.submit([3], max_new_tokens=2)
+    err = ei.value
+    assert err.reason == "queue_full"
+    assert err.queue_depth == 2 and err.max_queue == 2
+    assert "2/2" in str(err)
+    assert rec.counters["serve/rejected_queue_full"] == 1.0
+    # no silent drop anywhere: both accepted requests are fully served
+    done = eng.run()
+    assert done == [a, b] and all(r.done for r in done)
+    # drained ⇒ admission restored, and the rejected submit burned no rid
+    c = eng.submit([4], max_new_tokens=2)
+    assert c.rid == b.rid + 1
+    assert eng.run() == [c]
+
+
+def test_fifo_completion_order_preserved():
+    eng = _engine(ServePolicy(max_queue=8), batch_size=2)
+    reqs = [eng.submit([i + 1], max_new_tokens=3) for i in range(6)]
+    done = eng.run()
+    assert [r.rid for r in done] == [r.rid for r in reqs]  # submit order
+    assert [r.rid for r in reqs] == list(range(6))  # gap-free rid sequence
+
+
+def test_deterministic_interleaving_never_exceeds_bound():
+    """Seeded submit/drain interleaving: the waiting queue never exceeds the
+    bound, every outcome is accept-or-RejectedError, and every accepted
+    request eventually completes exactly once."""
+    for seed in range(4):
+        for max_queue in (1, 2, 5):
+            op_rng = np.random.default_rng([0xAD71, seed, max_queue])
+            eng = _engine(ServePolicy(max_queue=max_queue), batch_size=2)
+            accepted, completed, rejected = [], [], 0
+            for _ in range(60):
+                if op_rng.random() < 0.7:
+                    try:
+                        accepted.append(eng.submit([1], max_new_tokens=2))
+                    except RejectedError:
+                        rejected += 1
+                        assert len(eng.queue) == max_queue
+                else:
+                    completed += eng.run()
+                assert len(eng.queue) <= max_queue  # the invariant
+            completed += eng.run()
+            assert rejected > 0  # the schedule actually hit the bound
+            assert [r.rid for r in completed] == [r.rid for r in accepted]
+            assert all(r.done for r in accepted)
+
+
+def test_cnn_queue_bound_and_drain(rng):
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(
+        layers, params,
+        phantom.PhantomConfig(enabled=True, block=(16, 16, 16)), batch=2,
+    )
+    rec = Recorder()
+    eng = CnnServeEngine(
+        program=prog, batch_size=2, interpret=True, recorder=rec,
+        policy=ServePolicy(max_queue=3),
+    )
+    imgs = rng.standard_normal((4, 8, 8, 3)).astype(np.float32)
+    reqs = [eng.submit(im) for im in imgs[:3]]
+    with pytest.raises(RejectedError) as ei:
+        eng.submit(imgs[3])
+    assert ei.value.queue_depth == 3 and ei.value.max_queue == 3
+    assert rec.counters["serve_cnn/rejected_queue_full"] == 1.0
+    done = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2] and all(r.done for r in reqs)
+    late = eng.submit(imgs[3])  # drained ⇒ accepted again, rid continues
+    assert late.rid == 3
+    eng.run()
+    assert late.done
+
+
+# -- request validation (regression: non-positive limits were accepted) ------
+
+
+@pytest.mark.parametrize("bad", [0, -3])
+def test_submit_rejects_nonpositive_max_new_tokens(bad):
+    rec = Recorder()
+    eng = _engine(None, recorder=rec)
+    with pytest.raises(ValueError, match="max_new_tokens must be >= 1"):
+        eng.submit([1], max_new_tokens=bad)
+    assert rec.counters["serve/rejected_invalid_request"] == 1.0
+    assert not eng.queue  # nothing half-admitted
+
+
+@pytest.mark.parametrize("bad", [0.0, -1.0])
+def test_submit_rejects_nonpositive_deadline(bad):
+    rec = Recorder()
+    eng = _engine(ServePolicy(), recorder=rec)
+    with pytest.raises(ValueError, match="deadline_s must be positive"):
+        eng.submit([1], max_new_tokens=2, deadline_s=bad)
+    assert rec.counters["serve/rejected_invalid_request"] == 1.0
+    assert not eng.queue
+
+
+def test_submit_deadline_requires_policy():
+    eng = _engine(None)
+    with pytest.raises(ValueError, match="requires failure semantics"):
+        eng.submit([1], max_new_tokens=2, deadline_s=1.0)
+
+
+@pytest.mark.parametrize("bad", [0.0, -2.0])
+def test_cnn_submit_rejects_nonpositive_deadline(rng, bad):
+    layers, params = toy_cnn(rng)
+    prog = phantom.compile(
+        layers, params,
+        phantom.PhantomConfig(enabled=True, block=(16, 16, 16)), batch=2,
+    )
+    rec = Recorder()
+    eng = CnnServeEngine(
+        program=prog, batch_size=2, interpret=True, recorder=rec,
+        policy=ServePolicy(),
+    )
+    img = rng.standard_normal((8, 8, 3)).astype(np.float32)
+    with pytest.raises(ValueError, match="deadline_s must be positive"):
+        eng.submit(img, deadline_s=bad)
+    assert rec.counters["serve_cnn/rejected_invalid_request"] == 1.0
+    with pytest.raises(ValueError, match="requires failure semantics"):
+        CnnServeEngine(program=prog, batch_size=2, interpret=True).submit(
+            img, deadline_s=1.0
+        )
+
+
+def test_policy_field_validation():
+    with pytest.raises(ValueError, match="max_queue"):
+        ServePolicy(max_queue=0)
+    with pytest.raises(ValueError, match="deadline_s"):
+        ServePolicy(deadline_s=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        ServePolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff_s"):
+        ServePolicy(backoff_s=-0.1)
+    with pytest.raises(ValueError, match="backoff_factor"):
+        ServePolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError, match="degrade_after"):
+        ServePolicy(degrade_after=0)
+    # valid edge values construct fine
+    ServePolicy(max_queue=1, max_retries=0, backoff_s=0.0,
+                backoff_factor=1.0, degrade_after=1,
+                faults=FaultPlan(seed=1))
+
+
+# -- hypothesis stateful machine (slow tier) ---------------------------------
+
+try:
+    from hypothesis import settings, strategies as st
+    from hypothesis.stateful import (
+        RuleBasedStateMachine,
+        initialize,
+        invariant,
+        rule,
+    )
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # tier-1 containers without the dev extra
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    class AdmissionMachine(RuleBasedStateMachine):
+        """Random submit/drain programs: the queue invariant, structured
+        rejection, and exactly-once FIFO completion must hold at every
+        step."""
+
+        @initialize(max_queue=st.integers(1, 6), slots=st.integers(1, 3))
+        def setup(self, max_queue, slots):
+            self.max_queue = max_queue
+            self.eng = _engine(
+                ServePolicy(max_queue=max_queue), batch_size=slots
+            )
+            self.accepted = []
+            self.completed = []
+
+        @rule(tok=st.integers(1, VOCAB - 1))
+        def submit(self, tok):
+            try:
+                self.accepted.append(self.eng.submit([tok], max_new_tokens=2))
+            except RejectedError as e:
+                assert e.reason == "queue_full"
+                assert e.queue_depth == self.max_queue == e.max_queue
+
+        @rule()
+        def drain(self):
+            self.completed += self.eng.run()
+
+        @invariant()
+        def queue_bounded(self):
+            if hasattr(self, "eng"):
+                assert len(self.eng.queue) <= self.max_queue
+
+        def teardown(self):
+            if hasattr(self, "eng"):
+                self.completed += self.eng.run()
+                assert [r.rid for r in self.completed] == [
+                    r.rid for r in self.accepted
+                ]
+                assert all(r.done for r in self.accepted)
+
+    @pytest.mark.slow
+    class TestAdmissionMachine(AdmissionMachine.TestCase):
+        settings = settings(max_examples=25, stateful_step_count=30,
+                            deadline=None)

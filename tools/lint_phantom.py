@@ -12,11 +12,13 @@ finding — the CI tier-1 step fails the build):
   pseudo-benchmarks.  Allowlisted: ``repro/obs/``, ``repro/checkpoint/``
   (manifest timestamps), ``repro/launch/``.
 
-* **PH002** — no nondeterminism in cost models or the verifier
-  (``repro/tune/``, ``repro/verify/``): wall-clock-dependent values
+* **PH002** — no nondeterminism in cost models, the verifier, or the
+  fault-injection harness (``repro/tune/``, ``repro/verify/``,
+  ``repro/serve/faults.py``): wall-clock-dependent values
   (``datetime.now`` etc.), the global ``random`` module, or an *unseeded*
-  ``numpy`` ``default_rng()``.  Tuning decisions and verification verdicts
-  must be replayable bit-for-bit; seeded generators are fine.
+  ``numpy`` ``default_rng()``.  Tuning decisions, verification verdicts and
+  fault schedules must be replayable bit-for-bit; seeded generators are
+  fine.
 
 * **PH003** — a class registered via ``register_layer_kind`` in the same
   module must implement the full ``LayerKind`` protocol (``prepare`` /
@@ -41,7 +43,7 @@ TIMING_FUNCS = {
              "monotonic", "monotonic_ns", "process_time"},
     "timeit": {"default_timer"},
 }
-DETERMINISTIC_DIRS = ("repro/tune/", "repro/verify/")
+DETERMINISTIC_DIRS = ("repro/tune/", "repro/verify/", "repro/serve/faults.py")
 PROTOCOL = ("prepare", "apply", "mask_out", "stats")
 
 
